@@ -1,0 +1,76 @@
+"""§Perf hillclimb driver: measure one (arch × shape) cell under a named
+sequence of changes and print the roofline deltas.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb --cell qwen:train --step v2
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import dataclasses
+import json
+
+from repro import configs  # noqa: E402
+from repro.launch import mesh as mesh_lib  # noqa: E402
+from repro.launch.dryrun import analyze_cell, lower_cell  # noqa: E402
+
+
+def measure(arch, shape, *, microbatches, cfg_mods=None, exact=True):
+    import repro.launch.dryrun as dr
+    mesh = mesh_lib.make_production_mesh()
+    cfg = configs.get_config(arch)
+    if cfg_mods:
+        cfg = dataclasses.replace(cfg, **cfg_mods)
+    # patch the registry lookup so analyze_cell's reduced configs inherit mods
+    orig = configs.get_config
+    configs.get_config = lambda a: (cfg if a == arch else orig(a))
+    dr.MICROBATCHES = microbatches
+    try:
+        meta = analyze_cell(arch, shape, mesh, exact=exact)
+    finally:
+        configs.get_config = orig
+    return meta
+
+
+def report(tag, meta):
+    print(json.dumps({
+        "tag": tag, "arch": meta["arch"], "shape": meta["shape"],
+        "compute_s": round(meta["compute_s"], 4),
+        "memory_s": round(meta["memory_s"], 4),
+        "collective_s": round(meta["collective_s"], 4),
+        "step_s": round(meta["step_s"], 4),
+        "dominant": meta["dominant"],
+        "peak_gb": round(meta["peak_memory_gb"], 2),
+        "useful": round(meta["useful_flops_ratio"], 4),
+    }))
+
+
+STEPS = {
+    # qwen1.5-4b train_4k: worst useful-FLOPs cell
+    "qwen-v1": lambda: measure("qwen1.5-4b", "train_4k", microbatches=1),
+    "qwen-v2": lambda: measure("qwen1.5-4b", "train_4k", microbatches=8),
+    "qwen-v3": lambda: measure("qwen1.5-4b", "train_4k", microbatches=8,
+                               cfg_mods={"attn_seq_shard": True}),
+    "qwen-v3p": lambda: measure("qwen1.5-4b", "prefill_32k", microbatches=1,
+                                cfg_mods={"attn_seq_shard": True}),
+    # rwkv6 train_4k: most collective-bound cell
+    "rwkv-v2": lambda: measure("rwkv6-1.6b", "train_4k", microbatches=1),
+    "rwkv-v3": lambda: measure("rwkv6-1.6b", "train_4k", microbatches=8),
+    # dbrx train_4k: paper-representative (EP + DP-reduction) cell
+    "dbrx-v1": lambda: measure("dbrx-132b", "train_4k", microbatches=1),
+    "dbrx-v2": lambda: measure("dbrx-132b", "train_4k", microbatches=8),
+    "dbrx-v3": lambda: measure("dbrx-132b", "train_4k", microbatches=8,
+                               cfg_mods={"capacity_factor": 1.0}),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--step", required=True, choices=sorted(STEPS))
+    args = ap.parse_args()
+    report(args.step, STEPS[args.step]())
+
+
+if __name__ == "__main__":
+    main()

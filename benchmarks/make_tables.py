@@ -1,0 +1,43 @@
+"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables.
+
+    PYTHONPATH=src python -m benchmarks.make_tables dryrun_results.json
+"""
+import json
+import sys
+
+
+def fmt_table(rows, mesh):
+    out = [
+        f"### Mesh {mesh}",
+        "",
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | "
+        "step_s | peak GB/dev | MODEL_FLOPs/HLO_FLOPs | tokens/step |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.4f} | "
+            f"{r['memory_s']:.4f} | {r['collective_s']:.4f} | "
+            f"{r['dominant']} | {r['step_s']:.4f} | "
+            f"{r['peak_memory_gb']:.2f} | {r['useful_flops_ratio']:.3f} | "
+            f"{r['tokens_per_step']:,} |")
+    return "\n".join(out)
+
+
+def main():
+    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+    rs = [r for r in json.load(open(path)) if r.get("status") == "ok"]
+    for mesh in ("16x16", "2x16x16"):
+        rows = [r for r in rs if r["mesh"] == mesh]
+        print(fmt_table(rows, mesh))
+        print()
+    bad = [r for r in json.load(open(path)) if r.get("status") != "ok"]
+    if bad:
+        print("### FAILED CELLS")
+        for r in bad:
+            print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: "
+                  f"{r.get('error')}")
+
+
+if __name__ == "__main__":
+    main()

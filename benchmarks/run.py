@@ -1,0 +1,181 @@
+"""Benchmark harness — one entry per paper table/figure + framework benches.
+
+Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
+quantity). Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.core import streaming
+from repro.data import curve_dataset
+from repro.kernels import ops as kernel_ops
+
+
+def _time(fn, *args, iters=20, warmup=3):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6  # us
+
+
+def row(name, us, derived):
+    print(f"{name},{us:.1f},{derived}")
+
+
+# ---------------------------------------------------------------- Table II-V
+def bench_accuracy(quick: bool):
+    """Paper Tables II-V: coefficients + Σe² vs the QR (polyfit) baseline on
+    the paper's dataset. derived = max |coeff - polyfit coeff| at order 3."""
+    x = jnp.asarray([39.206, 29.74, 21.31, 12.087, 1.812, 0.001])
+    y = jnp.asarray([751.912, 567.121, 403.746, 221.738, 18.8418, 1.88672])
+    for order in (1, 2, 3):
+        us = _time(lambda: core.polyfit(x, y, order))
+        gauss = core.polyfit(x, y, order)
+        qr = core.polyfit_qr(x, y, order)
+        sse = float(core.fit_report(gauss, x, y).sse)
+        gap = float(jnp.max(jnp.abs(gauss.coeffs - qr.coeffs)))
+        row(f"table2-4_order{order}_fit", us,
+            f"sse={sse:.4f};max_coeff_gap_vs_qr={gap:.2e}")
+
+
+# ------------------------------------------------------------------ §IV perf
+def bench_speedup(quick: bool):
+    """Paper §IV: matricized parallel accumulation vs the sequential
+    per-point scalar loop (the pre-matricization implementation the paper
+    benchmarks against; their GPU port reached ~100x over it). derived =
+    speedup of the matricized path on this host."""
+    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+
+    def sequential_power_sums(xs, ys, m=3):
+        """Faithful scalar baseline: one point at a time, plain floats."""
+        s = [0.0] * (2 * m + 1)
+        t = [0.0] * (m + 1)
+        for xi, yi in zip(xs, ys):
+            p = 1.0
+            for k in range(2 * m + 1):
+                s[k] += p
+                if k <= m:
+                    t[k] += p * yi
+                p *= xi
+        return s, t
+
+    for n in sizes:
+        x, y, _ = curve_dataset(n, degree=3, seed=0)
+        mat = jax.jit(lambda x, y: core.gram_moments(x, y, 3).gram)
+        us_mat = _time(mat, x, y, iters=10)
+
+        n_seq = min(n, 20_000)  # time a slice, extrapolate linearly
+        xs = [float(v) for v in np.asarray(x[:n_seq])]
+        ys = [float(v) for v in np.asarray(y[:n_seq])]
+        t0 = time.perf_counter()
+        sequential_power_sums(xs, ys)
+        us_seq_full = (time.perf_counter() - t0) * 1e6 * (n / n_seq)
+        row(f"speedup_n{n}", us_mat,
+            f"seq_us={us_seq_full:.0f};speedup={us_seq_full / us_mat:.1f}x")
+
+
+def bench_kernel(quick: bool):
+    """Pallas moments kernel (interpret mode on CPU): correctness-equivalent
+    throughput vs the jnp path; derived = Mpoints/s of the jnp path (the
+    kernel's CPU interpret timing is NOT the TPU number — see EXPERIMENTS.md
+    §Roofline for the TPU projection)."""
+    n = 1 << 18 if quick else 1 << 20
+    x, y, _ = curve_dataset(n, degree=3, seed=1)
+    jnp_path = jax.jit(lambda x, y: core.gram_moments(x, y, 3).gram)
+    us = _time(jnp_path, x, y, iters=10)
+    blocked = jax.jit(
+        lambda x, y: core.gram_moments_blocked(x, y, 3, block=1 << 14).gram)
+    us_b = _time(blocked, x, y, iters=10)
+    k = jax.jit(lambda x, y: kernel_ops.moments(x, y, 3).gram)
+    us_k = _time(k, x, y, iters=2, warmup=1)
+    row("moments_jnp", us, f"{n / us:.1f}Mpts/s")
+    row("moments_blocked", us_b, f"{n / us_b:.1f}Mpts/s")
+    row("moments_pallas_interpret", us_k, f"{n / us_k:.2f}Mpts/s(interpret)")
+
+
+def bench_streaming(quick: bool):
+    """Streaming O(1)-state fitter: points/s through update() + solve cost.
+    derived = Mpts/s and the (constant) state size."""
+    chunk = 1 << 14
+    x, y, _ = curve_dataset(chunk, degree=2, seed=2)
+    state = streaming.StreamState.create(2)
+    upd = jax.jit(streaming.update)
+    us = _time(upd, state, x, y, iters=20)
+    state_bytes = sum(np.asarray(l).nbytes
+                      for l in jax.tree.leaves(state))
+    us_solve = _time(jax.jit(lambda s: streaming.current_fit(s).coeffs),
+                     upd(state, x, y))
+    row("streaming_update", us, f"{chunk / us:.1f}Mpts/s")
+    row("streaming_solve", us_solve, f"state_bytes={state_bytes}")
+
+
+def bench_batched_fits(quick: bool):
+    """Batched (vmapped-by-construction) fitting — the monitors' workload:
+    fit 4096 independent series at once. derived = fits/s."""
+    b = 512 if quick else 4096
+    x, y, _ = curve_dataset(256, degree=1, seed=3, batch=(b,))
+    fit = jax.jit(lambda x, y: core.polyfit(x, y, 1).coeffs)
+    us = _time(fit, x, y, iters=10)
+    row("batched_fits", us, f"{b / (us / 1e6):.0f}fits/s")
+
+
+def bench_e2e_train(quick: bool):
+    """Smoke-scale end-to-end train step (framework overhead check).
+    derived = tokens/s on this CPU host."""
+    from repro import configs
+    from repro.models import get_model
+    from repro.train import TrainConfig, init_train_state, make_train_step
+    cfg = configs.get_smoke_config("internlm2-1.8b")
+    model = get_model(cfg)
+    state = init_train_state(model, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, TrainConfig()))
+    b, s = 4, 128
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32),
+             "loss_mask": jnp.ones((b, s), jnp.float32)}
+    state, _ = step(state, batch)  # compile
+
+    def run(state):
+        state, m = step(state, batch)
+        return state, m
+
+    t0 = time.perf_counter()
+    iters = 5 if quick else 20
+    for _ in range(iters):
+        state, m = run(state)
+    jax.block_until_ready(m["loss"])
+    us = (time.perf_counter() - t0) / iters * 1e6
+    row("train_step_smoke", us, f"{b * s / (us / 1e6):.0f}tok/s")
+
+
+BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_streaming,
+           bench_batched_fits, bench_e2e_train]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for bench in BENCHES:
+        try:
+            bench(args.quick)
+        except Exception as e:  # noqa: BLE001
+            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
+                  file=sys.stderr)
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Distributed matricized LSE on a (simulated) multi-device mesh — the
+paper's parallelization at mesh scale with one O(m²) collective.
+
+    PYTHONPATH=src python examples/distributed_fit.py
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=8").strip()
+
+import jax
+import jax.numpy as jnp
+
+from repro import core
+from repro.data import curve_dataset
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roof
+
+mesh = mesh_lib.make_host_mesh(data=8, model=1)
+print(f"mesh: {dict(mesh.shape)} over {len(jax.devices())} devices")
+
+n = 1 << 22  # 4M points, sharded 8 ways
+x, y, true = curve_dataset(n, degree=3, noise=2.0, seed=1)
+
+fit = core.make_distributed_fit(mesh, degree=3, normalize=True,
+                                accum_dtype=jnp.float32)
+poly, moments = fit(x, y)
+print("true coeffs      :", true)
+print("distributed fit  :", poly.monomial_coeffs())
+print("points seen      :", int(moments.count))
+
+# The paper's systems claim, verified on the compiled HLO: the only
+# cross-device traffic is the O(m²) moment psum — independent of n.
+s = jax.ShapeDtypeStruct((n,), jnp.float32)
+coll = roof.collective_bytes(fit.lower(s, s, s).compile().as_text())
+print(f"collective wire bytes for {n:,} points: {sum(coll.values()):.0f}B "
+      f"({coll})")
+
+# weak scaling: double the data, same collective payload
+s2 = jax.ShapeDtypeStruct((2 * n,), jnp.float32)
+coll2 = roof.collective_bytes(fit.lower(s2, s2, s2).compile().as_text())
+print(f"collective wire bytes for {2 * n:,} points: "
+      f"{sum(coll2.values()):.0f}B (payload is n-independent)")

@@ -1,0 +1,43 @@
+"""The paper's technique as framework telemetry: loss-curve fitting,
+divergence detection, ETA, straggler detection, scaling-law fits.
+
+    PYTHONPATH=src python examples/monitors_demo.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.runtime import plan_reslice
+from repro.train import LossCurveMonitor, StepTimeMonitor
+
+print("=== Loss-curve monitor (streaming matricized LSE) ===")
+mon = LossCurveMonitor(degree=1, decay=0.995)
+rng = np.random.default_rng(0)
+for step in range(300):
+    loss = 6.0 * (step + 10) ** -0.15 + rng.normal(0, 0.02)
+    mon.observe(step, loss)
+print(f"fitted slope @300: {mon.slope_at(300):+.2e} /step")
+print(f"predicted loss @600: {mon.predict(600):.3f}")
+print(f"eta to loss 4.0: {mon.eta_to(4.0, 300)} steps")
+print(f"diverging? {mon.diverging(300)}")
+
+print("\n=== Straggler detection + work re-slicing ===")
+st = StepTimeMonitor(n_hosts=8, threshold=1.3)
+for step in range(25):
+    t = 1.0 + rng.normal(0, 0.02, 8)
+    t[3] = 1.6 + rng.normal(0, 0.05)        # host 3 is slow
+    st.observe(step, t)
+print("stragglers:", st.stragglers(25))
+plan = plan_reslice(st, 25, global_batch=256)
+print("re-sliced per-host batch shares:", plan.shares)
+
+print("\n=== Scaling-law fit (log-log matricized LSE) ===")
+tokens = jnp.asarray(np.logspace(7, 10, 40), jnp.float32)
+loss = 2.57e3 * tokens ** -0.35 + 1.69     # chinchilla-ish synthetic
+law = core.fit_power_law(tokens, loss)
+print(f"fit: loss = {float(law.scale):.3g} · D^{float(law.exponent):.3f} "
+      f"+ {float(law.offset):.2f}")
+print(f"predicted loss at 1e11 tokens: {float(law(jnp.asarray(1e11))):.3f}")

@@ -1,0 +1,4 @@
+from repro.checkpoint.checkpointer import (save, restore, latest_step,
+                                           gc_old, COMMIT_MARKER)
+
+__all__ = ["save", "restore", "latest_step", "gc_old", "COMMIT_MARKER"]

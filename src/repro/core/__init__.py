@@ -1,0 +1,28 @@
+"""Core matricized LSE curve fitting (the paper's contribution).
+
+Public API re-exports."""
+from repro.core.basis import Domain, vandermonde, evaluate, MONOMIAL, CHEBYSHEV
+from repro.core.moments import (Moments, gram_moments, gram_moments_blocked,
+                                power_sums, hankel_from_power_sums,
+                                moment_vector)
+from repro.core.solve import (gaussian_elimination, cholesky_solve,
+                              qr_solve_vandermonde)
+from repro.core.solve import solve as solve_linear
+from repro.core.fit import (Polynomial, FitReport, polyfit, polyfit_qr,
+                            fit_from_moments, fit_report, sse_from_moments)
+from repro.core.distributed import make_distributed_fit, local_moments, psum_moments
+from repro.core.streaming import StreamState, update, current_fit, current_sse
+from repro.core.scaling_laws import PowerLaw, fit_power_law
+
+__all__ = [
+    "Domain", "vandermonde", "evaluate", "MONOMIAL", "CHEBYSHEV",
+    "Moments", "gram_moments", "gram_moments_blocked", "power_sums",
+    "hankel_from_power_sums", "moment_vector",
+    "gaussian_elimination", "cholesky_solve", "qr_solve_vandermonde",
+    "solve_linear",
+    "Polynomial", "FitReport", "polyfit", "polyfit_qr", "fit_from_moments",
+    "fit_report", "sse_from_moments",
+    "make_distributed_fit", "local_moments", "psum_moments",
+    "StreamState", "update", "current_fit", "current_sse",
+    "PowerLaw", "fit_power_law",
+]

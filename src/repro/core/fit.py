@@ -1,0 +1,130 @@
+"""Public curve-fitting API: the paper's algorithm end to end.
+
+``polyfit(x, y, degree)`` reproduces the paper's pipeline:
+    moments (matricized, VᵀV/Vᵀy)  ->  Gaussian-elimination solve  ->  coeffs
+
+``polyfit_qr`` is the MATLAB-polyfit baseline the paper compares against.
+``fit_report`` computes the paper's evaluation artifacts (fitted values,
+residuals, Σe², correlation coefficient R) for the accuracy tables.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+from repro.core import moments as moments_lib
+from repro.core import solve as solve_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Polynomial:
+    """A fitted polynomial: coefficients + the basis/domain they live in."""
+
+    coeffs: jax.Array                      # (..., m+1)
+    domain_shift: jax.Array                # scalar (0 for paper-faithful)
+    domain_scale: jax.Array                # scalar (1 for paper-faithful)
+    basis: str = dataclasses.field(metadata=dict(static=True), default=basis_lib.MONOMIAL)
+
+    @property
+    def degree(self) -> int:
+        return self.coeffs.shape[-1] - 1
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        dom = basis_lib.Domain(self.domain_shift, self.domain_scale)
+        return basis_lib.evaluate(self.coeffs, x, basis=self.basis, domain=dom)
+
+    def monomial_coeffs(self) -> jax.Array:
+        """Raw-x monomial coefficients (for comparing against the paper)."""
+        if self.basis != basis_lib.MONOMIAL:
+            raise NotImplementedError("convert chebyshev via numpy.polynomial")
+        dom = basis_lib.Domain(self.domain_shift, self.domain_scale)
+        return basis_lib.monomial_coeffs_from_domain(
+            self.coeffs, dom, self.degree)
+
+
+def fit_from_moments(m: moments_lib.Moments, *, method: str = "gauss",
+                     domain: basis_lib.Domain | None = None,
+                     basis: str = basis_lib.MONOMIAL) -> Polynomial:
+    """Solve the normal equations held in ``m``. The tiny-solve half of the
+    paper's algorithm; separated so distributed/streaming paths reuse it."""
+    coeffs = solve_lib.solve(m.gram, m.vty, method=method)
+    dom = domain or basis_lib.Domain.identity(coeffs.dtype)
+    return Polynomial(coeffs=coeffs, domain_shift=dom.shift,
+                      domain_scale=dom.scale, basis=basis)
+
+
+@partial(jax.jit, static_argnames=("degree", "method", "basis", "normalize",
+                                   "accum_dtype", "use_kernel"))
+def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
+            method: str = "gauss", basis: str = basis_lib.MONOMIAL,
+            normalize: bool = False, accum_dtype=None,
+            use_kernel: bool = False) -> Polynomial:
+    """Paper-faithful matricized LSE fit (defaults) with hardening knobs.
+
+    normalize=False, basis=monomial, method=gauss  ==  the paper's algorithm.
+    Batched: x, y may carry leading batch axes (..., n).
+    use_kernel=True routes moment accumulation through the Pallas kernel.
+    """
+    dom = (basis_lib.Domain.from_data(x) if normalize
+           else basis_lib.Domain.identity(x.dtype))
+    xt = dom.apply(x)
+    if use_kernel:
+        from repro.kernels import ops as kernel_ops
+        m = kernel_ops.moments(xt, y, degree, accum_dtype=accum_dtype)
+    else:
+        m = moments_lib.gram_moments(xt, y, degree, basis=basis,
+                                     accum_dtype=accum_dtype)
+    return fit_from_moments(m, method=method, domain=dom, basis=basis)
+
+
+@partial(jax.jit, static_argnames=("degree",))
+def polyfit_qr(x: jax.Array, y: jax.Array, degree: int) -> Polynomial:
+    """The paper's comparison baseline: MATLAB polyfit's QR-on-Vandermonde."""
+    v = basis_lib.vandermonde(x, degree)
+    coeffs = solve_lib.qr_solve_vandermonde(v, y)
+    return Polynomial(coeffs=coeffs,
+                      domain_shift=jnp.zeros((), x.dtype),
+                      domain_scale=jnp.ones((), x.dtype))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FitReport:
+    """Everything the paper's Tables II-V report about one fit."""
+
+    coeffs: jax.Array          # monomial, raw-x coefficients
+    fitted: jax.Array          # f(x_i)
+    residuals: jax.Array       # y_i - f(x_i)
+    sse: jax.Array             # Σ e²   (paper's headline accuracy number)
+    r: jax.Array               # correlation coefficient R
+
+
+def fit_report(poly: Polynomial, x: jax.Array, y: jax.Array) -> FitReport:
+    fitted = poly(x)
+    resid = y - fitted
+    sse = jnp.sum(resid * resid, axis=-1)
+    # correlation coefficient between y and fitted values
+    ym = y - jnp.mean(y, axis=-1, keepdims=True)
+    fm = fitted - jnp.mean(fitted, axis=-1, keepdims=True)
+    r = jnp.sum(ym * fm, axis=-1) / jnp.sqrt(
+        jnp.sum(ym * ym, axis=-1) * jnp.sum(fm * fm, axis=-1))
+    coeffs = poly.coeffs
+    if (poly.basis == basis_lib.MONOMIAL
+            and (poly.coeffs.ndim == 1)):
+        coeffs = poly.monomial_coeffs()
+    return FitReport(coeffs=coeffs, fitted=fitted, residuals=resid,
+                     sse=sse, r=r)
+
+
+def sse_from_moments(m: moments_lib.Moments, coeffs: jax.Array) -> jax.Array:
+    """Σe² without touching the data: yᵀy - 2aᵀB + aᵀA a.
+
+    Enables streaming quality tracking (monitors) with O(1) state."""
+    quad = jnp.einsum("...j,...jk,...k->...", coeffs, m.gram, coeffs)
+    cross = jnp.einsum("...j,...j->...", coeffs, m.vty)
+    return m.yty - 2.0 * cross + quad

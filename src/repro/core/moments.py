@@ -1,0 +1,151 @@
+"""Matricized moment / Gram accumulation — the paper's core primitive.
+
+The paper's normal-equation matrix is the Hankel matrix of power sums
+``A[j,k] = S_{j+k} = Σ_i x_i^{j+k}`` and the RHS is ``B[j] = T_j = Σ_i x_i^j y_i``.
+With the Vandermonde matrix ``V[i,k] = x_i^k`` these are exactly
+
+    A = Vᵀ V          (Gram)
+    B = Vᵀ y
+
+which is the TPU-native (MXU) formulation used throughout this framework and by
+the Pallas kernel in ``repro.kernels.moments``. Both formulations are provided;
+``power_sums`` is the paper-literal one, ``gram_moments`` the matricized one —
+they agree to fp tolerance and the tests assert it.
+
+Moments are *additive* across data shards and across time. That property is
+what makes the fit (a) embarrassingly data-parallel (one tiny psum) and (b)
+streamable with O(1) state (see ``repro.core.streaming``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Moments:
+    """Sufficient statistics of an LSE fit. Additive: m1 + m2 fits the union."""
+
+    gram: jax.Array      # (..., m+1, m+1)  == Vᵀ V
+    vty: jax.Array       # (..., m+1)       == Vᵀ y
+    yty: jax.Array       # (...,)           == Σ y²  (for residual/R without refit)
+    count: jax.Array     # (...,)           == n
+
+    def __add__(self, other: "Moments") -> "Moments":
+        return Moments(self.gram + other.gram, self.vty + other.vty,
+                       self.yty + other.yty, self.count + other.count)
+
+    @property
+    def degree(self) -> int:
+        return self.gram.shape[-1] - 1
+
+    @staticmethod
+    def zeros(degree: int, batch: tuple[int, ...] = (), dtype=jnp.float32) -> "Moments":
+        m1 = degree + 1
+        return Moments(
+            gram=jnp.zeros(batch + (m1, m1), dtype),
+            vty=jnp.zeros(batch + (m1,), dtype),
+            yty=jnp.zeros(batch, dtype),
+            count=jnp.zeros(batch, dtype),
+        )
+
+
+@partial(jax.jit, static_argnames=("degree",))
+def power_sums(x: jax.Array, degree: int, *, weights: jax.Array | None = None) -> jax.Array:
+    """Paper-literal power sums S_0..S_{2m} (shape (2*degree+1,)).
+
+    Iterated-multiply power ladder, summed per power — exactly the quantity the
+    paper's CUDA threads accumulate."""
+    w = jnp.ones_like(x) if weights is None else weights
+    sums = []
+    p = jnp.ones_like(x)
+    for _ in range(2 * degree + 1):
+        sums.append(jnp.sum(p * w))
+        p = p * x
+    return jnp.stack(sums)
+
+
+def hankel_from_power_sums(s: jax.Array, degree: int) -> jax.Array:
+    """Assemble the paper's A matrix from power sums: A[j,k] = S[j+k]."""
+    idx = jnp.arange(degree + 1)
+    return s[idx[:, None] + idx[None, :]]
+
+
+@partial(jax.jit, static_argnames=("degree", "basis"))
+def moment_vector(x: jax.Array, y: jax.Array, degree: int,
+                  basis: str = basis_lib.MONOMIAL) -> jax.Array:
+    """Paper-literal B[j] = Σ x^j y, j = 0..m."""
+    v = basis_lib.vandermonde(x, degree, basis)
+    return jnp.einsum("...nk,...n->...k", v, y)
+
+
+@partial(jax.jit, static_argnames=("degree", "basis", "accum_dtype"))
+def gram_moments(x: jax.Array, y: jax.Array, degree: int, *,
+                 basis: str = basis_lib.MONOMIAL,
+                 weights: jax.Array | None = None,
+                 accum_dtype=None) -> Moments:
+    """Matricized moments A = VᵀV, B = Vᵀy over the last axis of x/y.
+
+    Supports arbitrary leading batch axes (batched curve fitting): x, y of
+    shape (..., n) produce Moments with batch shape (...,).
+
+    ``accum_dtype`` lets callers accumulate in a wider dtype than the inputs
+    (e.g. bf16 data, f32 sums) — the numerical-hardening path beyond the paper.
+    """
+    v = basis_lib.vandermonde(x, degree, basis)  # (..., n, m+1)
+    if accum_dtype is not None:
+        v = v.astype(accum_dtype)
+        y = y.astype(accum_dtype)
+    if weights is not None:
+        wv = v * weights[..., :, None]
+    else:
+        wv = v
+    gram = jnp.einsum("...nj,...nk->...jk", wv, v)
+    vty = jnp.einsum("...nj,...n->...j", wv, y)
+    yty = jnp.sum((weights * y if weights is not None else y) * y, axis=-1)
+    count = (jnp.sum(weights, axis=-1) if weights is not None
+             else jnp.full(x.shape[:-1], x.shape[-1], (accum_dtype or x.dtype)))
+    return Moments(gram=gram, vty=vty, yty=yty,
+                   count=count.astype(gram.dtype))
+
+
+@partial(jax.jit, static_argnames=("degree", "basis", "block", "accum_dtype"))
+def gram_moments_blocked(x: jax.Array, y: jax.Array, degree: int, *,
+                         basis: str = basis_lib.MONOMIAL,
+                         block: int = 1 << 16,
+                         accum_dtype=None) -> Moments:
+    """Chunked accumulation for datasets too large to materialize V at once.
+
+    Mirrors the Pallas kernel's grid structure (one Gram update per block) in
+    pure JAX; used as the large-n host path and as the kernel's shape oracle.
+    Tail is zero-padded; padding contributes nothing because both V-rows and y
+    are zeroed there (weights mask).
+    """
+    n = x.shape[-1]
+    nblk = -(-n // block)
+    pad = nblk * block - n
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    yp = jnp.pad(y, [(0, 0)] * (y.ndim - 1) + [(0, pad)])
+    mask = jnp.pad(jnp.ones_like(x), [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(x.shape[:-1] + (nblk, block))
+    yb = yp.reshape(y.shape[:-1] + (nblk, block))
+    mb = mask.reshape(x.shape[:-1] + (nblk, block))
+
+    def body(carry: Moments, inp):
+        xi, yi, mi = inp
+        m = gram_moments(xi, yi, degree, basis=basis, weights=mi,
+                         accum_dtype=accum_dtype)
+        return carry + m, None
+
+    # scan over the block axis (moved to front)
+    move = lambda a: jnp.moveaxis(a, -2, 0)
+    init = Moments.zeros(degree, x.shape[:-1],
+                         dtype=(accum_dtype or x.dtype))
+    out, _ = jax.lax.scan(body, init, (move(xb), move(yb), move(mb)))
+    return out

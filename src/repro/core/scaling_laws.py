@@ -1,0 +1,59 @@
+"""Power-law / scaling-law fits built on the paper's LSE core.
+
+loss(tokens) ≈ a · tokens^b + c  is fitted (for fixed c-grid) by log-log
+*linear* LSE — i.e. degree-1 matricized fitting on (log t, log (loss - c)).
+Used by the training monitors for ETA/loss extrapolation and exposed as a
+user-facing utility (the kind of "colossal dataset statistics" workload the
+paper motivates)."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fit as fit_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PowerLaw:
+    """y ≈ scale * x^exponent + offset."""
+
+    scale: jax.Array
+    exponent: jax.Array
+    offset: jax.Array
+    sse_log: jax.Array  # Σe² in log space (model-selection score)
+
+    def __call__(self, x: jax.Array) -> jax.Array:
+        return self.scale * x ** self.exponent + self.offset
+
+
+def fit_power_law(x: jax.Array, y: jax.Array, *,
+                  offsets: jax.Array | None = None) -> PowerLaw:
+    """Fit y = a x^b + c. Grid-search c over ``offsets`` (default: 0 plus a
+    small grid below min(y)), solving each candidate with the matricized
+    degree-1 LSE in log space, and keep the best by log-space Σe²."""
+    if offsets is None:
+        ymin = jnp.min(y)
+        offsets = jnp.concatenate([
+            jnp.zeros((1,), y.dtype),
+            ymin * jnp.linspace(0.0, 0.999, 32, dtype=y.dtype)])
+
+    lx = jnp.log(x)
+
+    def one(c):
+        ly = jnp.log(jnp.maximum(y - c, jnp.finfo(y.dtype).tiny))
+        poly = fit_lib.polyfit(lx, ly, 1, normalize=True)
+        rep_sse = jnp.sum((poly(lx) - ly) ** 2)
+        mono = poly.coeffs  # normalized-domain coeffs; recover raw a, b:
+        # ly = m0 + m1 * ((lx - shift) * scale)  =>  b = m1*scale,
+        # log a = m0 - m1*scale*shift
+        b = mono[1] * poly.domain_scale
+        loga = mono[0] - mono[1] * poly.domain_scale * poly.domain_shift
+        return jnp.exp(loga), b, rep_sse
+
+    scales, exps, sses = jax.vmap(one)(offsets)
+    i = jnp.argmin(sses)
+    return PowerLaw(scale=scales[i], exponent=exps[i], offset=offsets[i],
+                    sse_log=sses[i])

@@ -1,0 +1,81 @@
+"""Linear solvers for the (m+1)x(m+1) normal-equation system.
+
+``gaussian_elimination`` is the paper's method (Sec. II: "the matrix X has been
+solved for using the method of Gaussian Elimination"), implemented with partial
+pivoting in pure ``jax.lax`` control flow so it jits, vmaps and shards.
+
+``qr_solve`` is the paper's *comparison baseline* (MATLAB polyfit's method:
+QR-factorize the Vandermonde, never form the Gram matrix).
+
+``cholesky_solve`` is a beyond-paper option exploiting SPD-ness of VᵀV.
+All solvers are batched over leading axes via vmap-compatible code.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def gaussian_elimination(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Solve a @ x = b by Gaussian elimination with partial pivoting.
+
+    a: (..., m, m), b: (..., m). Returns x: (..., m).
+    Written as row-parallel rank-1 updates inside a fori_loop, which is the
+    TPU-friendly shape (VPU row ops) of the paper's sequential elimination.
+    """
+    if a.ndim > 2:
+        return jax.vmap(gaussian_elimination)(a, b)
+    m = a.shape[-1]
+    aug = jnp.concatenate([a, b[..., None]], axis=-1)  # (m, m+1)
+
+    def step(k, aug):
+        # partial pivot: swap row k with argmax |aug[k:, k]|
+        col = jnp.abs(aug[:, k])
+        col = jnp.where(jnp.arange(m) < k, -jnp.inf, col)
+        p = jnp.argmax(col)
+        rk, rp = aug[k], aug[p]
+        aug = aug.at[k].set(rp).at[p].set(rk)
+        # eliminate below AND above (Gauss-Jordan: avoids a back-subst loop,
+        # same O(m^3), better for tiny m on vector units)
+        pivot = aug[k, k]
+        factors = aug[:, k] / pivot
+        factors = factors.at[k].set(0.0)
+        aug = aug - factors[:, None] * aug[k][None, :]
+        return aug
+
+    aug = jax.lax.fori_loop(0, m, step, aug)
+    return aug[:, m] / jnp.diagonal(aug[:, :m])
+
+
+@jax.jit
+def cholesky_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """SPD solve via Cholesky (beyond-paper; Gram matrices are SPD)."""
+    chol = jnp.linalg.cholesky(a)
+    y = jax.scipy.linalg.solve_triangular(chol, b[..., None], lower=True)
+    x = jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(chol, -1, -2), y, lower=False)
+    return x[..., 0]
+
+
+@partial(jax.jit, static_argnames=())
+def qr_solve_vandermonde(v: jax.Array, y: jax.Array) -> jax.Array:
+    """polyfit()-style solve: V = QR, coeffs = R⁻¹ Qᵀ y (Householder QR).
+
+    This is the paper's accuracy baseline — it acts on the full n×(m+1) design
+    matrix, so it is NOT matricizable into O(m²) sufficient statistics; its
+    communication cost scales with n. That contrast is the paper's point.
+    """
+    q, r = jnp.linalg.qr(v)
+    return jax.scipy.linalg.solve_triangular(
+        r, jnp.einsum("...nk,...n->...k", q, y)[..., None], lower=False)[..., 0]
+
+
+def solve(a: jax.Array, b: jax.Array, method: str = "gauss") -> jax.Array:
+    if method == "gauss":
+        return gaussian_elimination(a, b)
+    if method == "cholesky":
+        return cholesky_solve(a, b)
+    raise ValueError(f"unknown solve method {method!r}")

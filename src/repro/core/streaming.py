@@ -1,0 +1,77 @@
+"""Streaming LSE fitting with O(1) state — additive moments over time.
+
+Because the paper's sufficient statistics (power sums / Gram) are additive,
+a fit over an unbounded stream needs only the running ``Moments`` — no history
+buffer. This is what lets the training loop fit its own loss curve every step
+for free (``repro.train.monitors``) and what an online-serving statistics
+service would keep per series.
+
+Includes an exponential-forgetting variant (decay γ) so monitors track the
+*recent* trend — the fit solves the γ-weighted least-squares problem exactly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+from repro.core import fit as fit_lib
+from repro.core import moments as moments_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamState:
+    moments: moments_lib.Moments
+    decay: jax.Array  # scalar in (0, 1]; 1.0 = plain accumulation
+
+    @staticmethod
+    def create(degree: int, batch: tuple[int, ...] = (), *, decay: float = 1.0,
+               dtype=jnp.float32) -> "StreamState":
+        return StreamState(moments_lib.Moments.zeros(degree, batch, dtype),
+                           jnp.asarray(decay, dtype))
+
+
+@partial(jax.jit, static_argnames=("basis",))
+def update(state: StreamState, x: jax.Array, y: jax.Array, *,
+           weights: jax.Array | None = None,
+           basis: str = basis_lib.MONOMIAL) -> StreamState:
+    """Fold a new chunk (..., n) into the running moments.
+
+    With decay γ, previous mass is multiplied by γ**n_new, giving exact
+    exponentially-weighted least squares (newest point has weight 1)."""
+    new = moments_lib.gram_moments(
+        x, y, state.moments.degree, basis=basis,
+        weights=_decay_weights(state, x, weights))
+    n_new = jnp.asarray(x.shape[-1], state.decay.dtype)
+    g = state.decay ** n_new
+    old = jax.tree.map(lambda a: a * g, state.moments)
+    return StreamState(old + new, state.decay)
+
+
+def _decay_weights(state: StreamState, x: jax.Array,
+                   weights: jax.Array | None) -> jax.Array | None:
+    n = x.shape[-1]
+    # newest point gets γ⁰, oldest in chunk γ^{n-1} (γ=1 → all ones)
+    w = state.decay ** jnp.arange(n - 1, -1, -1, dtype=x.dtype)
+    w = jnp.broadcast_to(w, x.shape)
+    return w if weights is None else w * weights
+
+
+@partial(jax.jit, static_argnames=("method", "ridge"))
+def current_fit(state: StreamState, *, method: str = "gauss",
+                ridge: float = 0.0) -> fit_lib.Polynomial:
+    """Solve the running normal equations. ridge>0 adds λI (stabilizes early,
+    nearly-singular states — e.g. fewer points seen than coefficients)."""
+    m = state.moments
+    if ridge:
+        eye = jnp.eye(m.degree + 1, dtype=m.gram.dtype)
+        m = dataclasses.replace(m, gram=m.gram + ridge * eye)
+    return fit_lib.fit_from_moments(m, method=method)
+
+
+def current_sse(state: StreamState, poly: fit_lib.Polynomial) -> jax.Array:
+    return fit_lib.sse_from_moments(state.moments, poly.coeffs)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataConfig, TokenPipeline, curve_dataset
+
+__all__ = ["DataConfig", "TokenPipeline", "curve_dataset"]

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot-spot.
+
+The paper's CUDA contribution is the parallel moment/power-sum accumulation;
+``moments.py`` is its TPU-native re-derivation (blocked Vandermonde-Gram on
+the MXU). ``ops.py`` is the jitted wrapper, ``ref.py`` the pure-jnp oracle.
+"""
+from repro.kernels.ops import moments as compute_moments  # noqa: F401
+# (exported under a distinct name so the `repro.kernels.moments` submodule
+# stays importable — same shadowing hazard as core.solve)
+
+__all__ = ["compute_moments"]

@@ -1,0 +1,96 @@
+"""Pallas TPU kernel: blocked Vandermonde-Gram moment accumulation.
+
+TPU-native adaptation of the paper's CUDA moment kernel (DESIGN.md §2):
+
+* The paper's per-thread partial power sums become a *single MXU matmul* per
+  data tile. With W = [V | y] (rows = powers of x, then y), the product
+  G = (W ⊙ w) Wᵀ simultaneously yields the Hankel/Gram matrix, the moment
+  vector Vᵀy, Σwy² and Σw (= count) — every sufficient statistic of the fit.
+* Grid streams (batch, n-block) tiles HBM→VMEM; the (128, 128) accumulator
+  tile stays VMEM-resident across the n-block grid dimension (constant
+  index_map), mirroring the shared-memory block reduction on GPU.
+* Power rows are built by iterated multiply (no transcendental `pow`),
+  matching the paper's "matricized" construction.
+
+Layout choices (TPU):
+  W tile: (K_PAD=128, block_n) — sublane dim 128 rows of powers, lane dim the
+  data block (multiple of 128). G += W_w @ Wᵀ contracts over lanes on the MXU
+  with f32 accumulation (preferred_element_type), independent of input dtype.
+  VMEM footprint ≈ (2·K_PAD·block_n + K_PAD²)·4B ≈ 4.3 MB at block_n=4096.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+K_PAD = 128          # fixed row count: degree + 2 <= 128
+DEFAULT_BLOCK_N = 4096
+
+
+def _moments_kernel(x_ref, y_ref, w_ref, g_ref, *, degree: int,
+                    accum_dtype):
+    """One (batch, block) grid step: G[b] += (W·w) Wᵀ for this tile."""
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    x = x_ref[...].astype(accum_dtype)   # (1, block_n)
+    y = y_ref[...].astype(accum_dtype)   # (1, block_n)
+    w = w_ref[...].astype(accum_dtype)   # (1, block_n)
+
+    # Build W rows by the iterated-multiply power ladder (paper's trick).
+    rows = [jnp.ones_like(x)]
+    for _ in range(degree):
+        rows.append(rows[-1] * x)
+    rows.append(y)
+    wmat = jnp.concatenate(rows, axis=0)                     # (deg+2, bn)
+    pad = K_PAD - (degree + 2)
+    if pad:
+        wmat = jnp.concatenate(
+            [wmat, jnp.zeros((pad, wmat.shape[1]), accum_dtype)], axis=0)
+
+    lhs = wmat * w                                           # weight one side
+    # MXU: (128, bn) @ (bn, 128), f32 accumulation.
+    g_ref[...] += jax.lax.dot_general(
+        lhs, wmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=accum_dtype)[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("degree", "block_n", "interpret",
+                                    "accum_dtype"))
+def moments_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
+                     degree: int, block_n: int = DEFAULT_BLOCK_N,
+                     accum_dtype=jnp.float32,
+                     interpret: bool = False) -> jax.Array:
+    """Raw kernel output: (B, K_PAD, K_PAD) extended Gram per batch row.
+
+    x, y, weights: (B, n) with n % block_n == 0 (ops.py handles padding —
+    padded tail carries weight 0 so it contributes nothing).
+    """
+    if x.ndim != 2:
+        raise ValueError("moments_extended expects (B, n) inputs")
+    b, n = x.shape
+    if n % block_n:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    if degree + 2 > K_PAD:
+        raise ValueError(f"degree {degree} too large for K_PAD={K_PAD}")
+    nblk = n // block_n
+
+    kernel = functools.partial(_moments_kernel, degree=degree,
+                               accum_dtype=accum_dtype)
+    in_spec = pl.BlockSpec((1, block_n), lambda bi, ni: (bi, ni))
+    out_spec = pl.BlockSpec((1, K_PAD, K_PAD), lambda bi, ni: (bi, 0, 0))
+    return pl.pallas_call(
+        kernel,
+        grid=(b, nblk),
+        in_specs=[in_spec, in_spec, in_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, K_PAD, K_PAD), accum_dtype),
+        interpret=interpret,
+    )(x, y, weights)

@@ -1,0 +1,64 @@
+"""Jitted public wrappers around the Pallas moments kernel.
+
+Handles: batch/flat shapes, tail padding (weight-masked so padding is inert),
+block size choice, CPU fallback (interpret mode), and extraction of the
+``Moments`` sufficient statistics from the kernel's extended Gram output.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.moments import Moments
+from repro.kernels import moments as kernel
+
+
+def _should_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("degree", "block_n", "interpret",
+                                             "accum_dtype"))
+def moments(x: jax.Array, y: jax.Array, degree: int, *,
+            weights: jax.Array | None = None,
+            block_n: int | None = None,
+            accum_dtype=jnp.float32,
+            interpret: bool | None = None) -> Moments:
+    """Drop-in kernel-backed equivalent of ``repro.core.gram_moments``.
+
+    Accepts (n,) or (B, n) inputs of any float dtype; returns f32-accumulated
+    Moments with matching batch shape.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    if accum_dtype is None:
+        accum_dtype = jnp.float32
+    flat = x.ndim == 1
+    if flat:
+        x, y = x[None], y[None]
+        if weights is not None:
+            weights = weights[None]
+    b, n = x.shape
+
+    if block_n is None:
+        # smallest lane-aligned block that covers short series in one step;
+        # large series stream in DEFAULT_BLOCK_N tiles.
+        block_n = min(kernel.DEFAULT_BLOCK_N, max(128, -(-n // 128) * 128))
+    pad = (-n) % block_n
+    w = jnp.ones_like(x) if weights is None else weights
+    if pad:
+        zpad = [(0, 0), (0, pad)]
+        x = jnp.pad(x, zpad)
+        y = jnp.pad(y, zpad)
+        w = jnp.pad(w, zpad)   # zero weight ⇒ padded tail contributes nothing
+
+    g = kernel.moments_extended(x, y, w, degree=degree, block_n=block_n,
+                                accum_dtype=accum_dtype, interpret=interpret)
+    m1 = degree + 1
+    out = Moments(gram=g[:, :m1, :m1], vty=g[:, :m1, m1],
+                  yty=g[:, m1, m1], count=g[:, 0, 0])
+    if flat:
+        out = jax.tree.map(lambda a: a[0], out)
+    return out

@@ -1,0 +1,54 @@
+"""Pure-jnp oracle for the moments kernel.
+
+Computes the extended Gram matrix G = (W·w) Wᵀ with W = [V | y | 0-pad],
+W: (K, n) row-major powers — exactly what the Pallas kernel accumulates,
+including the K=128 zero-padding, so tests can compare the *full* padded
+output as well as the extracted Moments."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+from repro.core.moments import Moments
+
+K_PAD = 128  # kernel's fixed row count (degree+2 <= K_PAD)
+
+
+def extended_matrix(x: jnp.ndarray, y: jnp.ndarray, degree: int,
+                    accum_dtype=jnp.float32) -> jnp.ndarray:
+    """W rows: [x^0, x^1, ..., x^degree, y, zeros...]; shape (..., K_PAD, n).
+
+    Inputs are cast to ``accum_dtype`` BEFORE the power ladder — matching the
+    kernel, which builds powers in the accumulation dtype."""
+    x = x.astype(accum_dtype)
+    y = y.astype(accum_dtype)
+    v = basis_lib.vandermonde(x, degree)            # (..., n, m+1)
+    w = jnp.concatenate([v, y[..., :, None]], axis=-1)  # (..., n, m+2)
+    pad = K_PAD - (degree + 2)
+    w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, pad)])
+    return jnp.swapaxes(w, -1, -2)                  # (..., K_PAD, n)
+
+
+def extended_gram(x: jnp.ndarray, y: jnp.ndarray, degree: int,
+                  weights: jnp.ndarray | None = None,
+                  accum_dtype=jnp.float32) -> jnp.ndarray:
+    """(..., K_PAD, K_PAD) reference for the kernel's raw output."""
+    w_mat = extended_matrix(x, y, degree, accum_dtype)
+    lhs = w_mat if weights is None else w_mat * weights[..., None, :].astype(accum_dtype)
+    return jnp.einsum("...kn,...jn->...kj", lhs, w_mat)
+
+
+def moments_from_extended(g: jnp.ndarray, degree: int) -> Moments:
+    """Slice the paper's statistics out of the extended Gram matrix."""
+    m1 = degree + 1
+    return Moments(gram=g[..., :m1, :m1],
+                   vty=g[..., :m1, m1],
+                   yty=g[..., m1, m1],
+                   count=g[..., 0, 0])
+
+
+def moments_reference(x: jnp.ndarray, y: jnp.ndarray, degree: int,
+                      weights: jnp.ndarray | None = None,
+                      accum_dtype=jnp.float32) -> Moments:
+    return moments_from_extended(
+        extended_gram(x, y, degree, weights, accum_dtype), degree)

@@ -1,0 +1,2 @@
+"""Launch layer: mesh construction, multi-pod dry-run, roofline analysis,
+training and serving drivers."""

@@ -1,0 +1,368 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell with
+512 placeholder devices and extract roofline terms (no real allocation).
+
+The os.environ lines below MUST run before any jax import (device count
+locks on first backend init). Do not import this module from tests — run as
+    PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES, shapes_for
+from repro.launch import mesh as mesh_lib
+from repro.launch import roofline as roof
+from repro.models import get_model
+from repro.sharding import rules
+from repro.train import TrainConfig, make_train_step, abstract_train_state, \
+    train_state_specs
+
+
+def _batch_shardings(mesh, batch_specs):
+    """Shard every batch leaf's leading (batch) axis over the data axes."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    da = rules.data_axes(mesh)
+
+    def one(sds):
+        if sds.shape and sds.shape[0] % _axes_size(mesh, da) == 0:
+            return NamedSharding(mesh, P(da, *([None] * (len(sds.shape) - 1))))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, batch_specs)
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _serve_params(model):
+    """Serving uses bf16 weights (halves weight reads + memory vs the f32
+    training masters)."""
+    import jax.numpy as jnp
+
+    def cast(s):
+        if jnp.issubdtype(s.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(s.shape, jnp.bfloat16)
+        return s
+    return jax.tree.map(cast, model.abstract_params())
+
+
+def _overrides_for(shape, mesh):
+    if shape.kind != "decode":
+        return None
+    if shape.global_batch < _axes_size(mesh, rules.data_axes(mesh)):
+        return rules.LONG_CONTEXT_OVERRIDES
+    return rules.DECODE_OVERRIDES
+
+
+MICROBATCHES = int(os.environ.get("REPRO_MICROBATCHES", "8"))
+# per-arch grad-accumulation overrides (memory floor tuning, §Perf)
+ARCH_MICROBATCHES = {"dbrx-132b": 16}
+
+
+def lower_cell(arch: str, shape_name: str, mesh, *, verbose: bool = False,
+               cfg=None, microbatches: int | None = None):
+    """Lower + compile one cell. Returns (compiled, roofline, meta)."""
+    cfg = cfg or configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    overrides = _overrides_for(shape, mesh)
+    if microbatches is None:
+        microbatches = ARCH_MICROBATCHES.get(arch, MICROBATCHES)
+
+    t0 = time.time()
+    # set_mesh (not `with mesh:`): activation sharding constraints inside
+    # the models read the ambient abstract mesh at trace time
+    jax.set_mesh(mesh)
+    if True:
+        if shape.kind == "train":
+            tc = TrainConfig(microbatches=microbatches)
+            step = make_train_step(model, tc)
+            state_abs = abstract_train_state(model)
+            state_specs = train_state_specs(model)
+            state_sh = rules.tree_shardings(mesh, state_specs, state_abs,
+                                            overrides=overrides)
+            in_specs = model.input_specs(shape)
+            batch_sh = _batch_shardings(mesh, in_specs)
+            fn = jax.jit(step,
+                         in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None),
+                         donate_argnums=(0,))
+            lowered = fn.lower(state_abs, in_specs)
+        elif shape.kind == "prefill":
+            params_abs = _serve_params(model)      # bf16 for serving
+            pspecs = model.param_specs()
+            params_sh = rules.tree_shardings(mesh, pspecs, params_abs,
+                                             overrides=overrides)
+            in_specs = model.input_specs(shape)
+            batch_sh = _batch_shardings(mesh, in_specs)
+            # constrain the produced cache like the decode path (otherwise
+            # XLA may leave multi-TB caches unsharded — measured on qwen)
+            state_abs = jax.eval_shape(
+                lambda: model.init_decode_state(shape.global_batch,
+                                                shape.seq_len))
+            sspecs = model.decode_state_specs()
+            state_sh = rules.tree_shardings(
+                mesh, sspecs, state_abs,
+                overrides=overrides or rules.DECODE_OVERRIDES)
+            fn = jax.jit(
+                lambda p, b: model.prefill(p, b, shape.seq_len),
+                in_shardings=(params_sh, batch_sh),
+                out_shardings=(None, state_sh))
+            lowered = fn.lower(params_abs, in_specs)
+        else:  # decode
+            params_abs = _serve_params(model)      # bf16 for serving
+            pspecs = model.param_specs()
+            params_sh = rules.tree_shardings(mesh, pspecs, params_abs,
+                                             overrides=overrides)
+            in_specs = model.input_specs(shape)
+            state_abs = in_specs["state"]
+            sspecs = model.decode_state_specs()
+            state_sh = rules.tree_shardings(mesh, sspecs, state_abs,
+                                            overrides=overrides)
+            tok_sh = _batch_shardings(mesh, {"token": in_specs["token"]})
+            fn = jax.jit(model.decode_step,
+                         in_shardings=(params_sh, tok_sh["token"], state_sh),
+                         out_shardings=(None, state_sh),
+                         donate_argnums=(2,))
+            lowered = fn.lower(params_abs, in_specs["token"], state_abs)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    r = roof.analyze(compiled)
+    n_tokens = model.batch_tokens(shape)
+    mf = roof.model_flops(cfg, shape, n_tokens)
+    n_dev = mesh.devices.size
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_devices": n_dev,
+        "tokens_per_step": n_tokens,
+        "model_flops_total": mf,
+        "model_flops_per_dev": mf / n_dev,
+        "useful_flops_ratio": (mf / n_dev) / max(r.flops, 1.0),
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        **r.summary(),
+    }
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"  memory_analysis: arg={mem.argument_size_in_bytes/1e9:.2f}GB "
+              f"out={mem.output_size_in_bytes/1e9:.2f}GB "
+              f"temp={mem.temp_size_in_bytes/1e9:.2f}GB "
+              f"alias={mem.alias_size_in_bytes/1e9:.2f}GB", file=sys.stderr)
+    return compiled, r, meta
+
+
+# ------------------------------------------------------------ exact costs
+def reduced_points(cfg):
+    """Two reduced-depth configs (k_lo, cfg_lo), (k_hi, cfg_hi) + k_full such
+    that every cost term is linear in k (identical per-group bodies):
+        cost(full) = c_lo + (k_full - k_lo) · (c_hi - c_lo)/(k_hi - k_lo)
+    k counts scan groups. zamba2 keeps its 3-layer tail in BOTH points so the
+    tail contribution lands in the constant term (exact)."""
+    import dataclasses as dc
+    if cfg.family == "hybrid":
+        tail = cfg.n_layers % cfg.attn_every
+        k_full = cfg.n_layers // cfg.attn_every
+        lo = dc.replace(cfg, n_layers=2 * cfg.attn_every + tail)
+        hi = dc.replace(cfg, n_layers=4 * cfg.attn_every + tail)
+        return (2, lo), (4, hi), k_full
+    if cfg.family == "audio":
+        k_full = cfg.n_enc_layers
+        assert cfg.n_enc_layers == cfg.n_dec_layers
+        lo = dc.replace(cfg, n_enc_layers=2, n_dec_layers=2, n_layers=4)
+        hi = dc.replace(cfg, n_enc_layers=4, n_dec_layers=4, n_layers=8)
+        return (2, lo), (4, hi), k_full
+    from repro.models.transformer import group_size
+    g = group_size(cfg) if cfg.family in ("dense", "moe", "vlm") else 1
+    k_full = cfg.n_layers // g
+    lo = dc.replace(cfg, n_layers=2 * g)
+    hi = dc.replace(cfg, n_layers=4 * g)
+    return (2, lo), (4, hi), k_full
+
+
+def extrapolated_costs(arch: str, shape_name: str, mesh,
+                       microbatches: int | None = None):
+    """FLOPs / bytes / collective bytes with loop bodies counted correctly:
+    compile reduced-depth configs fully UNROLLED (cm.UNROLL_ALL) and
+    extrapolate in the scan group count — and, for train cells with gradient
+    accumulation, bilinearly in (groups, microbatches): every cost term is
+    α + β·L + γ·m + δ·L·m (identical bodies), solved from 4 points."""
+    from repro.models import common as cm_mod
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    if microbatches is None:
+        microbatches = MICROBATCHES
+    (k_lo, cfg_lo), (k_hi, cfg_hi), k_full = reduced_points(cfg)
+    m_target = microbatches if shape.kind == "train" else 1
+
+    def run(c, m):
+        _, r, _ = lower_cell(arch, shape_name, mesh, cfg=c, microbatches=m)
+        return r
+
+    cm_mod.UNROLL_ALL = True
+    try:
+        r_ll = run(cfg_lo, 1)
+        r_hl = run(cfg_hi, 1)
+        if m_target > 1:
+            r_lm = run(cfg_lo, 2)
+            r_hm = run(cfg_hi, 2)
+    finally:
+        cm_mod.UNROLL_ALL = False
+
+    dk = (k_full - k_lo) / (k_hi - k_lo)
+
+    def combine(get):
+        # linear in L at m=1
+        at_m1 = get(r_ll) + dk * (get(r_hl) - get(r_ll))
+        if m_target == 1:
+            return at_m1
+        # bilinear: per-m slope also linear in L
+        dm_lo = get(r_lm) - get(r_ll)          # m: 1 -> 2 at k_lo
+        dm_hi = get(r_hm) - get(r_hl)
+        dm_at_k = dm_lo + dk * (dm_hi - dm_lo)
+        return at_m1 + (m_target - 1) * dm_at_k
+
+    kinds = set(r_ll.coll_breakdown) | set(r_hl.coll_breakdown)
+    if m_target > 1:
+        kinds |= set(r_lm.coll_breakdown) | set(r_hm.coll_breakdown)
+    coll = {k: combine(lambda r, k=k: r.coll_breakdown.get(k, 0.0))
+            for k in kinds}
+    return roof.Roofline(
+        flops=combine(lambda r: r.flops),
+        bytes_accessed=combine(lambda r: r.bytes_accessed),
+        coll_bytes=sum(coll.values()),
+        coll_breakdown=coll,
+        peak_memory=0,  # memory comes from the full-depth compile
+    )
+
+
+def analyze_cell(arch: str, shape_name: str, mesh, *, exact: bool = True,
+                 verbose: bool = False):
+    """Full-depth compile (validity + memory) + exact extrapolated costs."""
+    compiled, r_loop, meta = lower_cell(arch, shape_name, mesh,
+                                        verbose=verbose)
+    if not exact:
+        return meta
+    # Costs are extrapolated at microbatches=1: gradient accumulation leaves
+    # per-step FLOPs / HBM bytes / collective bytes unchanged to first order
+    # (same tokens, same math; it only adds 2 f32 passes over the grad
+    # buffer per micro-step). Peak memory DOES depend on it and comes from
+    # the full-depth compile above, which uses MICROBATCHES.
+    r = extrapolated_costs(arch, shape_name, mesh, microbatches=1)
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    model = get_model(cfg)
+    mf_dev = roof.model_flops(cfg, shape, model.batch_tokens(shape)) \
+        / mesh.devices.size
+    meta.update({
+        "flops_per_dev": r.flops,
+        "bytes_per_dev": r.bytes_accessed,
+        "coll_bytes_per_dev": r.coll_bytes,
+        "compute_s": r.compute_s,
+        "memory_s": r.memory_s,
+        "collective_s": r.collective_s,
+        "coll_breakdown": r.coll_breakdown,
+        "useful_flops_ratio": mf_dev / max(r.flops, 1.0),
+        "loop_counted_flops": r_loop.flops,   # kept for reference
+    })
+    terms = {"compute": r.compute_s, "memory": r.memory_s,
+             "collective": r.collective_s}
+    meta["dominant"] = max(terms, key=terms.get)
+    meta["step_s"] = max(terms.values())
+    return meta
+
+
+def run_cells(cells, multi_pod_modes, out_path=None, verbose=False,
+              exact=True):
+    results = []
+    for mp in multi_pod_modes:
+        mesh = mesh_lib.make_production_mesh(multi_pod=mp)
+        for arch, shape_name in cells:
+            tag = f"{arch} × {shape_name} × {'2x16x16' if mp else '16x16'}"
+            print(f"[dryrun] {tag} ...", file=sys.stderr, flush=True)
+            try:
+                meta = analyze_cell(arch, shape_name, mesh, exact=exact,
+                                    verbose=verbose)
+                meta["status"] = "ok"
+                print(f"[dryrun] {tag}: OK compute={meta['compute_s']:.4f}s "
+                      f"memory={meta['memory_s']:.4f}s "
+                      f"coll={meta['collective_s']:.4f}s "
+                      f"dominant={meta['dominant']} "
+                      f"peak={meta['peak_memory_gb']:.2f}GB "
+                      f"(compile {meta['compile_s']}s)",
+                      file=sys.stderr, flush=True)
+            except Exception as e:  # noqa: BLE001 — record and continue
+                meta = {"arch": arch, "shape": shape_name,
+                        "mesh": "2x16x16" if mp else "16x16",
+                        "status": "error", "error": f"{type(e).__name__}: {e}"}
+                print(f"[dryrun] {tag}: FAIL {meta['error']}",
+                      file=sys.stderr, flush=True)
+                if verbose:
+                    traceback.print_exc()
+            results.append(meta)
+            if out_path:  # incremental write (cells are slow; crash-safe)
+                with open(out_path, "w") as f:
+                    json.dump(results, f, indent=1, default=str)
+    if out_path:
+        print(f"[dryrun] wrote {out_path}", file=sys.stderr)
+    return results
+
+
+def all_cells():
+    cells = []
+    for arch in configs.ARCHS:
+        cfg = configs.get_config(arch)
+        for shape in shapes_for(cfg):
+            cells.append((arch, shape.name))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="off")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--verbose", action="store_true")
+    ap.add_argument("--costs", choices=["exact", "loop"], default="exact",
+                    help="exact = unrolled reduced-depth extrapolation; "
+                         "loop = raw cost_analysis (loop bodies counted once)")
+    args = ap.parse_args()
+
+    if args.all:
+        cells = all_cells()
+    else:
+        if not args.arch:
+            ap.error("--arch or --all required")
+        cfg = configs.get_config(args.arch)
+        shapes = ([args.shape] if args.shape
+                  else [s.name for s in shapes_for(cfg)])
+        cells = [(args.arch, s) for s in shapes]
+    mp = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    results = run_cells(cells, mp, args.out, args.verbose,
+                        exact=args.costs == "exact")
+    bad = [r for r in results if r["status"] != "ok"]
+    print(json.dumps(results, indent=1, default=str))
+    sys.exit(1 if bad else 0)
+
+
+if __name__ == "__main__":
+    main()

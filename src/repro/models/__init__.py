@@ -1,0 +1,5 @@
+"""Model zoo: dense GQA, MoE, SSM (RWKV6), hybrid (Zamba2/Mamba2),
+enc-dec (Whisper), VLM (LLaVA) — all pure-functional JAX."""
+from repro.models.registry import ModelAPI, get_model
+
+__all__ = ["ModelAPI", "get_model"]

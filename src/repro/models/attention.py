@@ -1,0 +1,247 @@
+"""Grouped-query attention with RoPE, optional QKV bias, logit softcap,
+sliding-window masking, and a KV cache for decode.
+
+Covers: llama-family (internlm2/yi/mistral-llava), qwen1.5 (QKV bias),
+gemma2 (softcap + local/global alternation), dbrx/phi3.5 (GQA MoE backbones),
+zamba2's shared attention and whisper's self/cross attention (is_causal &
+cross-KV options).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+NEG_INF = -2.3819763e38  # large negative, bf16-safe (matches gemma impls)
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    use_bias: bool = False          # qwen1.5-style QKV bias
+    logit_softcap: float | None = None   # gemma2: 50.0
+    query_scale: float | None = None     # default 1/sqrt(head_dim)
+    use_rope: bool = True                # whisper uses absolute pos instead
+    # context parallelism: shard the QUERY sequence over the TP axis inside
+    # attention (K/V replicated). The right call when n_heads doesn't divide
+    # the TP axis (qwen1.5's 20 heads on TP=16): heads can't shard, so
+    # without this every device computes all heads' S×S probs.
+    seq_shard: bool = False
+
+
+def init(rng, cfg: AttnConfig, dtype=jnp.float32):
+    rq, rk, rv, ro = cm.split(rng, 4)
+    d, h, kh, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    p = {
+        "wq": cm.dense_init(rq, (d, h, hd), (0,), dtype),
+        "wk": cm.dense_init(rk, (d, kh, hd), (0,), dtype),
+        "wv": cm.dense_init(rv, (d, kh, hd), (0,), dtype),
+        "wo": cm.dense_init(ro, (h, hd, d), (0, 1), dtype),
+    }
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kh, hd), dtype)
+        p["bv"] = jnp.zeros((kh, hd), dtype)
+    return p
+
+
+def specs(cfg: AttnConfig):
+    s = {
+        "wq": ("embed", "q_heads", "head_dim"),
+        "wk": ("embed", "kv_heads", "head_dim"),
+        "wv": ("embed", "kv_heads", "head_dim"),
+        "wo": ("q_heads", "head_dim", "embed"),
+    }
+    if cfg.use_bias:
+        s["bq"] = ("q_heads", "head_dim")
+        s["bk"] = ("kv_heads", "head_dim")
+        s["bv"] = ("kv_heads", "head_dim")
+    return s
+
+
+def _qkv(params, cfg: AttnConfig, x, positions):
+    from repro.sharding.rules import constrain
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    if cfg.use_rope:
+        q = cm.apply_rope(q, positions, cfg.rope_theta)
+        k = cm.apply_rope(k, positions, cfg.rope_theta)
+    # pin the layout: batch over DP axes, heads over TP where divisible;
+    # seq_shard puts the query SEQUENCE on the TP axis instead
+    if cfg.seq_shard:
+        q = constrain(q, "batch", "q_seq", None, None,
+                      overrides={"q_seq": "model"})
+    else:
+        q = constrain(q, "batch", None, "q_heads", None)
+    k = constrain(k, "batch", None, "kv_heads", None)
+    v = constrain(v, "batch", None, "kv_heads", None)
+    return q, k, v
+
+
+def _sdpa(cfg: AttnConfig, q, k, v, mask):
+    """q: (b, sq, h, hd); k/v: (b, skv, kh, hd); mask: (b, 1, sq, skv) bool."""
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    group = h // kh
+    scale = cfg.query_scale or (1.0 / math.sqrt(cfg.head_dim))
+    qg = q.reshape(b, sq, kh, group, hd)
+    # f32 accumulation INSIDE the dot: converting afterwards makes XLA
+    # materialize f32 copies of K (measured: a full f32 KV cache temp on
+    # decode cells)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg * scale, k,
+                        preferred_element_type=jnp.float32)
+    if cfg.logit_softcap:
+        logits = cm.softcap(logits, cfg.logit_softcap)
+    # mask: (b|1, 1, sq, skv) -> broadcast over (kh, group)
+    logits = jnp.where(mask[:, :, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(cfg: AttnConfig, q, k, v, *, window: int | None,
+                  q_chunk: int, offset: int = 0, causal: bool = True):
+    """Query-chunked attention (flash-style memory profile in pure jnp):
+    peak logits buffer is (b, kh, g, q_chunk, skv) instead of O(sq·skv).
+    Each chunk sees the full K/V with its own causal/window mask slice.
+    The chunk body is rematerialized — otherwise the scan stashes every
+    chunk's probs for backward (measured 343 GB on qwen prefill_32k)."""
+    b, sq, h, hd = q.shape
+    assert sq % q_chunk == 0, (sq, q_chunk)
+    nq = sq // q_chunk
+
+    @jax.checkpoint
+    def chunk(qi, i):
+        if causal:
+            off = offset + i * q_chunk
+            mask = causal_mask(q_chunk, k.shape[1], window=window, offset=off)
+        else:
+            mask = jnp.ones((1, 1, q_chunk, k.shape[1]), bool)
+        return _sdpa(cfg, qi, k, v, mask)
+
+    qs = q.reshape(b, nq, q_chunk, h, hd)
+
+    def body(carry, inp):
+        qi, i = inp
+        return carry, chunk(qi, i)
+
+    _, out = cm.scan(
+        body, None, (jnp.moveaxis(qs, 1, 0), jnp.arange(nq)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, sq, h, hd)
+
+
+def causal_mask(sq, skv, *, window: int | None = None, offset: int = 0):
+    """(1, 1, sq, skv) bool. offset = absolute position of query 0 minus key 0
+    (for decode: offset = cache_len). window = sliding-window size (gemma2
+    local layers): key position must be within [qpos - window + 1, qpos]."""
+    qpos = jnp.arange(sq)[:, None] + offset
+    kpos = jnp.arange(skv)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m &= kpos > qpos - window
+    return m[None, None]
+
+
+def attend_train(params, cfg: AttnConfig, x, positions, *,
+                 window: int | None = None, q_chunk: int | None = None):
+    q, k, v = _qkv(params, cfg, x, positions)
+    sq = x.shape[1]
+    if q_chunk and sq > q_chunk:
+        out = _sdpa_chunked(cfg, q, k, v, window=window, q_chunk=q_chunk)
+    else:
+        mask = causal_mask(sq, sq, window=window)
+        out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+
+
+# ------------------------------------------------------------------ KV cache
+def init_cache(cfg: AttnConfig, batch, max_len, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def cache_specs():
+    return {"k": ("batch", "kv_seq", "kv_heads", "head_dim"),
+            "v": ("batch", "kv_seq", "kv_heads", "head_dim")}
+
+
+def attend_prefill(params, cfg: AttnConfig, x, positions, cache, *,
+                   window: int | None = None, q_chunk: int | None = None):
+    """Prefill seq into an (empty) cache; returns (out, cache)."""
+    q, k, v = _qkv(params, cfg, x, positions)
+    sq = x.shape[1]
+    cache = {
+        "k": jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), 0, axis=1),
+        "v": jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), 0, axis=1),
+    }
+    if q_chunk and sq > q_chunk:
+        out = _sdpa_chunked(cfg, q, k, v, window=window, q_chunk=q_chunk)
+    else:
+        mask = causal_mask(sq, sq, window=window)
+        out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out,
+                      params["wo"].astype(x.dtype)), cache
+
+
+def attend_decode(params, cfg: AttnConfig, x, cache, cache_len, *,
+                  window: int | None = None):
+    """One-token decode. x: (b, 1, d); cache_len: scalar int32 (tokens already
+    in cache). Returns (out, cache). Attention runs over the whole cache
+    buffer with positions >= cache_len masked out — this keeps shapes static
+    (XLA/pjit-friendly) and lets the kv_seq axis shard over the mesh for
+    long-context decode (partial-softmax combine emerges as psum)."""
+    positions = jnp.full((x.shape[0], 1), cache_len, jnp.int32)
+    q, k, v = _qkv(params, cfg, x, positions)
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), cache_len, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), cache_len, axis=1)
+    skv = ck.shape[1]
+    kpos = jnp.arange(skv)[None, :]
+    valid = kpos <= cache_len
+    if window is not None:
+        valid &= kpos > cache_len - window
+    mask = valid[:, None, None, :][:, :, :, :]       # (1,1,1,skv)
+    mask = jnp.broadcast_to(mask, (x.shape[0], 1, 1, skv))
+    out = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    return (jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype)),
+            {"k": ck, "v": cv})
+
+
+# -------------------------------------------------------- cross attention
+def cross_init(rng, cfg: AttnConfig, dtype=jnp.float32):
+    return init(rng, cfg, dtype)
+
+
+def attend_cross(params, cfg: AttnConfig, x, kv_feats, kv_mask=None):
+    """Whisper decoder cross-attention. kv_feats: (b, s_enc, d)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", kv_feats, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", kv_feats, params["wv"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    sq, skv = x.shape[1], kv_feats.shape[1]
+    if kv_mask is None:
+        mask = jnp.ones((x.shape[0], 1, sq, skv), bool)
+    else:
+        mask = jnp.broadcast_to(kv_mask[:, None, None, :],
+                                (x.shape[0], 1, sq, skv))
+    out = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))

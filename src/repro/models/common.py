@@ -1,0 +1,159 @@
+"""Functional building blocks for the model zoo.
+
+No flax: every module is a pair of pure functions
+  ``init(rng, cfg) -> params``   (nested dict of jnp arrays)
+  ``apply(params, ...) -> out``
+plus a parallel ``specs(cfg)`` tree of *logical axis names* per leaf, which
+``repro.sharding.rules`` maps to mesh ``PartitionSpec``s. init/specs trees are
+structurally identical by construction (tests assert it).
+
+Logical axes used across the zoo:
+  layers, embed (d_model), q_heads, kv_heads, head_dim, mlp (d_ff), vocab,
+  experts, conv, state (SSM), lora, batch, seq, kv_seq
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = Any      # nested dict of arrays
+Specs = Any       # same structure, leaves = tuple[str | None, ...]
+
+
+# ---------------------------------------------------------------- init utils
+def dense_init(rng, shape, in_axes=(0,), dtype=jnp.float32, scale=1.0):
+    """Truncated-normal fan-in init (LeCun-style), matching common LM inits."""
+    fan_in = 1
+    for a in in_axes:
+        fan_in *= shape[a]
+    std = scale / math.sqrt(fan_in)
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, shape, dtype) * std)
+
+
+def split(rng, n):
+    return list(jax.random.split(rng, n))
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(cfg_dim, dtype=jnp.float32):
+    return {"scale": jnp.zeros((cfg_dim,), dtype)}  # stored as (1+scale) factor
+
+
+def rmsnorm_specs():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(params, x, *, eps=1e-6, upcast=True):
+    dt = x.dtype
+    if upcast:
+        x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + params["scale"].astype(x.dtype))).astype(dt)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_specs():
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def layernorm(params, x, *, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * params["scale"].astype(x.dtype)
+            + params["bias"].astype(x.dtype)).astype(dt)
+
+
+# ---------------------------------------------------------------- embedding
+def embed_init(rng, vocab, dim, dtype=jnp.float32):
+    return {"table": jax.random.normal(rng, (vocab, dim), dtype)}
+
+
+def embed_specs():
+    # "table_embed" (not "embed"): the table's d_model axis must stay
+    # replicated — see repro.sharding.rules.BASE_RULES
+    return {"table": ("vocab", "table_embed")}
+
+
+def embed_lookup(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def embed_logits(params, x, *, softcap: float | None = None):
+    logits = jnp.einsum("...d,vd->...v", x,
+                        params["table"].astype(x.dtype))
+    if softcap:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return logits
+
+
+# ---------------------------------------------------------------- activations
+def swiglu(gate, up):
+    return jax.nn.silu(gate) * up
+
+
+def geglu(gate, up):
+    return jax.nn.gelu(gate, approximate=True) * up
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., s, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- scan
+# Global switch: when True, every model scan fully unrolls. Used by the
+# dry-run's cost pass — XLA's cost_analysis counts while-loop bodies ONCE
+# (not × trip count), so exact FLOP/byte/collective counting compiles small
+# reduced-layer configs with straight-line code and extrapolates linearly in
+# the layer count (launch/dryrun.py::extrapolated_costs).
+UNROLL_ALL = False
+
+
+def scan(f, init, xs, length=None):
+    return jax.lax.scan(f, init, xs, length=length,
+                        unroll=True if UNROLL_ALL else 1)
+
+
+# ---------------------------------------------------------------- tree helpers
+def tree_cast(params, dtype):
+    return jax.tree.map(
+        lambda a: a.astype(dtype) if jnp.issubdtype(a.dtype, jnp.floating) else a,
+        params)
+
+
+def stack_layer_trees(trees):
+    """Stack a list of identical-structure param trees along a new leading
+    'layers' axis (for lax.scan over layers)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def add_layer_axis_to_specs(specs):
+    return jax.tree.map(lambda ax: ("layers",) + tuple(ax), specs,
+                        is_leaf=lambda x: isinstance(x, tuple))

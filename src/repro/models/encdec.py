@@ -1,0 +1,247 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The conv frontend is a STUB per the assignment: ``input_specs()`` feeds
+precomputed frame embeddings (B, n_frames, d_model) directly to the encoder.
+Encoder: bidirectional pre-LN transformer + sinusoidal positions.
+Decoder: causal self-attn (KV cache) + cross-attn over encoder output
+(cross-KV computed once at prefill), learned positions, GELU MLPs,
+LayerNorms with bias, logits tied to the decoder token embedding.
+
+Shape mapping for the LM grid (DESIGN.md): train_4k → enc S frames + dec S/4
+tokens; prefill_32k → enc S frames + dec prompt S/32; decode_32k → 1 new dec
+token against enc 32768; long_500k skipped (full attention).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlp_lib
+
+DEC_RATIO_TRAIN = 4     # dec tokens = seq_len // 4 for train cells
+DEC_RATIO_PREFILL = 32
+
+
+def _attn_cfg(cfg: ModelConfig, causal: bool) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, use_bias=True, use_rope=False)
+
+
+def dec_len(cfg: ModelConfig, seq_len: int, kind: str) -> int:
+    if kind == "train":
+        return max(64, seq_len // DEC_RATIO_TRAIN)
+    return max(64, seq_len // DEC_RATIO_PREFILL)
+
+
+def _enc_layer_init(rng, cfg, dtype):
+    ra, rm = cm.split(rng, 2)
+    return {"ln1": cm.layernorm_init(cfg.d_model, dtype),
+            "attn": attn.init(ra, _attn_cfg(cfg, False), dtype),
+            "ln2": cm.layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_lib.plain_init(rm, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _dec_layer_init(rng, cfg, dtype):
+    ra, rc, rm = cm.split(rng, 3)
+    return {"ln1": cm.layernorm_init(cfg.d_model, dtype),
+            "self_attn": attn.init(ra, _attn_cfg(cfg, True), dtype),
+            "ln_cross": cm.layernorm_init(cfg.d_model, dtype),
+            "cross_attn": attn.init(rc, _attn_cfg(cfg, False), dtype),
+            "ln2": cm.layernorm_init(cfg.d_model, dtype),
+            "mlp": mlp_lib.plain_init(rm, cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _enc_layer_specs(cfg):
+    return {"ln1": cm.layernorm_specs(),
+            "attn": attn.specs(_attn_cfg(cfg, False)),
+            "ln2": cm.layernorm_specs(), "mlp": mlp_lib.plain_specs()}
+
+
+def _dec_layer_specs(cfg):
+    return {"ln1": cm.layernorm_specs(),
+            "self_attn": attn.specs(_attn_cfg(cfg, True)),
+            "ln_cross": cm.layernorm_specs(),
+            "cross_attn": attn.specs(_attn_cfg(cfg, False)),
+            "ln2": cm.layernorm_specs(), "mlp": mlp_lib.plain_specs()}
+
+
+def init_params(rng, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    re, ren, rde, rp = cm.split(rng, 4)
+    return {
+        "embed": cm.embed_init(re, cfg.vocab_size, cfg.d_model, dtype),
+        "dec_pos": cm.dense_init(rp, (8192, cfg.d_model), (1,), dtype),
+        "enc_layers": cm.stack_layer_trees(
+            [_enc_layer_init(r, cfg, dtype)
+             for r in cm.split(ren, cfg.n_enc_layers)]),
+        "enc_final": cm.layernorm_init(cfg.d_model, dtype),
+        "dec_layers": cm.stack_layer_trees(
+            [_dec_layer_init(r, cfg, dtype)
+             for r in cm.split(rde, cfg.n_dec_layers)]),
+        "dec_final": cm.layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_specs(cfg: ModelConfig):
+    return {
+        "embed": cm.embed_specs(),
+        "dec_pos": (None, "embed"),
+        "enc_layers": cm.add_layer_axis_to_specs(_enc_layer_specs(cfg)),
+        "enc_final": cm.layernorm_specs(),
+        "dec_layers": cm.add_layer_axis_to_specs(_dec_layer_specs(cfg)),
+        "dec_final": cm.layernorm_specs(),
+    }
+
+
+def _sinusoid(n, d, dtype):
+    pos = jnp.arange(n, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encode(params, cfg: ModelConfig, frames):
+    """frames: (B, T, d) stub frame embeddings -> (B, T, d)."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = frames.astype(dt) + _sinusoid(frames.shape[1], cfg.d_model, dt)
+    acfg = _attn_cfg(cfg, False)
+    from repro.models.transformer import Q_CHUNK
+
+    from repro.sharding.rules import constrain
+
+    def one(h, p):
+        x = cm.layernorm(p["ln1"], h)
+        # bidirectional attention; q-chunked above Q_CHUNK (a 32k encoder
+        # would otherwise materialize S² probs — measured 141 GB/device)
+        q, k, v = attn._qkv(p["attn"], acfg, x, None)
+        if x.shape[1] > Q_CHUNK:
+            a = attn._sdpa_chunked(acfg, q, k, v, window=None,
+                                   q_chunk=Q_CHUNK, causal=False)
+        else:
+            mask = jnp.ones((1, 1, x.shape[1], x.shape[1]), bool)
+            a = attn._sdpa(acfg, q, k, v, mask)
+        h = h + jnp.einsum("bshk,hkd->bsd", a,
+                           p["attn"]["wo"].astype(x.dtype))
+        h = h + mlp_lib.plain_apply(p["mlp"], cm.layernorm(p["ln2"], h))
+        return constrain(h, "batch", None, None), None
+
+    fn = jax.checkpoint(one) if cfg.remat != "none" else one
+    h, _ = cm.scan(fn, h, params["enc_layers"])
+    return cm.layernorm(params["enc_final"], h)
+
+
+def _dec_block(p, cfg, acfg, h, positions, enc_out, self_mode, cache=None,
+               cache_len=None):
+    """self_mode: 'train' (causal full-seq) or 'decode' (1 token + cache)."""
+    x = cm.layernorm(p["ln1"], h)
+    if self_mode == "train":
+        a = attn.attend_train(p["self_attn"], acfg, x, positions)
+        nkv = None
+    elif self_mode == "prefill":
+        a, nkv = attn.attend_prefill(p["self_attn"], acfg, x, positions,
+                                     cache)
+    else:
+        a, nkv = attn.attend_decode(p["self_attn"], acfg, x, cache, cache_len)
+    h = h + a
+    c = attn.attend_cross(p["cross_attn"], acfg,
+                          cm.layernorm(p["ln_cross"], h), enc_out)
+    h = h + c
+    h = h + mlp_lib.plain_apply(p["mlp"], cm.layernorm(p["ln2"], h))
+    from repro.sharding.rules import constrain
+    return constrain(h, "batch", None, None), nkv
+
+
+def forward_train(params, cfg: ModelConfig, batch):
+    """batch: {'frames': (B,T,d), 'dec_tokens': (B,S) int32}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["dec_tokens"]
+    b, s = tokens.shape
+    h = (cm.embed_lookup(params["embed"], tokens).astype(dt)
+         + params["dec_pos"][:s].astype(dt))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = _attn_cfg(cfg, True)
+
+    def one(h, p):
+        h, _ = _dec_block(p, cfg, acfg, h, positions, enc_out, "train")
+        return h, None
+
+    fn = jax.checkpoint(one) if cfg.remat != "none" else one
+    h, _ = cm.scan(fn, h, params["dec_layers"])
+    h = cm.layernorm(params["dec_final"], h)
+    return cm.embed_logits(params["embed"], h), jnp.zeros((), jnp.float32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int, dtype=jnp.bfloat16):
+    acfg = _attn_cfg(cfg, True)
+    one = attn.init_cache(acfg, batch, max_len, dtype)
+    return {
+        "self_kv": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_dec_layers,) + a.shape, a.dtype), one),
+        "enc_out": jnp.zeros((batch, enc_len, cfg.d_model), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_specs(cfg: ModelConfig):
+    return {"self_kv": cm.add_layer_axis_to_specs(attn.cache_specs()),
+            "enc_out": ("batch", "kv_seq", "embed"),
+            "len": ()}
+
+
+def prefill(params, cfg: ModelConfig, batch, max_len: int,
+            cache_dtype=jnp.bfloat16):
+    """Encode frames + run the decoder prompt. batch: {'frames', 'dec_tokens'}."""
+    enc_out = encode(params, cfg, batch["frames"])
+    dt = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["dec_tokens"]
+    b, s = tokens.shape
+    h = (cm.embed_lookup(params["embed"], tokens).astype(dt)
+         + params["dec_pos"][:s].astype(dt))
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    acfg = _attn_cfg(cfg, True)
+    empty = attn.init_cache(acfg, b, max_len, cache_dtype)
+
+    def one(h, p):
+        h, kv = _dec_block(p, cfg, acfg, h, positions, enc_out, "prefill",
+                           cache=empty)
+        return h, kv
+
+    h, kvs = cm.scan(one, h, params["dec_layers"])
+    h = cm.layernorm(params["dec_final"], h)
+    logits = cm.embed_logits(params["embed"], h[:, -1:])
+    return logits, {"self_kv": kvs,
+                    "enc_out": enc_out.astype(cache_dtype),
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    dt = jnp.dtype(cfg.compute_dtype)
+    b = token.shape[0]
+    cache_len = state["len"]
+    h = (cm.embed_lookup(params["embed"], token).astype(dt)
+         + jax.lax.dynamic_slice_in_dim(params["dec_pos"], cache_len, 1,
+                                        axis=0).astype(dt))
+    acfg = _attn_cfg(cfg, True)
+    enc_out = state["enc_out"].astype(dt)
+
+    def one(h, xs):
+        p, kv = xs
+        h, nkv = _dec_block(p, cfg, acfg, h, None, enc_out, "decode",
+                            cache=kv, cache_len=cache_len)
+        return h, nkv
+
+    h, nkvs = cm.scan(one, h, (params["dec_layers"], state["self_kv"]))
+    h = cm.layernorm(params["dec_final"], h)
+    logits = cm.embed_logits(params["embed"], h)
+    return logits, {"self_kv": nkvs, "enc_out": state["enc_out"],
+                    "len": cache_len + 1}

@@ -1,0 +1,182 @@
+"""Chunked gated linear recurrence — shared engine for Mamba2 (SSD, scalar
+per-head decay) and RWKV6 (vector per-channel decay + bonus).
+
+Recurrence (per head, state S ∈ R^{dk×dv}):
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    mamba/"inclusive":  y_t = q_tᵀ S_t
+    rwkv/"bonus":       y_t = q_tᵀ (S_{t-1} + diag(u ⊙ k_t)·v_t-outer)
+
+Training uses the chunked parallel form. Numerical design: the naive GLA
+factorization (q·e^{cum}) @ (k·e^{-cum})ᵀ overflows for strong decays
+(Mamba2 log-decays reach -10/step). Here every exponential has a
+NON-POSITIVE exponent, so the math is stable for arbitrary decay strength:
+  * cross-chunk state: q·e^{cum} (≤0), k·e^{total-cum} (≤0), state×e^{total}
+  * intra-chunk scores use a sub-block decomposition (secondary chunking à la
+    GLA): diagonal c×c sub-blocks compute exact per-channel log-space
+    differences (small (c,c,dk) tensors); off-diagonal sub-block pairs (i>j)
+    factor through the block-j end reference:
+        cum_t - cum_s = (cum_t - end_j) + (end_j - cum_s),  both terms ≤ 0
+    giving bounded matmuls on the MXU.
+All math in f32. Shapes: q,k,logw: (B,H,T,dk); v: (B,H,T,dv); u: (H,dk)|None.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+SUB = 16  # sub-block (secondary chunk) size
+
+
+def _intra_scores(qc, kc, qcum, kcum, *, mode: str, sub: int = SUB):
+    """Stable intra-chunk score matrix.
+
+    qc, kc: (..., C, dk). kcum: inclusive cumulative log-decay; qcum is the
+    q-side reference (== kcum for inclusive mode, kcum - logw for bonus mode,
+    i.e. decay only through t-1). Returns scores: (..., C, C) with
+    scores[t,s] = Σ_d q[t,d] k[s,d] e^{qcum[t,d]-kcum[s,d]}, causally masked
+    (s<=t inclusive, s<t bonus).
+    """
+    c_total = qc.shape[-2]
+    dk = qc.shape[-1]
+    sub = min(sub, c_total)
+    nb = c_total // sub
+    lead = qc.shape[:-2]
+    qs = qc.reshape(lead + (nb, sub, dk))
+    ks = kc.reshape(lead + (nb, sub, dk))
+    qcs = qcum.reshape(lead + (nb, sub, dk))
+    kcs = kcum.reshape(lead + (nb, sub, dk))
+    ends = kcs[..., -1:, :]                     # (..., nb, 1, dk)
+
+    # --- diagonal blocks: exact per-channel log-space differences
+    diff = qcs[..., :, None, :] - kcs[..., None, :, :]    # (...,nb,c,c,dk)
+    tri = jnp.tril(jnp.ones((sub, sub), bool),
+                   k=0 if mode == "inclusive" else -1)
+    # mask exponent before exp to avoid inf from upper triangle
+    diff = jnp.where(tri[..., None], diff, -jnp.inf)
+    diag_scores = jnp.einsum("...tsd,...td,...sd->...ts",
+                             jnp.exp(diff), qs, ks)       # (...,nb,c,c)
+
+    if nb == 1:
+        return diag_scores[..., 0, :, :]
+
+    # --- off-diagonal pairs (i > j): all exponents <= 0
+    rows = []
+    for i in range(nb):
+        row = []
+        for j in range(nb):
+            if j == i:
+                row.append(diag_scores[..., i, :, :])
+            elif j < i:
+                qd = qs[..., i, :, :] * jnp.exp(
+                    qcs[..., i, :, :] - ends[..., j, :, :])
+                kd = ks[..., j, :, :] * jnp.exp(
+                    ends[..., j, :, :] - kcs[..., j, :, :])
+                row.append(jnp.einsum("...td,...sd->...ts", qd, kd))
+            else:
+                row.append(jnp.zeros(lead + (sub, sub), qc.dtype))
+        rows.append(jnp.concatenate(row, axis=-1))
+    return jnp.concatenate(rows, axis=-2)                 # (..., C, C)
+
+
+@partial(jax.jit, static_argnames=("chunk", "mode"))
+def chunked_gla(q, k, v, logw, *, u=None, initial_state=None,
+                chunk: int = 64, mode: str = "inclusive"):
+    """Returns (y: (B,H,T,dv), final_state: (B,H,dk,dv))."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    if mode not in ("inclusive", "bonus"):
+        raise ValueError(mode)
+    t_orig = t
+    pad = (-t) % chunk
+    if pad:
+        # inert tail: q=k=v=0 (no output/state contribution), logw=0
+        # (decay 1 ⇒ state passes through unchanged)
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        logw = jnp.pad(jnp.broadcast_to(
+            logw, (b, h, t, logw.shape[-1])),
+            ((0, 0), (0, 0), (0, pad), (0, 0)))
+        t = t + pad
+    nc = t // chunk
+    f32 = jnp.float32
+    from repro.sharding.rules import constrain
+    con = lambda a: constrain(a, "batch", "heads", None, None)
+    qf, kf, vf = con(q.astype(f32)), con(k.astype(f32)), con(v.astype(f32))
+    lw = jnp.broadcast_to(logw.astype(f32), (b, h, t, dk))
+
+    resh = lambda a, d: a.reshape(b, h, nc, chunk, d)
+    qc, kc, vc, lwc = resh(qf, dk), resh(kf, dk), resh(vf, dv), resh(lw, dk)
+    cum = jnp.cumsum(lwc, axis=-2)                     # inclusive cumsum
+    total = cum[..., -1:, :]                           # (B,H,nc,1,dk)
+
+    # decay applied to the incoming state when it contributes to y_t
+    q_decay = cum if mode == "inclusive" else cum - lwc
+    qd_state = qc * jnp.exp(q_decay)                   # exponent <= 0
+    k_tail = kc * jnp.exp(total - cum)                 # exponent <= 0
+
+    scores = _intra_scores(qc, kc, q_decay, cum, mode=mode)
+    y_intra = jnp.einsum("...ts,...sv->...tv", scores, vc)
+    if mode == "bonus":
+        uu = (u if u is not None else jnp.ones((h, dk), f32)).astype(f32)
+        diag = jnp.einsum("bhntk,hk,bhntk->bhnt", qc, uu, kc)
+        y_intra = y_intra + diag[..., None] * vc
+
+    s0 = (jnp.zeros((b, h, dk, dv), f32) if initial_state is None
+          else initial_state.astype(f32))
+
+    def body(s, inp):
+        qd_c, ktail_c, v_c, tot_c = inp
+        y_inter = jnp.einsum("bhtk,bhkv->bhtv", qd_c, s)
+        s_new = jnp.exp(tot_c)[:, :, 0, :, None] * s + jnp.einsum(
+            "bhtk,bhtv->bhkv", ktail_c, v_c)
+        return s_new, y_inter
+
+    move = lambda a: jnp.moveaxis(a, 2, 0)             # nc to scan axis
+    final, y_inter = cm.scan(
+        body, s0, (move(qd_state), move(k_tail), move(vc), move(total)))
+    y_inter = jnp.moveaxis(y_inter, 0, 2)
+    y = (y_intra + y_inter).reshape(b, h, t, dv)[:, :, :t_orig]
+    return y.astype(q.dtype), final
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def gla_decode_step(q, k, v, logw, state, *, u=None, mode: str = "inclusive"):
+    """One-token recurrence. q,k,logw: (B,H,dk); v: (B,H,dv);
+    state: (B,H,dk,dv). Returns (y: (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    qf, kf, vf = q.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(jnp.broadcast_to(logw.astype(f32), qf.shape))
+    kv = kf[..., :, None] * vf[..., None, :]           # (B,H,dk,dv)
+    s = state.astype(f32)
+    if mode == "inclusive":
+        s_new = w[..., None] * s + kv
+        y = jnp.einsum("bhk,bhkv->bhv", qf, s_new)
+    else:
+        bonus = (u.astype(f32) if u is not None
+                 else jnp.ones(qf.shape[1:], f32))
+        y = jnp.einsum("bhk,bhkv->bhv", qf, s + bonus[..., None] * kv)
+        s_new = w[..., None] * s + kv
+    return y.astype(q.dtype), s_new
+
+
+def reference_recurrence(q, k, v, logw, *, u=None, initial_state=None,
+                         mode: str = "inclusive"):
+    """O(T) scan oracle for tests (matches chunked_gla in f32)."""
+    b, h, t, dk = q.shape
+    dv = v.shape[-1]
+    s0 = (jnp.zeros((b, h, dk, dv), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    lw = jnp.broadcast_to(logw, (b, h, t, dk))
+
+    def body(s, inp):
+        qt, kt, vt, lwt = inp
+        y, s = gla_decode_step(qt, kt, vt, lwt, s, u=u, mode=mode)
+        return s, y
+
+    mv = lambda a: jnp.moveaxis(a, 2, 0)
+    final, ys = cm.scan(body, s0, (mv(q), mv(k), mv(v), mv(lw)))
+    return jnp.moveaxis(ys, 0, 2), final

@@ -1,0 +1,168 @@
+"""Mamba2 (SSD) block — zamba2's backbone mixer.
+
+Structure (Mamba2 paper, arXiv:2405.21060, simplified to ngroups=1):
+  in_proj -> [z (gate), x, B, C, dt]; depthwise causal conv (window 4) over
+  (x,B,C); SSD recurrence with per-head scalar decay exp(-exp(A_log)·dt);
+  +D·x skip; gated RMSNorm; out_proj.
+
+Training uses the chunked GLA engine; decode keeps (conv_state, ssm_state).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import gla
+
+
+@dataclasses.dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64
+    head_dim: int = 64
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def init(rng, cfg: Mamba2Config, dtype=jnp.float32):
+    r_in, r_conv, r_out, r_dt = cm.split(rng, 4)
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    proj_out = 2 * di + 2 * ds + nh   # z, x, B, C, dt
+    return {
+        "w_in": cm.dense_init(r_in, (cfg.d_model, proj_out), (0,), dtype),
+        "conv_w": cm.dense_init(r_conv, (cfg.conv_width, di + 2 * ds), (0,),
+                                dtype, scale=1.0),
+        "conv_b": jnp.zeros((di + 2 * ds,), dtype),
+        "a_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=dtype)),
+        "dt_bias": jnp.zeros((nh,), dtype),
+        "d_skip": jnp.ones((nh,), dtype),
+        "norm": cm.rmsnorm_init(di, dtype),
+        "w_out": cm.dense_init(r_out, (di, cfg.d_model), (0,), dtype),
+    }
+
+
+def specs(cfg: Mamba2Config):
+    return {
+        "w_in": ("embed", "mlp"),
+        "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",),
+        "a_log": ("heads",),
+        "dt_bias": ("heads",),
+        "d_skip": ("heads",),
+        "norm": cm.rmsnorm_specs(),
+        "w_out": ("mlp", "embed"),
+    }
+
+
+def _split_proj(cfg: Mamba2Config, proj):
+    di, ds, nh = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * ds]
+    dt = proj[..., di + di + 2 * ds:]
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: Mamba2Config, xbc, conv_w, conv_b, conv_state=None):
+    """Depthwise causal conv, width W. xbc: (b, s, c). conv_state: (b, W-1, c)
+    carries the last W-1 inputs for decode continuity."""
+    w = cfg.conv_width
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], w - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1], :] * conv_w[i].astype(xbc.dtype)
+              for i in range(w))
+    out = jax.nn.silu(out + conv_b.astype(xbc.dtype))
+    new_state = full[:, -(w - 1):, :]
+    return out, new_state
+
+
+def _ssd_inputs(cfg: Mamba2Config, params, xbc, dt):
+    from repro.sharding.rules import constrain
+    di, ds, nh, hd = cfg.d_inner, cfg.d_state, cfg.n_heads, cfg.head_dim
+    x = constrain(xbc[..., :di], "batch", None, "mlp")
+    bmat = xbc[..., di:di + ds]
+    cmat = xbc[..., di + ds:]
+    b, s, _ = x.shape
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (b,s,nh)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))              # (nh,)
+    logw = (dt * a).transpose(0, 2, 1)[..., None]                  # (b,nh,s,1)
+    xh = constrain(x.reshape(b, s, nh, hd).transpose(0, 2, 1, 3),
+                   "batch", "heads", None, None)                   # (b,nh,s,hd)
+    # dt scales the input (ZOH discretization): k = B, v = dt*x
+    v = xh * dt.transpose(0, 2, 1)[..., None].astype(xh.dtype)
+    k = jnp.broadcast_to(bmat[:, None], (b, nh, s, ds)).astype(xh.dtype)
+    q = jnp.broadcast_to(cmat[:, None], (b, nh, s, ds)).astype(xh.dtype)
+    return q, k, v, logw, xh
+
+
+def _finish(cfg: Mamba2Config, params, y, xh, z):
+    b, nh, s, hd = y.shape
+    y = y + params["d_skip"].astype(y.dtype)[None, :, None, None] * xh
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    y = cm.rmsnorm(params["norm"], y * jax.nn.silu(z))
+    return jnp.einsum("bsd,de->bse", y, params["w_out"].astype(y.dtype))
+
+
+def apply_train(params, cfg: Mamba2Config, x):
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, _ = _causal_conv(cfg, xbc, params["conv_w"], params["conv_b"])
+    q, k, v, logw, xh = _ssd_inputs(cfg, params, xbc, dt)
+    y, _ = gla.chunked_gla(q, k, v, logw, chunk=cfg.chunk, mode="inclusive")
+    return _finish(cfg, params, y, xh, z)
+
+
+def init_state(cfg: Mamba2Config, batch, dtype=jnp.float32):
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+        "ssm": jnp.zeros((batch, cfg.n_heads, cfg.d_state, cfg.head_dim),
+                         jnp.float32),
+    }
+
+
+def state_specs():
+    return {"conv": ("batch", None, "mlp"),
+            "ssm": ("batch", "heads", None, None)}
+
+
+def apply_prefill(params, cfg: Mamba2Config, x, state):
+    """Full-sequence forward that also returns the post-sequence state
+    (conv tail + SSD final state) for subsequent decode."""
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(cfg, xbc, params["conv_w"],
+                                   params["conv_b"], state["conv"])
+    q, k, v, logw, xh = _ssd_inputs(cfg, params, xbc, dt)
+    y, ssm = gla.chunked_gla(q, k, v, logw, initial_state=state["ssm"],
+                             chunk=cfg.chunk, mode="inclusive")
+    return _finish(cfg, params, y, xh, z), {"conv": conv_state, "ssm": ssm}
+
+
+def apply_decode(params, cfg: Mamba2Config, x, state):
+    """x: (b, 1, d). Returns (out, new_state)."""
+    proj = jnp.einsum("bsd,de->bse", x, params["w_in"].astype(x.dtype))
+    z, xbc, dt = _split_proj(cfg, proj)
+    xbc, conv_state = _causal_conv(cfg, xbc, params["conv_w"],
+                                   params["conv_b"], state["conv"])
+    q, k, v, logw, xh = _ssd_inputs(cfg, params, xbc, dt)
+    y, ssm = gla.gla_decode_step(q[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                 logw[:, :, 0], state["ssm"],
+                                 mode="inclusive")
+    out = _finish(cfg, params, y[:, :, None, :], xh, z)
+    return out, {"conv": conv_state, "ssm": ssm}

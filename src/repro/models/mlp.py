@@ -1,0 +1,51 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU, llama/gemma-style) and plain
+(GELU, whisper-style)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+from repro.models import common as cm
+
+
+def gated_init(rng, d_model, d_ff, dtype=jnp.float32):
+    rg, ru, rd = cm.split(rng, 3)
+    return {
+        "w_gate": cm.dense_init(rg, (d_model, d_ff), (0,), dtype),
+        "w_up": cm.dense_init(ru, (d_model, d_ff), (0,), dtype),
+        "w_down": cm.dense_init(rd, (d_ff, d_model), (0,), dtype),
+    }
+
+
+def gated_specs():
+    return {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+            "w_down": ("mlp", "embed")}
+
+
+def gated_apply(params, x, *, activation="silu"):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"].astype(x.dtype))
+    act = cm.swiglu(g, u) if activation == "silu" else cm.geglu(g, u)
+    return jnp.einsum("bsf,fd->bsd", act, params["w_down"].astype(x.dtype))
+
+
+def plain_init(rng, d_model, d_ff, dtype=jnp.float32):
+    r1, r2 = cm.split(rng, 2)
+    return {
+        "w_in": cm.dense_init(r1, (d_model, d_ff), (0,), dtype),
+        "b_in": jnp.zeros((d_ff,), dtype),
+        "w_out": cm.dense_init(r2, (d_ff, d_model), (0,), dtype),
+        "b_out": jnp.zeros((d_model,), dtype),
+    }
+
+
+def plain_specs():
+    return {"w_in": ("embed", "mlp"), "b_in": ("mlp",),
+            "w_out": ("mlp", "embed"), "b_out": ("embed",)}
+
+
+def plain_apply(params, x):
+    h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(x.dtype))
+    h = jax.nn.gelu(h + params["b_in"].astype(x.dtype), approximate=True)
+    return (jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(x.dtype))
+            + params["b_out"].astype(x.dtype))

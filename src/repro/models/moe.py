@@ -1,0 +1,125 @@
+"""Mixture-of-Experts FFN: top-k softmax router + GROUPED capacity-bounded
+dispatch (GShard, arXiv:2006.16668).
+
+Tokens are reshaped into groups of ``group_size``; each group scatters into
+per-expert capacity buffers via one-hot einsums (MXU-friendly — the TPU
+idiom for MoE dispatch) and expert FFNs run vmapped over the expert axis,
+sharded over the mesh "model"/EP axis (16 experts ↔ the 16-way model axis of
+the production mesh). Results are combined with router weights; capacity-
+dropped tokens fall through via the residual stream.
+
+Grouping bounds both the dispatch-tensor footprint (G·S·E·C) and its einsum
+FLOPs (2·T·S·k·cf·d — linear in group size), unlike a single global group
+whose capacity makes dispatch quadratic in batch (measured: 3.5 TB/device
+peak on dbrx-132b before grouping; 84 MB/device after).
+
+An aux load-balancing loss (Switch §2.2, computed per group then averaged)
+is returned alongside.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    d_model: int
+    d_ff: int                 # per-expert hidden
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    activation: str = "silu"
+    group_size: int = 256     # tokens per dispatch group
+
+
+def init(rng, cfg: MoEConfig, dtype=jnp.float32):
+    rr, rg, ru, rd = cm.split(rng, 4)
+    e, d, f = cfg.n_experts, cfg.d_model, cfg.d_ff
+    return {
+        "router": cm.dense_init(rr, (d, e), (0,), dtype),
+        "w_gate": cm.dense_init(rg, (e, d, f), (1,), dtype),
+        "w_up": cm.dense_init(ru, (e, d, f), (1,), dtype),
+        "w_down": cm.dense_init(rd, (e, f, d), (1,), dtype),
+    }
+
+
+def specs(cfg: MoEConfig):
+    return {
+        "router": ("embed", None),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_up": ("experts", "embed", "mlp"),
+        "w_down": ("experts", "mlp", "embed"),
+    }
+
+
+def group_capacity(cfg: MoEConfig, group: int) -> int:
+    cap = int(cfg.capacity_factor * group * cfg.top_k / cfg.n_experts)
+    return max(8, -(-cap // 8) * 8)  # pad to sublane multiple
+
+
+def apply(params, cfg: MoEConfig, x):
+    """x: (b, s, d) -> (out, aux_loss). Routing in f32 for stability."""
+    b, s, d = x.shape
+    n_tok = b * s
+    sg = min(cfg.group_size, n_tok)
+    assert n_tok % sg == 0, (n_tok, sg)
+    g = n_tok // sg
+    cap = group_capacity(cfg, sg)
+    from repro.sharding.rules import constrain
+    xt = constrain(x.reshape(g, sg, d), "batch", None, None)
+
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                   # (g,s,e)
+    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)     # (g,s,k)
+    # renormalize the selected gates (dbrx/mixtral convention)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, k) inside its expert's per-group buffer
+    onehot = jax.nn.one_hot(gate_idx, cfg.n_experts,
+                            dtype=jnp.int32)                  # (g,s,k,e)
+    flat = onehot.reshape(g, sg * cfg.top_k, cfg.n_experts)
+    pos = (jnp.cumsum(flat, axis=1) - flat).reshape(
+        g, sg, cfg.top_k, cfg.n_experts)
+    pos = jnp.sum(pos * onehot, axis=-1)                      # (g,s,k)
+    keep = pos < cap
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # (g,s,e,c): a token occupies at most one (e,c) slot per k; sum over k
+    disp = jnp.einsum(
+        "gske,gskc->gsec",
+        (onehot * keep[..., None]).astype(x.dtype),
+        jax.nn.one_hot(pos, cap, dtype=x.dtype))
+    expert_in = constrain(
+        jnp.einsum("gsec,gsd->egcd", disp, xt),               # (e,g,c,d)
+        "experts", "batch", None, None)
+
+    # expert FFN, vmapped over the (sharded) expert axis
+    def ffn(wg, wu, wd, h):
+        gate = jnp.einsum("gcd,df->gcf", h, wg.astype(h.dtype))
+        up = jnp.einsum("gcd,df->gcf", h, wu.astype(h.dtype))
+        a = cm.swiglu(gate, up) if cfg.activation == "silu" \
+            else cm.geglu(gate, up)
+        return jnp.einsum("gcf,fd->gcd", a, wd.astype(h.dtype))
+
+    expert_out = jax.vmap(ffn)(params["w_gate"], params["w_up"],
+                               params["w_down"], expert_in)   # (e,g,c,d)
+
+    combine = jnp.einsum("gsec,gse->gsec", disp,
+                         jnp.einsum("gske,gsk->gse",
+                                    onehot.astype(gate_vals.dtype),
+                                    gate_vals).astype(x.dtype))
+    out = jnp.einsum("gsec,egcd->gsd", combine, expert_out)
+    out = out.reshape(b, s, d)
+
+    # Switch aux loss: e * Σ_e (frac tokens to e) * (mean router prob e)
+    frac = jnp.mean(jnp.sum(onehot.astype(jnp.float32), axis=2),
+                    axis=(0, 1))
+    pmean = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.n_experts * jnp.sum(frac / cfg.top_k * pmean)
+    return out, aux

@@ -1,0 +1,157 @@
+"""Model registry: one uniform interface over all zoo families.
+
+  model = get_model(cfg)
+  model.init_params / abstract_params / param_specs
+  model.forward_train(params, batch)        batch dict (family-specific keys)
+  model.prefill(params, batch, max_len)
+  model.decode_step(params, token, state)
+  model.init_decode_state / decode_state_specs
+  model.input_specs(shape)                  ShapeDtypeStruct stand-ins
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, rwkv6_model, transformer, zamba2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init_params: Callable
+    abstract_params: Callable
+    param_specs: Callable
+    forward_train: Callable       # (params, batch) -> (logits, aux)
+    prefill: Callable             # (params, batch, max_len) -> (logits, state)
+    decode_step: Callable         # (params, token, state) -> (logits, state)
+    init_decode_state: Callable   # (batch, max_len) -> state
+    decode_state_specs: Callable
+    input_specs: Callable         # (ShapeConfig) -> dict of SDS
+
+    def batch_tokens(self, shape: ShapeConfig) -> int:
+        """Tokens processed per step for this (cfg, shape) — roofline unit."""
+        if shape.kind == "train":
+            if self.cfg.family == "audio":
+                return shape.global_batch * encdec.dec_len(
+                    self.cfg, shape.seq_len, "train")
+            return shape.global_batch * shape.seq_len
+        if shape.kind == "prefill":
+            n = shape.global_batch * shape.seq_len
+            if self.cfg.family == "audio":
+                n += shape.global_batch * encdec.dec_len(
+                    self.cfg, shape.seq_len, "prefill")
+            return n
+        return shape.global_batch  # decode: 1 token per sequence
+
+
+def _tok_specs(shape: ShapeConfig, seq):
+    return jax.ShapeDtypeStruct((shape.global_batch, seq), jnp.int32)
+
+
+def _decoder_like(cfg: ModelConfig, mod) -> ModelAPI:
+    n_img = cfg.n_image_tokens
+
+    def forward_train(params, batch):
+        return mod.forward_train(params, cfg, batch["tokens"],
+                                 batch.get("extra_embeds"))
+
+    def prefill(params, batch, max_len):
+        return mod.prefill(params, cfg, batch["tokens"], max_len,
+                           extra_embeds=batch.get("extra_embeds"))
+
+    def decode_step(params, token, state):
+        return mod.decode_step(params, cfg, token, state)
+
+    def init_decode_state(batch, max_len):
+        return mod.init_decode_state(cfg, batch, max_len)
+
+    def input_specs(shape: ShapeConfig):
+        dt = jnp.dtype(cfg.compute_dtype)
+        if shape.kind in ("train", "prefill"):
+            text = shape.seq_len - n_img
+            specs = {"tokens": _tok_specs(shape, text)}
+            if n_img:
+                specs["extra_embeds"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, n_img, cfg.d_model), dt)
+            if shape.kind == "train":
+                specs["labels"] = _tok_specs(shape, text if not n_img
+                                             else shape.seq_len)
+                specs["loss_mask"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch,
+                     shape.seq_len if n_img else text), dt)
+            return specs
+        # decode: one token + cache of seq_len
+        state = jax.eval_shape(
+            lambda: mod.init_decode_state(cfg, shape.global_batch,
+                                          shape.seq_len))
+        return {"token": _tok_specs(shape, 1), "state": state}
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda rng, dtype=None: mod.init_params(rng, cfg, dtype),
+        abstract_params=lambda: mod.abstract_params(cfg),
+        param_specs=lambda: mod.param_specs(cfg),
+        forward_train=forward_train, prefill=prefill, decode_step=decode_step,
+        init_decode_state=init_decode_state,
+        decode_state_specs=lambda: mod.decode_state_specs(cfg),
+        input_specs=input_specs)
+
+
+def _encdec_api(cfg: ModelConfig) -> ModelAPI:
+    def forward_train(params, batch):
+        return encdec.forward_train(params, cfg, batch)
+
+    def prefill(params, batch, max_len):
+        return encdec.prefill(params, cfg, batch, max_len)
+
+    def decode_step(params, token, state):
+        return encdec.decode_step(params, cfg, token, state)
+
+    def init_decode_state(batch, max_len, enc_len=None):
+        return encdec.init_decode_state(cfg, batch, max_len,
+                                        enc_len or max_len)
+
+    def input_specs(shape: ShapeConfig):
+        dt = jnp.dtype(cfg.compute_dtype)
+        frames = jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len, cfg.d_model), dt)
+        if shape.kind in ("train", "prefill"):
+            dl = encdec.dec_len(cfg, shape.seq_len, shape.kind)
+            specs = {"frames": frames, "dec_tokens": _tok_specs(shape, dl)}
+            if shape.kind == "train":
+                specs["labels"] = _tok_specs(shape, dl)
+                specs["loss_mask"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, dl), dt)
+            return specs
+        dl = encdec.dec_len(cfg, shape.seq_len, "prefill")
+        state = jax.eval_shape(
+            lambda: encdec.init_decode_state(cfg, shape.global_batch,
+                                             dl + 256, shape.seq_len))
+        return {"token": _tok_specs(shape, 1), "state": state}
+
+    return ModelAPI(
+        cfg=cfg,
+        init_params=lambda rng, dtype=None: encdec.init_params(rng, cfg, dtype),
+        abstract_params=lambda: encdec.abstract_params(cfg),
+        param_specs=lambda: encdec.param_specs(cfg),
+        forward_train=forward_train, prefill=prefill, decode_step=decode_step,
+        init_decode_state=init_decode_state,
+        decode_state_specs=lambda: encdec.decode_state_specs(cfg),
+        input_specs=input_specs)
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family in ("dense", "moe", "vlm"):
+        return _decoder_like(cfg, transformer)
+    if cfg.family == "ssm":
+        return _decoder_like(cfg, rwkv6_model)
+    if cfg.family == "hybrid":
+        return _decoder_like(cfg, zamba2)
+    if cfg.family == "audio":
+        return _encdec_api(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

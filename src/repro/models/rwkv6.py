@@ -1,0 +1,215 @@
+"""RWKV6 "Finch" block (arXiv:2404.05892): token-shift time-mix with
+data-dependent decay (the paper's headline feature), WKV6 recurrence with
+per-channel decay + bonus, grouped output norm, and the squared-ReLU
+channel-mix FFN.
+
+Simplifications vs. the reference implementation (noted in DESIGN.md):
+static token-shift mix coefficients per projection (r/k/v/g), LoRA only on
+the decay path (the data-dependent part that defines RWKV6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import gla
+
+
+@dataclasses.dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64
+    d_ff: int = 7168
+    decay_lora: int = 64
+    chunk: int = 64
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def init(rng, cfg: RWKV6Config, dtype=jnp.float32):
+    rr, rk, rv, rg, ro, rw1, rw2, rfk, rfv = cm.split(rng, 9)
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "ln1": cm.layernorm_init(d, dtype),
+        "ln2": cm.layernorm_init(d, dtype),
+        "att": {
+            "mix": 0.5 * jnp.ones((4, d), dtype),        # r,k,v,g shift mixes
+            "mix_w": 0.5 * jnp.ones((d,), dtype),        # decay shift mix
+            "w_r": cm.dense_init(rr, (d, d), (0,), dtype),
+            "w_k": cm.dense_init(rk, (d, d), (0,), dtype),
+            "w_v": cm.dense_init(rv, (d, d), (0,), dtype),
+            "w_g": cm.dense_init(rg, (d, d), (0,), dtype),
+            "w_o": cm.dense_init(ro, (d, d), (0,), dtype),
+            # data-dependent decay LoRA: w = exp(-exp(w0 + tanh(x A) B))
+            "decay_w0": jnp.full((d,), -6.0, dtype),
+            "decay_a": cm.dense_init(rw1, (d, cfg.decay_lora), (0,), dtype),
+            "decay_b": cm.dense_init(rw2, (cfg.decay_lora, d), (0,), dtype),
+            "bonus": jnp.zeros((nh, hd), dtype),          # u
+            "ln_out": cm.layernorm_init(d, dtype),        # group-norm per head
+        },
+        "ffn": {
+            "mix": 0.5 * jnp.ones((2, d), dtype),         # k, r mixes
+            "w_k": cm.dense_init(rfk, (d, cfg.d_ff), (0,), dtype),
+            "w_v": cm.dense_init(rfv, (cfg.d_ff, d), (0,), dtype),
+            "w_r": cm.dense_init(rr, (d, d), (0,), dtype),
+        },
+    }
+
+
+def specs(cfg: RWKV6Config):
+    return {
+        "ln1": cm.layernorm_specs(),
+        "ln2": cm.layernorm_specs(),
+        "att": {
+            # Megatron layout: column-parallel r/k/v/g (output dim on the TP
+            # axis), row-parallel w_o (one fwd psum per block); input dims
+            # replicated ("act_in") — see rules.BASE_RULES
+            "mix": (None, "act_in"), "mix_w": ("act_in",),
+            "w_r": ("act_in", "heads_embed"),
+            "w_k": ("act_in", "heads_embed"),
+            "w_v": ("act_in", "heads_embed"),
+            "w_g": ("act_in", "heads_embed"),
+            "w_o": ("heads_embed", "act_in"),
+            "decay_w0": ("act_in",), "decay_a": ("act_in", "lora"),
+            "decay_b": ("lora", "act_in"),
+            "bonus": ("heads", "head_dim"),
+            "ln_out": {"scale": ("heads_embed",), "bias": ("heads_embed",)},
+        },
+        "ffn": {
+            "mix": (None, "act_in"),
+            "w_k": ("act_in", "mlp"), "w_v": ("mlp", "act_in"),
+            # gate output multiplies the (replicated) psummed kv: replicate
+            "w_r": (None, None),
+        },
+    }
+
+
+def _shift(x, last=None):
+    """Token shift: x_{t-1} (zeros / `last` for t=0). x: (b, s, d)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    return jnp.concatenate([last, x[:, :-1]], axis=1)
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _time_mix_inputs(p, cfg: RWKV6Config, x, last=None):
+    b, s, d = x.shape
+    nh, hd = cfg.n_heads, cfg.head_dim
+    xs = _shift(x, last)
+    xr = _mix(x, xs, p["mix"][0])
+    xk = _mix(x, xs, p["mix"][1])
+    xv = _mix(x, xs, p["mix"][2])
+    xg = _mix(x, xs, p["mix"][3])
+    xw = _mix(x, xs, p["mix_w"])
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", xk, p["w_k"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", xv, p["w_v"].astype(x.dtype))
+    g = jnp.einsum("bsd,de->bse", xg, p["w_g"].astype(x.dtype))
+    # data-dependent decay (f32): logw in (-inf, 0)
+    lora = jnp.einsum("bsl,ld->bsd",
+                      jnp.tanh(jnp.einsum("bsd,dl->bsl",
+                                          xw.astype(jnp.float32),
+                                          p["decay_a"].astype(jnp.float32))),
+                      p["decay_b"].astype(jnp.float32))
+    logw = -jnp.exp(p["decay_w0"].astype(jnp.float32) + lora)
+    from repro.sharding.rules import constrain
+    heads = lambda a: constrain(
+        a.reshape(b, s, nh, hd).transpose(0, 2, 1, 3),
+        "batch", "heads", None, None)
+    return heads(r), heads(k), heads(v), g, heads(logw)
+
+
+def _time_mix_out(p, cfg: RWKV6Config, y, g, x_dtype):
+    """Per-head GroupNorm (RWKV's faithful choice) — normalizing within each
+    head keeps the op local to the head-sharded TP layout; the earlier
+    full-d LayerNorm stand-in forced a cross-shard gather every block (the
+    dominant collective in the train_4k baseline, see EXPERIMENTS.md §Perf).
+    """
+    b, nh, s, hd = y.shape
+    yf = y.astype(jnp.float32)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.mean((yf - mu) ** 2, axis=-1, keepdims=True)
+    yf = (yf - mu) * jax.lax.rsqrt(var + 1e-5)
+    scale = p["ln_out"]["scale"].astype(jnp.float32).reshape(nh, 1, hd)
+    bias = p["ln_out"]["bias"].astype(jnp.float32).reshape(nh, 1, hd)
+    y = (yf * scale + bias).astype(x_dtype)
+    y = y.transpose(0, 2, 1, 3).reshape(b, s, nh * hd)
+    y = y * jax.nn.silu(g).astype(x_dtype)
+    return jnp.einsum("bsd,de->bse", y, p["w_o"].astype(x_dtype))
+
+
+def time_mix_train(p, cfg: RWKV6Config, x):
+    r, k, v, g, logw = _time_mix_inputs(p, cfg, x)
+    y, _ = gla.chunked_gla(r, k, v, logw, u=p["bonus"].astype(jnp.float32),
+                           chunk=cfg.chunk, mode="bonus")
+    return _time_mix_out(p, cfg, y, g, x.dtype)
+
+
+def channel_mix_train(p, x, last=None):
+    xs = _shift(x, last)
+    xk = _mix(x, xs, p["mix"][0])
+    xr = _mix(x, xs, p["mix"][1])
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(x.dtype))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(x.dtype))
+    r = jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(x.dtype))
+    return jax.nn.sigmoid(r) * kv
+
+
+def init_state(cfg: RWKV6Config, batch, dtype=jnp.float32):
+    d, nh, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    return {
+        "att_x": jnp.zeros((batch, 1, d), dtype),
+        "ffn_x": jnp.zeros((batch, 1, d), dtype),
+        "wkv": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+    }
+
+
+def state_specs():
+    return {"att_x": ("batch", None, "embed"),
+            "ffn_x": ("batch", None, "embed"),
+            "wkv": ("batch", "heads", None, None)}
+
+
+def block_decode(p, cfg: RWKV6Config, x, state):
+    """One token through time-mix + channel-mix (pre-LN). x: (b, 1, d)."""
+    xa = cm.layernorm(p["ln1"], x)
+    r, k, v, g, logw = _time_mix_inputs(p["att"], cfg, xa, state["att_x"])
+    y, wkv = gla.gla_decode_step(r[:, :, 0], k[:, :, 0], v[:, :, 0],
+                                 logw[:, :, 0], state["wkv"],
+                                 u=p["att"]["bonus"].astype(jnp.float32),
+                                 mode="bonus")
+    att = _time_mix_out(p["att"], cfg, y[:, :, None, :], g, x.dtype)
+    h = x + att
+    hf = cm.layernorm(p["ln2"], h)
+    ffn = channel_mix_train(p["ffn"], hf, state["ffn_x"])
+    out = h + ffn
+    return out, {"att_x": xa, "ffn_x": hf, "wkv": wkv}
+
+
+def block_train(p, cfg: RWKV6Config, x):
+    h = x + time_mix_train(p["att"], cfg, cm.layernorm(p["ln1"], x))
+    return h + channel_mix_train(p["ffn"], cm.layernorm(p["ln2"], h))
+
+
+def block_prefill(p, cfg: RWKV6Config, x, state):
+    """Full-sequence forward returning the carried decode state (wkv final
+    state via chunked_gla + last-token shift inputs)."""
+    xa = cm.layernorm(p["ln1"], x)
+    r, k, v, g, logw = _time_mix_inputs(p["att"], cfg, xa, state["att_x"])
+    y, wkv = gla.chunked_gla(r, k, v, logw,
+                             u=p["att"]["bonus"].astype(jnp.float32),
+                             initial_state=state["wkv"],
+                             chunk=cfg.chunk, mode="bonus")
+    h = x + _time_mix_out(p["att"], cfg, y, g, x.dtype)
+    hf = cm.layernorm(p["ln2"], h)
+    out = h + channel_mix_train(p["ffn"], hf, state["ffn_x"])
+    return out, {"att_x": xa[:, -1:], "ffn_x": hf[:, -1:], "wkv": wkv}

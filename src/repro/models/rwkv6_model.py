@@ -1,0 +1,112 @@
+"""RWKV6-1.6B language model wrapper (attention-free; O(1) decode state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import common as cm
+from repro.models import rwkv6
+
+
+def _cfg(cfg: ModelConfig) -> rwkv6.RWKV6Config:
+    return rwkv6.RWKV6Config(
+        d_model=cfg.d_model, head_dim=cfg.resolved_head_dim, d_ff=cfg.d_ff,
+        decay_lora=cfg.decay_lora, chunk=cfg.ssm_chunk)
+
+
+def init_params(rng, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    re, rl = cm.split(rng, 2)
+    rcfg = _cfg(cfg)
+    return {
+        "embed": cm.embed_init(re, cfg.vocab_size, cfg.d_model, dtype),
+        "ln0": cm.layernorm_init(cfg.d_model, dtype),   # rwkv's post-embed LN
+        "layers": cm.stack_layer_trees(
+            [rwkv6.init(r, rcfg, dtype) for r in cm.split(rl, cfg.n_layers)]),
+        "final_norm": cm.layernorm_init(cfg.d_model, dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_specs(cfg: ModelConfig):
+    return {
+        "embed": cm.embed_specs(),
+        "ln0": cm.layernorm_specs(),
+        "layers": cm.add_layer_axis_to_specs(rwkv6.specs(_cfg(cfg))),
+        "final_norm": cm.layernorm_specs(),
+    }
+
+
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    rcfg = _cfg(cfg)
+    h = cm.embed_lookup(params["embed"], tokens).astype(dt)
+    h = cm.layernorm(params["ln0"], h)
+    remat = cfg.remat != "none"
+
+    def one(h, p):
+        return rwkv6.block_train(p, rcfg, h), None
+
+    fn = jax.checkpoint(one) if remat else one
+    h, _ = cm.scan(fn, h, params["layers"])
+    h = cm.layernorm(params["final_norm"], h)
+    return cm.embed_logits(params["embed"], h), jnp.zeros((), jnp.float32)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int = 0,
+                      dtype=jnp.bfloat16):
+    """max_len unused: RWKV state is O(1) in sequence length — that's the
+    whole point of running the long_500k cell on this arch."""
+    rcfg = _cfg(cfg)
+    one = rwkv6.init_state(rcfg, batch, jnp.dtype(cfg.compute_dtype))
+    return {
+        "layers": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_state_specs(cfg: ModelConfig):
+    return {"layers": cm.add_layer_axis_to_specs(rwkv6.state_specs()),
+            "len": ()}
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    dt = jnp.dtype(cfg.compute_dtype)
+    rcfg = _cfg(cfg)
+    h = cm.embed_lookup(params["embed"], token).astype(dt)
+    h = cm.layernorm(params["ln0"], h)
+
+    def one(h, xs):
+        p, st = xs
+        return rwkv6.block_decode(p, rcfg, h, st)
+
+    h, new_states = cm.scan(one, h, (params["layers"], state["layers"]))
+    h = cm.layernorm(params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h)
+    return logits, {"layers": new_states, "len": state["len"] + 1}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int = 0,
+            extra_embeds=None, cache_dtype=jnp.bfloat16):
+    dt = jnp.dtype(cfg.compute_dtype)
+    rcfg = _cfg(cfg)
+    h = cm.embed_lookup(params["embed"], tokens).astype(dt)
+    h = cm.layernorm(params["ln0"], h)
+    init = init_decode_state(cfg, tokens.shape[0])
+    remat = cfg.remat != "none"
+
+    def one(h, xs):
+        p, st = xs
+        return rwkv6.block_prefill(p, rcfg, h, st)
+
+    fn = jax.checkpoint(one) if remat else one
+    h, new_states = cm.scan(fn, h, (params["layers"], init["layers"]))
+    h = cm.layernorm(params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h[:, -1:])
+    return logits, {"layers": new_states,
+                    "len": jnp.asarray(tokens.shape[1], jnp.int32)}

@@ -1,0 +1,316 @@
+"""Decoder-only transformer LM: dense (internlm2/yi/qwen1.5/mistral-llava),
+gemma2 (local/global + softcaps + sandwich norms), and MoE (dbrx/phi3.5-moe).
+
+Layers are scanned (stacked params along a leading 'layers' axis) with
+configurable remat. Alternating layer patterns (gemma2 local/global) scan
+over *groups* of layers so each position in the group gets a STATIC window —
+no masked double-compute, roofline-honest.
+
+Three execution paths share one layer body:
+  forward_train : tokens -> logits (full causal)
+  prefill       : tokens -> logits, KV cache
+  decode_step   : 1 token + cache -> logits, cache
+VLM (llava) is this model with stub patch embeddings prepended to the token
+embeddings (anyres frontend is out-of-scope per assignment).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mlp as mlp_lib
+from repro.models import moe as moe_lib
+
+Q_CHUNK = 2048  # flash-style query chunking kicks in above this seq len
+
+
+def _attn_cfg(cfg: ModelConfig) -> attn.AttnConfig:
+    return attn.AttnConfig(
+        d_model=cfg.d_model, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.resolved_head_dim, rope_theta=cfg.rope_theta,
+        use_bias=cfg.use_qkv_bias, logit_softcap=cfg.attn_softcap,
+        query_scale=cfg.query_scale, seq_shard=cfg.attn_seq_shard)
+
+
+def _moe_cfg(cfg: ModelConfig) -> moe_lib.MoEConfig:
+    return moe_lib.MoEConfig(
+        d_model=cfg.d_model, d_ff=cfg.d_ff, n_experts=cfg.n_experts,
+        top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+        activation=cfg.activation)
+
+
+def _norm_init(cfg, dtype):
+    return (cm.rmsnorm_init(cfg.d_model, dtype) if cfg.norm == "rmsnorm"
+            else cm.layernorm_init(cfg.d_model, dtype))
+
+
+def _norm_specs(cfg):
+    return (cm.rmsnorm_specs() if cfg.norm == "rmsnorm"
+            else cm.layernorm_specs())
+
+
+def _norm(cfg, p, x):
+    return cm.rmsnorm(p, x) if cfg.norm == "rmsnorm" else cm.layernorm(p, x)
+
+
+def group_size(cfg: ModelConfig) -> int:
+    """Layers per scan step: 2 for alternating local/global, else 1."""
+    if cfg.layer_pattern == "local_global":
+        assert cfg.n_layers % 2 == 0
+        return 2
+    return 1
+
+
+def _group_windows(cfg: ModelConfig) -> tuple[int | None, ...]:
+    if cfg.layer_pattern == "local_global":
+        return (cfg.sliding_window, None)      # gemma2: local layer first
+    return (None,)
+
+
+# ----------------------------------------------------------------- params
+def _layer_init(rng, cfg: ModelConfig, dtype):
+    ra, rm = cm.split(rng, 2)
+    p = {"ln1": _norm_init(cfg, dtype), "ln2": _norm_init(cfg, dtype),
+         "attn": attn.init(ra, _attn_cfg(cfg), dtype)}
+    if cfg.n_experts:
+        p["moe"] = moe_lib.init(rm, _moe_cfg(cfg), dtype)
+    else:
+        p["mlp"] = mlp_lib.gated_init(rm, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_norms:
+        p["ln1_post"] = _norm_init(cfg, dtype)
+        p["ln2_post"] = _norm_init(cfg, dtype)
+    return p
+
+
+def _layer_specs(cfg: ModelConfig):
+    s = {"ln1": _norm_specs(cfg), "ln2": _norm_specs(cfg),
+         "attn": attn.specs(_attn_cfg(cfg))}
+    if cfg.n_experts:
+        s["moe"] = moe_lib.specs(_moe_cfg(cfg))
+    else:
+        s["mlp"] = mlp_lib.gated_specs()
+    if cfg.post_norms:
+        s["ln1_post"] = _norm_specs(cfg)
+        s["ln2_post"] = _norm_specs(cfg)
+    return s
+
+
+def init_params(rng, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    re, rl, _ = cm.split(rng, 3)
+    g = group_size(cfg)
+    layer_trees = [_layer_init(r, cfg, dtype)
+                   for r in cm.split(rl, cfg.n_layers)]
+    params = {
+        "embed": cm.embed_init(re, cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": _norm_init(cfg, dtype),
+        # grouped stack: tree leaves (n_groups, g, ...); g=1 when no pattern
+        "layers": tuple(
+            cm.stack_layer_trees(layer_trees[j::g]) for j in range(g)),
+    }
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct tree (no allocation) for the dry-run."""
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_specs(cfg: ModelConfig):
+    g = group_size(cfg)
+    layer = cm.add_layer_axis_to_specs(_layer_specs(cfg))
+    return {
+        "embed": cm.embed_specs(),
+        "final_norm": _norm_specs(cfg),
+        "layers": tuple(layer for _ in range(g)),
+    }
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (None if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ----------------------------------------------------------------- bodies
+def _ffn(cfg: ModelConfig, p, h):
+    """Post-attention half of a block. Returns (h, aux)."""
+    from repro.sharding.rules import constrain
+    aux = jnp.zeros((), jnp.float32)
+    x = _norm(cfg, p["ln2"], h)
+    if cfg.n_experts:
+        m, aux = moe_lib.apply(p["moe"], _moe_cfg(cfg), x)
+    else:
+        m = mlp_lib.gated_apply(p["mlp"], x, activation=cfg.activation)
+    if cfg.post_norms:
+        m = _norm(cfg, p["ln2_post"], m)
+    return constrain(h + m, "batch", None, None), aux
+
+
+def _attn_train(cfg: ModelConfig, p, h, positions, window):
+    from repro.sharding.rules import constrain
+    acfg = _attn_cfg(cfg)
+    a = attn.attend_train(p["attn"], acfg, _norm(cfg, p["ln1"], h), positions,
+                          window=window,
+                          q_chunk=Q_CHUNK if h.shape[1] > Q_CHUNK else None)
+    if cfg.post_norms:
+        a = _norm(cfg, p["ln1_post"], a)
+    return constrain(h + a, "batch", None, None)
+
+
+def _embed_in(params, cfg: ModelConfig, tokens, extra_embeds):
+    from repro.sharding.rules import constrain
+    dt = jnp.dtype(cfg.compute_dtype)
+    h = cm.embed_lookup(params["embed"], tokens).astype(dt)
+    if cfg.embed_scale:
+        h = h * jnp.asarray(math.sqrt(cfg.d_model), dt)
+    if extra_embeds is not None:
+        h = jnp.concatenate([extra_embeds.astype(dt), h], axis=1)
+    return constrain(h, "batch", None, None)
+
+
+# ------------------------------------------------------------------- train
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    """tokens: (B, S_text) int32; extra_embeds: (B, N, d) prepended (llava).
+    Returns (logits: (B, S_total, vocab), aux_loss: scalar)."""
+    h = _embed_in(params, cfg, tokens, extra_embeds)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = _group_windows(cfg)
+
+    def group_body(group_params, h):
+        aux = jnp.zeros((), jnp.float32)
+        for j, w in enumerate(windows):
+            p = group_params[j]
+            h = _attn_train(cfg, p, h, positions, w)
+            h, a = _ffn(cfg, p, h)
+            aux = aux + a
+        return h, aux
+
+    body = _maybe_remat(cfg, group_body)
+    if cfg.scan_layers:
+        def scan_fn(h, xs):
+            h, aux = body(xs, h)
+            return h, aux
+        h, auxs = cm.scan(scan_fn, h, params["layers"])
+        aux = jnp.sum(auxs)
+    else:
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(n_groups):
+            gp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, a = body(gp, h)
+            aux = aux + a
+    h = _norm(cfg, params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h, softcap=cfg.final_softcap)
+    return logits, aux
+
+
+# ------------------------------------------------------------------ serving
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    acfg = _attn_cfg(cfg)
+    one = attn.init_cache(acfg, batch, max_len, dtype)
+    g = group_size(cfg)
+    n_groups = cfg.n_layers // g
+    layers = tuple(
+        jax.tree.map(lambda a: jnp.zeros((n_groups,) + a.shape, a.dtype), one)
+        for _ in range(g))
+    return {"layers": layers, "len": jnp.zeros((), jnp.int32)}
+
+
+def decode_state_specs(cfg: ModelConfig):
+    g = group_size(cfg)
+    layer = cm.add_layer_axis_to_specs(attn.cache_specs())
+    return {"layers": tuple(layer for _ in range(g)), "len": ()}
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            extra_embeds=None, cache_dtype=jnp.bfloat16):
+    """Run the prompt, build the cache. Returns (logits, state)."""
+    h = _embed_in(params, cfg, tokens, extra_embeds)
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    windows = _group_windows(cfg)
+    acfg = _attn_cfg(cfg)
+
+    def group_body(group_params, h):
+        kvs = []
+        for j, w in enumerate(windows):
+            p = group_params[j]
+            empty = attn.init_cache(acfg, b, max_len, cache_dtype)
+            a, kv = attn.attend_prefill(
+                p["attn"], acfg, _norm(cfg, p["ln1"], h), positions, empty,
+                window=w, q_chunk=Q_CHUNK if s > Q_CHUNK else None)
+            if cfg.post_norms:
+                a = _norm(cfg, p["ln1_post"], a)
+            h = h + a
+            h, _ = _ffn(cfg, p, h)
+            kvs.append(kv)
+        return h, tuple(kvs)
+
+    body = _maybe_remat(cfg, group_body)
+    if cfg.scan_layers:
+        h, layer_caches = cm.scan(lambda h, xs: body(xs, h), h,
+                                       params["layers"])
+    else:
+        caches = []
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        for i in range(n_groups):
+            gp = jax.tree.map(lambda a: a[i], params["layers"])
+            h, kv = body(gp, h)
+            caches.append(kv)
+        layer_caches = cm.stack_layer_trees(caches)
+    h = _norm(cfg, params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h[:, -1:],
+                             softcap=cfg.final_softcap)
+    return logits, {"layers": layer_caches,
+                    "len": jnp.asarray(s, jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    """token: (B, 1) int32. Returns (logits (B,1,V), new state)."""
+    h = _embed_in(params, cfg, token, None)
+    cache_len = state["len"]
+    windows = _group_windows(cfg)
+    acfg = _attn_cfg(cfg)
+
+    def group_body(h, group_params, group_caches):
+        new_kvs = []
+        for j, w in enumerate(windows):
+            p, kv = group_params[j], group_caches[j]
+            x = _norm(cfg, p["ln1"], h)
+            a, nkv = attn.attend_decode(p["attn"], acfg, x, kv, cache_len,
+                                        window=w)
+            if cfg.post_norms:
+                a = _norm(cfg, p["ln1_post"], a)
+            h = h + a
+            h, _ = _ffn(cfg, p, h)
+            new_kvs.append(nkv)
+        return h, tuple(new_kvs)
+
+    if cfg.scan_layers:
+        def scan_fn(h, xs):
+            gp, gc = xs
+            return group_body(h, gp, gc)
+        h, new_caches = cm.scan(
+            scan_fn, h, (params["layers"], state["layers"]))
+    else:
+        outs = []
+        n_groups = jax.tree.leaves(params["layers"])[0].shape[0]
+        for i in range(n_groups):
+            gp = jax.tree.map(lambda a: a[i], params["layers"])
+            gc = jax.tree.map(lambda a: a[i], state["layers"])
+            h, nkv = group_body(h, gp, gc)
+            outs.append(nkv)
+        new_caches = cm.stack_layer_trees(outs)
+    h = _norm(cfg, params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h, softcap=cfg.final_softcap)
+    return logits, {"layers": new_caches, "len": cache_len + 1}

@@ -1,0 +1,334 @@
+"""Zamba2-7B hybrid: Mamba2 backbone + 2 alternating *shared* attention
+blocks (arXiv:2411.15242).
+
+Structure here (simplifications noted in DESIGN.md): `n_layers` Mamba2 blocks;
+before every `attn_every`-th block a shared transformer block runs on
+concat(hidden, initial_embedding) (2·d_model wide, as in the paper) and its
+output (projected back to d_model) is added to the residual stream. The two
+shared blocks alternate across applications. Per-application LoRA deltas on
+the shared weights are omitted.
+
+Scan layout: groups of `attn_every` mamba blocks; group g applies shared
+block g % 2 first. Shared params are stacked (2, ...) and gathered per group
+inside the scan (an HBM read, not a copy-compute).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import common as cm
+from repro.models import mamba2
+from repro.models import mlp as mlp_lib
+
+
+def _m2cfg(cfg: ModelConfig) -> mamba2.Mamba2Config:
+    return mamba2.Mamba2Config(
+        d_model=cfg.d_model, d_state=cfg.ssm_state,
+        head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+        conv_width=cfg.ssm_conv_width, chunk=cfg.ssm_chunk)
+
+
+def _shared_attn_cfg(cfg: ModelConfig) -> attn.AttnConfig:
+    d2 = 2 * cfg.d_model
+    return attn.AttnConfig(
+        d_model=d2, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=d2 // cfg.n_heads, rope_theta=cfg.rope_theta)
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def tail_layers(cfg: ModelConfig) -> int:
+    return cfg.n_layers % cfg.attn_every
+
+
+def _shared_block_init(rng, cfg: ModelConfig, dtype):
+    ra, rm, ro = cm.split(rng, 3)
+    d, d2 = cfg.d_model, 2 * cfg.d_model
+    acfg = _shared_attn_cfg(cfg)
+    return {
+        "ln_attn": cm.rmsnorm_init(d2, dtype),
+        "attn": attn.init(ra, acfg, dtype),
+        "attn_out": cm.dense_init(ro, (d2, d), (0,), dtype),
+        "ln_mlp": cm.rmsnorm_init(d2, dtype),
+        "mlp": {
+            "w_gate": cm.dense_init(rm, (d2, cfg.d_ff), (0,), dtype),
+            "w_up": cm.dense_init(rm, (d2, cfg.d_ff), (0,), dtype),
+            "w_down": cm.dense_init(rm, (cfg.d_ff, d), (0,), dtype),
+        },
+    }
+
+
+def _shared_block_specs(cfg: ModelConfig):
+    return {
+        "ln_attn": {"scale": ("embed",)},
+        "attn": attn.specs(_shared_attn_cfg(cfg)),
+        "attn_out": ("embed", "embed"),
+        "ln_mlp": {"scale": ("embed",)},
+        "mlp": {"w_gate": ("embed", "mlp"), "w_up": ("embed", "mlp"),
+                "w_down": ("mlp", "embed")},
+    }
+
+
+def init_params(rng, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.param_dtype)
+    re, rm, rs, rn, rt = cm.split(rng, 5)
+    m2 = _m2cfg(cfg)
+    ng, tl = n_groups(cfg), tail_layers(cfg)
+    body = [{"ln": cm.rmsnorm_init(cfg.d_model, dtype),
+             "mamba": mamba2.init(r, m2, dtype)}
+            for r in cm.split(rm, cfg.n_layers)]
+    grouped = cm.stack_layer_trees(body[:ng * cfg.attn_every])
+    # reshape (ng*k, ...) -> (ng, k, ...)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((ng, cfg.attn_every) + a.shape[1:]), grouped)
+    params = {
+        "embed": cm.embed_init(re, cfg.vocab_size, cfg.d_model, dtype),
+        "blocks": grouped,
+        "shared": cm.stack_layer_trees(
+            [_shared_block_init(r, cfg, dtype)
+             for r in cm.split(rs, cfg.n_shared_blocks)]),
+        "final_norm": cm.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if tl:
+        params["tail"] = cm.stack_layer_trees(body[ng * cfg.attn_every:])
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(jax.random.PRNGKey(0), cfg))
+
+
+def param_specs(cfg: ModelConfig):
+    m2 = _m2cfg(cfg)
+    block = {"ln": cm.rmsnorm_specs(), "mamba": mamba2.specs(m2)}
+    grouped = jax.tree.map(lambda ax: ("layers", None) + tuple(ax), block,
+                           is_leaf=lambda x: isinstance(x, tuple))
+    s = {
+        "embed": cm.embed_specs(),
+        "blocks": grouped,
+        "shared": cm.add_layer_axis_to_specs(_shared_block_specs(cfg)),
+        "final_norm": cm.rmsnorm_specs(),
+    }
+    if tail_layers(cfg):
+        s["tail"] = cm.add_layer_axis_to_specs(block)
+    return s
+
+
+# ------------------------------------------------------------------ shared
+def _apply_shared_train(sp, cfg: ModelConfig, h, emb0, positions):
+    """One shared-block application (training/full-seq)."""
+    from repro.sharding.rules import constrain
+    acfg = _shared_attn_cfg(cfg)
+    h = constrain(h, "batch", None, None)
+    xcat = jnp.concatenate([h, emb0], axis=-1)
+    from repro.models.transformer import Q_CHUNK
+    a = attn.attend_train(sp["attn"], acfg, cm.rmsnorm(sp["ln_attn"], xcat),
+                          positions,
+                          q_chunk=Q_CHUNK if h.shape[1] > Q_CHUNK else None)
+    h = h + jnp.einsum("bsd,de->bse", a, sp["attn_out"].astype(a.dtype))
+    xcat = jnp.concatenate([h, emb0], axis=-1)
+    x = cm.rmsnorm(sp["ln_mlp"], xcat)
+    g = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_up"].astype(x.dtype))
+    m = jnp.einsum("bsf,fd->bsd", cm.swiglu(g, u),
+                   sp["mlp"]["w_down"].astype(x.dtype))
+    return h + m
+
+
+def _apply_shared_decode(sp, cfg: ModelConfig, h, emb0, kv, cache_len):
+    acfg = _shared_attn_cfg(cfg)
+    xcat = jnp.concatenate([h, emb0], axis=-1)
+    a, nkv = attn.attend_decode(sp["attn"], acfg,
+                                cm.rmsnorm(sp["ln_attn"], xcat), kv, cache_len)
+    h = h + jnp.einsum("bsd,de->bse", a, sp["attn_out"].astype(a.dtype))
+    xcat = jnp.concatenate([h, emb0], axis=-1)
+    x = cm.rmsnorm(sp["ln_mlp"], xcat)
+    g = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_gate"].astype(x.dtype))
+    u = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_up"].astype(x.dtype))
+    m = jnp.einsum("bsf,fd->bsd", cm.swiglu(g, u),
+                   sp["mlp"]["w_down"].astype(x.dtype))
+    return h + m, nkv
+
+
+def _mamba_subscan(cfg: ModelConfig, group_params, h, remat: bool):
+    m2 = _m2cfg(cfg)
+
+    def one(h, p):
+        x = cm.rmsnorm(p["ln"], h)
+        return h + mamba2.apply_train(p["mamba"], m2, x), None
+
+    fn = jax.checkpoint(one) if remat else one
+    h, _ = cm.scan(fn, h, group_params)
+    return h
+
+
+# ------------------------------------------------------------------- train
+def forward_train(params, cfg: ModelConfig, tokens, extra_embeds=None):
+    dt = jnp.dtype(cfg.compute_dtype)
+    emb0 = cm.embed_lookup(params["embed"], tokens).astype(dt)
+    h = emb0
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    remat = cfg.remat != "none"
+
+    def group(h, xs):
+        gp, gi = xs
+        sp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(
+                a, gi % cfg.n_shared_blocks, 0, keepdims=False),
+            params["shared"])
+        fn = (jax.checkpoint(lambda sp, h: _apply_shared_train(
+            sp, cfg, h, emb0, positions)) if remat
+            else (lambda sp, h: _apply_shared_train(sp, cfg, h, emb0,
+                                                    positions)))
+        h = fn(sp, h)
+        h = _mamba_subscan(cfg, gp, h, remat)
+        return h, None
+
+    h, _ = cm.scan(group, h,
+                        (params["blocks"], jnp.arange(n_groups(cfg))))
+    if tail_layers(cfg):
+        h = _mamba_subscan(cfg, params["tail"], h, remat)
+    h = cm.rmsnorm(params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+# ----------------------------------------------------------------- serving
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=jnp.bfloat16):
+    m2 = _m2cfg(cfg)
+    acfg = _shared_attn_cfg(cfg)
+    ng, tl = n_groups(cfg), tail_layers(cfg)
+    one_m = mamba2.init_state(m2, batch)
+    state = {
+        "blocks": jax.tree.map(
+            lambda a: jnp.zeros((ng, cfg.attn_every) + a.shape, a.dtype),
+            one_m),
+        "shared_kv": jax.tree.map(
+            lambda a: jnp.zeros((ng,) + a.shape, a.dtype),
+            attn.init_cache(acfg, batch, max_len, dtype)),
+        "len": jnp.zeros((), jnp.int32),
+    }
+    if tl:
+        state["tail"] = jax.tree.map(
+            lambda a: jnp.zeros((tl,) + a.shape, a.dtype), one_m)
+    return state
+
+
+def decode_state_specs(cfg: ModelConfig):
+    m2spec = mamba2.state_specs()
+    s = {
+        "blocks": jax.tree.map(lambda ax: ("layers", None) + tuple(ax),
+                               m2spec, is_leaf=lambda x: isinstance(x, tuple)),
+        "shared_kv": cm.add_layer_axis_to_specs(attn.cache_specs()),
+        "len": (),
+    }
+    if tail_layers(cfg):
+        s["tail"] = cm.add_layer_axis_to_specs(m2spec)
+    return s
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    dt = jnp.dtype(cfg.compute_dtype)
+    emb0 = cm.embed_lookup(params["embed"], token).astype(dt)
+    h = emb0
+    m2 = _m2cfg(cfg)
+    cache_len = state["len"]
+
+    def mamba_scan(h, gp, gs):
+        def one(h, xs):
+            p, st = xs
+            x = cm.rmsnorm(p["ln"], h)
+            o, nst = mamba2.apply_decode(p["mamba"], m2, x, st)
+            return h + o, nst
+        return cm.scan(one, h, (gp, gs))
+
+    def group(h, xs):
+        gp, gs, kv, gi = xs
+        sp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(
+                a, gi % cfg.n_shared_blocks, 0, keepdims=False),
+            params["shared"])
+        h, nkv = _apply_shared_decode(sp, cfg, h, emb0, kv, cache_len)
+        h, ns = mamba_scan(h, gp, gs)
+        return h, (ns, nkv)
+
+    h, (nblocks, nkv) = cm.scan(
+        group, h, (params["blocks"], state["blocks"], state["shared_kv"],
+                   jnp.arange(n_groups(cfg))))
+    new_state = {"blocks": nblocks, "shared_kv": nkv, "len": cache_len + 1}
+    if tail_layers(cfg):
+        h, ntail = mamba_scan(h, params["tail"], state["tail"])
+        new_state["tail"] = ntail
+    h = cm.rmsnorm(params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h)
+    return logits, new_state
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            extra_embeds=None, cache_dtype=jnp.bfloat16):
+    """Full-sequence forward that seeds every decode state: SSD final states
+    (via chunked_gla), conv tails, and the shared blocks' KV caches."""
+    dt = jnp.dtype(cfg.compute_dtype)
+    emb0 = cm.embed_lookup(params["embed"], tokens).astype(dt)
+    h = emb0
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    m2 = _m2cfg(cfg)
+    acfg = _shared_attn_cfg(cfg)
+    remat = cfg.remat != "none"
+
+    def mamba_prefill_scan(h, gp, gs):
+        def one(h, xs):
+            p, st = xs
+            x = cm.rmsnorm(p["ln"], h)
+            o, nst = mamba2.apply_prefill(p["mamba"], m2, x, st)
+            return h + o, nst
+        fn = jax.checkpoint(one) if remat else one
+        return cm.scan(fn, h, (gp, gs))
+
+    def shared_prefill(sp, h):
+        xcat = jnp.concatenate([h, emb0], axis=-1)
+        from repro.models.transformer import Q_CHUNK
+        empty = attn.init_cache(acfg, b, max_len, cache_dtype)
+        a, kv = attn.attend_prefill(
+            sp["attn"], acfg, cm.rmsnorm(sp["ln_attn"], xcat), positions,
+            empty, q_chunk=Q_CHUNK if s > Q_CHUNK else None)
+        h = h + jnp.einsum("bsd,de->bse", a, sp["attn_out"].astype(a.dtype))
+        xcat = jnp.concatenate([h, emb0], axis=-1)
+        x = cm.rmsnorm(sp["ln_mlp"], xcat)
+        g = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_gate"].astype(x.dtype))
+        u = jnp.einsum("bsd,df->bsf", x, sp["mlp"]["w_up"].astype(x.dtype))
+        m = jnp.einsum("bsf,fd->bsd", cm.swiglu(g, u),
+                       sp["mlp"]["w_down"].astype(x.dtype))
+        return h + m, kv
+
+    init = init_decode_state(cfg, b, max_len, cache_dtype)
+
+    def group(h, xs):
+        gp, gs, gi = xs
+        sp = jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(
+                a, gi % cfg.n_shared_blocks, 0, keepdims=False),
+            params["shared"])
+        h, kv = shared_prefill(sp, h)
+        h, ns = mamba_prefill_scan(h, gp, gs)
+        return h, (ns, kv)
+
+    h, (nblocks, nkv) = cm.scan(
+        group, h, (params["blocks"], init["blocks"],
+                   jnp.arange(n_groups(cfg))))
+    state = {"blocks": nblocks, "shared_kv": nkv,
+             "len": jnp.asarray(s, jnp.int32)}
+    if tail_layers(cfg):
+        h, ntail = mamba_prefill_scan(h, params["tail"], init["tail"])
+        state["tail"] = ntail
+    h = cm.rmsnorm(params["final_norm"], h)
+    logits = cm.embed_logits(params["embed"], h[:, -1:])
+    return logits, state

@@ -1,0 +1,6 @@
+from repro.runtime.fault_tolerance import (HeartbeatTracker, RestartPolicy,
+                                           ElasticPlan, FailureDetector)
+from repro.runtime.straggler import plan_reslice, ResliceAction
+
+__all__ = ["HeartbeatTracker", "RestartPolicy", "ElasticPlan",
+           "FailureDetector", "plan_reslice", "ResliceAction"]

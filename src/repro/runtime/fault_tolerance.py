@@ -1,0 +1,97 @@
+"""Fault-tolerant training runtime: heartbeats, failure detection, restart
+policy, elastic rescale. The control plane is deliberately dependency-free
+(files/host callbacks) so it can sit on any cluster scheduler; the data plane
+(checkpoint restore, mesh rebuild) reuses repro.checkpoint and launch.mesh.
+
+What large-scale runs get from this module:
+  * HeartbeatTracker  — per-host liveness with configurable timeout
+  * FailureDetector   — combines missing heartbeats + straggler fits (the
+                        paper's LSE on step-time series, runtime.straggler)
+  * RestartPolicy     — bounded exponential backoff, max-restarts budget
+  * ElasticPlan       — given surviving hosts, picks the largest valid mesh
+                        (full data-parallel replicas only) and the checkpoint
+                        step to resume from
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class HeartbeatTracker:
+    n_hosts: int
+    timeout_s: float = 60.0
+
+    def __post_init__(self):
+        now = time.monotonic()
+        self.last_seen = {h: now for h in range(self.n_hosts)}
+
+    def beat(self, host: int, t: float | None = None) -> None:
+        self.last_seen[host] = time.monotonic() if t is None else t
+
+    def dead_hosts(self, now: float | None = None) -> list[int]:
+        now = time.monotonic() if now is None else now
+        return [h for h, t in self.last_seen.items()
+                if now - t > self.timeout_s]
+
+
+@dataclasses.dataclass
+class RestartPolicy:
+    max_restarts: int = 100
+    base_backoff_s: float = 5.0
+    max_backoff_s: float = 300.0
+
+    restarts: int = 0
+
+    def next_backoff(self) -> float | None:
+        """None = give up."""
+        if self.restarts >= self.max_restarts:
+            return None
+        b = min(self.base_backoff_s * (2 ** min(self.restarts, 10)),
+                self.max_backoff_s)
+        self.restarts += 1
+        return b
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    n_hosts: int          # surviving
+    mesh_shape: tuple     # new mesh
+    resume_step: int
+
+    @staticmethod
+    def plan(surviving_hosts: int, chips_per_host: int,
+             model_parallel: int, resume_step: int) -> "ElasticPlan":
+        """Largest mesh = (data, model) with model fixed (TP must fit the
+        weights' sharding) and data = largest multiple that the surviving
+        chips support. Data-parallel size may shrink/grow freely because the
+        data pipeline keys examples by batch index, not host count, and the
+        checkpoint restores with resharding."""
+        chips = surviving_hosts * chips_per_host
+        data = max(1, chips // model_parallel)
+        return ElasticPlan(surviving_hosts, (data, model_parallel),
+                           resume_step)
+
+
+class FailureDetector:
+    """Missing-heartbeat OR persistent-straggler (LSE-fitted) detection."""
+
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 straggler_threshold: float = 1.5):
+        from repro.train.monitors import StepTimeMonitor
+        self.hb = HeartbeatTracker(n_hosts, timeout_s)
+        self.steptime = StepTimeMonitor(n_hosts,
+                                        threshold=straggler_threshold)
+        self.n_hosts = n_hosts
+
+    def observe_step(self, step: int, times_s, now: float | None = None):
+        self.steptime.observe(step, times_s)
+        for h in range(self.n_hosts):
+            self.hb.beat(h, now)
+
+    def verdict(self, step: int, now: float | None = None) -> dict:
+        dead = self.hb.dead_hosts(now)
+        slow = self.steptime.stragglers(step)
+        return {"dead": dead, "stragglers": slow,
+                "healthy": not dead and not slow}

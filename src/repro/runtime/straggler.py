@@ -1,0 +1,51 @@
+"""Straggler mitigation driven by the paper's LSE fits.
+
+StepTimeMonitor (repro.train.monitors) fits each host's step-time series
+with a streaming degree-1 matricized LSE; this module turns its verdicts
+into actions: per-host slowdown diagnosis and data re-slicing plans that
+shrink the slow host's shard (work-stealing) without a restart.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.train.monitors import StepTimeMonitor
+
+
+@dataclasses.dataclass(frozen=True)
+class ResliceAction:
+    """New per-host example counts for one global batch."""
+    shares: tuple[int, ...]
+
+    @property
+    def total(self) -> int:
+        return sum(self.shares)
+
+
+def plan_reslice(monitor: StepTimeMonitor, step: int, global_batch: int,
+                 min_share: int = 1) -> ResliceAction:
+    """Give each host work inversely proportional to its fitted step time
+    (projected throughput), keeping the global batch fixed. Integerizes with
+    largest-remainder; every host keeps >= min_share."""
+    levels = monitor.fitted_levels(step)
+    levels = np.maximum(levels, 1e-6)
+    speed = 1.0 / levels
+    raw = speed / speed.sum() * global_batch
+    base = np.maximum(np.floor(raw).astype(int), min_share)
+    # distribute the remainder to the largest fractional parts
+    rem = global_batch - base.sum()
+    if rem > 0:
+        order = np.argsort(-(raw - np.floor(raw)))
+        for i in order[:rem]:
+            base[i] += 1
+    elif rem < 0:
+        order = np.argsort(raw - np.floor(raw))
+        for i in order:
+            if rem == 0:
+                break
+            if base[i] > min_share:
+                base[i] -= 1
+                rem += 1
+    return ResliceAction(tuple(int(b) for b in base))

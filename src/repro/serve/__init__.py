@@ -1,0 +1,4 @@
+from repro.serve.engine import ServeEngine, EngineConfig, Request
+from repro.serve.sampling import sample
+
+__all__ = ["ServeEngine", "EngineConfig", "Request", "sample"]

@@ -1,0 +1,151 @@
+"""Batched serving engine: continuous-batching decode over a fixed slot pool.
+
+Design (vLLM-style, TPU-static shapes):
+  * `n_slots` concurrent sequences share one static KV cache allocation
+    (slot = batch row). Static shapes keep every decode step the same
+    compiled executable — no recompilation as requests come and go.
+  * Requests queue in; free slots are filled by running prefill for one
+    request (its tokens right-padded to the slot's prompt bucket), then the
+    slot joins the batched decode step.
+  * Finished slots (EOS or max_tokens) are released.
+
+The engine is deliberately synchronous/deterministic (host loop) — the
+scheduling policy is the substrate a real async server would wrap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.registry import ModelAPI
+from repro.serve import sampling
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    tokens: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0
+    out_tokens: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    n_slots: int = 8
+    max_len: int = 512
+    eos_id: int = 2
+    prompt_bucket: int = 64        # prompts padded up to this length
+
+
+class ServeEngine:
+    """Host-side continuous batching around jitted prefill/decode."""
+
+    def __init__(self, model: ModelAPI, params, ecfg: EngineConfig,
+                 rng=None):
+        self.model = model
+        self.params = params
+        self.ecfg = ecfg
+        self.rng = rng if rng is not None else jax.random.PRNGKey(0)
+        cfg = model.cfg
+
+        self._decode = jax.jit(
+            lambda p, tok, st: model.decode_step(p, tok, st))
+        self._prefill = jax.jit(
+            lambda p, batch: model.prefill(p, batch, ecfg.max_len))
+
+        # slot-pool state (single shared decode batch)
+        self.state = model.init_decode_state(ecfg.n_slots, ecfg.max_len)
+        self.slot_req: list[Request | None] = [None] * ecfg.n_slots
+        self.slot_len = np.zeros(ecfg.n_slots, np.int32)
+        self.last_token = np.zeros((ecfg.n_slots, 1), np.int32)
+        self.queue: list[Request] = []
+        self._uid = 0
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, tokens: list[int], max_new_tokens: int = 32,
+               temperature: float = 0.0) -> Request:
+        req = Request(self._uid, list(tokens), max_new_tokens, temperature)
+        self._uid += 1
+        self.queue.append(req)
+        return req
+
+    def _free_slots(self):
+        return [i for i, r in enumerate(self.slot_req) if r is None]
+
+    def _write_slot(self, slot: int, prefill_state, req: Request,
+                    first_logits):
+        """Copy a single-sequence prefill cache into slot `slot` of the
+        shared pool. Works on any state pytree whose per-seq arrays carry the
+        batch axis in the same position as the pooled state."""
+        def merge(pool, single):
+            if pool.ndim == 0 or pool.shape == single.shape:
+                return single  # scalars like "len" handled after
+            # find the batch axis: the dim where pool==n_slots, single==1
+            for ax in range(pool.ndim):
+                if pool.shape[ax] == self.ecfg.n_slots and single.shape[ax] == 1:
+                    return jax.lax.dynamic_update_slice_in_dim(
+                        pool, single.astype(pool.dtype), slot, axis=ax)
+            raise ValueError(f"no batch axis: {pool.shape} vs {single.shape}")
+
+        plen = prefill_state["len"]
+        pooled_len = self.state["len"]
+        state = jax.tree.map(merge, self.state, prefill_state)
+        # shared scalar length: engine slots decode in lockstep from the
+        # pooled max; per-slot logical lengths tracked host-side
+        state["len"] = jnp.maximum(pooled_len, plen)
+        self.state = state
+        self.slot_req[slot] = req
+        self.slot_len[slot] = int(plen)
+        tok = sampling.sample(first_logits[:, -1, :], req.temperature,
+                              self._next_rng())
+        self.last_token[slot] = np.asarray(tok)[:, None]
+        req.out_tokens.append(int(tok[0]))
+
+    def _next_rng(self):
+        self.rng, sub = jax.random.split(self.rng)
+        return sub
+
+    # ----------------------------------------------------------------- run
+    def _admit(self):
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            toks = jnp.asarray(req.tokens, jnp.int32)[None, :]
+            batch = {"tokens": toks}
+            logits, pstate = self._prefill(self.params, batch)
+            self._write_slot(slot, pstate, req, logits)
+
+    def step(self):
+        """One engine iteration: admit + one batched decode step."""
+        self._admit()
+        if all(r is None for r in self.slot_req):
+            return
+        tok = jnp.asarray(self.last_token)
+        logits, self.state = self._decode(self.params, tok, self.state)
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            t = sampling.sample(logits[slot:slot + 1, -1, :],
+                                req.temperature, self._next_rng())
+            t_int = int(t[0])
+            req.out_tokens.append(t_int)
+            self.last_token[slot] = t_int
+            self.slot_len[slot] += 1
+            if (t_int == self.ecfg.eos_id
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or int(self.slot_len[slot]) >= self.ecfg.max_len - 1):
+                req.done = True
+                self.slot_req[slot] = None
+
+    def run(self, max_steps: int = 1000) -> None:
+        for _ in range(max_steps):
+            if not self.queue and all(r is None for r in self.slot_req):
+                break
+            self.step()

@@ -1,0 +1,8 @@
+from repro.sharding.rules import (BASE_RULES, LONG_CONTEXT_OVERRIDES,
+                                  DECODE_OVERRIDES,
+                                  spec_for, tree_shardings, data_axes,
+                                  batch_sharding, replicated)
+
+__all__ = ["BASE_RULES", "LONG_CONTEXT_OVERRIDES", "DECODE_OVERRIDES",
+           "spec_for", "tree_shardings", "data_axes", "batch_sharding",
+           "replicated"]

@@ -1,0 +1,82 @@
+"""Gradient compression for cross-pod (DCN) data parallelism.
+
+int8 block-quantized all-reduce with error feedback (1-bit-Adam-family trick,
+arXiv:1812.07478 lineage): each DP rank quantizes its local gradient shard to
+int8 with a per-block f32 scale, all-reduces (sum) the int8 payload in f32,
+and keeps the quantization residual locally, adding it back into the next
+step's gradient — unbiased over time, 4× less DCN traffic than f32.
+
+Used inside ``shard_map`` over the ("pod",) axis (cross-pod sync is the
+expensive hop; intra-pod reduction stays full-precision). The pure functions
+here are mesh-agnostic and property-tested in tests/test_compression.py.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _pad_to_block(x):
+    n = x.size
+    pad = (-n) % BLOCK
+    flat = jnp.concatenate([x.reshape(-1), jnp.zeros((pad,), x.dtype)])
+    return flat.reshape(-1, BLOCK), n
+
+
+def quantize(x: jax.Array):
+    """x (any shape, float) -> (q int8 (nblk, BLOCK), scale f32 (nblk, 1))."""
+    blocks, n = _pad_to_block(x.astype(jnp.float32))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize(q: jax.Array, scale: jax.Array, shape, dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_residual(x: jax.Array, residual: jax.Array):
+    """Error-feedback step: quantize (x + residual), return the payload and
+    the new residual = (x + residual) - dequant(payload)."""
+    target = x.astype(jnp.float32) + residual
+    q, scale = quantize(target)
+    deq = dequantize(q, scale, x.shape)
+    return (q, scale), target - deq
+
+
+def allreduce_compressed(x: jax.Array, residual: jax.Array, axis_name: str):
+    """Inside shard_map: error-feedback int8 all-reduce-mean over axis_name.
+
+    The int8 payload is summed in f32 (TPU all-reduces don't sum int8
+    natively; the wire format is int8 + per-block scale, modeled here by
+    psumming the dequantized blocks — bytes-on-wire accounting uses the int8
+    payload size, see launch/roofline.py).
+    """
+    (q, scale), new_residual = compress_residual(x, residual)
+    contrib = dequantize(q, scale, x.shape)
+    n = jax.lax.psum(1, axis_name)
+    total = jax.lax.psum(contrib, axis_name)
+    return total / n, new_residual
+
+
+def init_residuals(tree):
+    return jax.tree.map(lambda a: jnp.zeros(a.shape, jnp.float32), tree)
+
+
+def tree_allreduce_compressed(grads, residuals, axis_name: str):
+    out = jax.tree.map(
+        lambda g, r: allreduce_compressed(g, r, axis_name), grads, residuals)
+    new_g = jax.tree.map(lambda o: o[0], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_r = jax.tree.map(lambda o: o[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    return new_g, new_r

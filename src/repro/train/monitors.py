@@ -1,0 +1,125 @@
+"""Training monitors built on the paper's streaming matricized LSE core —
+the technique as a first-class framework feature (DESIGN.md §3).
+
+LossCurveMonitor: O(1)-state polynomial fit of loss-vs-step. Because the
+paper's moments are additive, each `observe` folds one point into the running
+Gram/moment statistics; divergence detection reads the fitted slope, and
+`eta_to(target)` extrapolates. An exponential-forgetting window tracks the
+recent trend exactly (γ-weighted least squares).
+
+StepTimeMonitor: per-host step-time series fitted with degree-1 LSE; hosts
+whose fitted level exceeds the fleet median fit by `threshold`× are flagged
+as stragglers (see repro.runtime.straggler for the mitigation hooks).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fit as fit_lib
+from repro.core import streaming
+
+
+@dataclasses.dataclass
+class LossCurveMonitor:
+    degree: int = 2
+    decay: float = 0.995          # exponential forgetting per observation
+    ridge: float = 1e-6
+
+    def __post_init__(self):
+        self._state = streaming.StreamState.create(
+            self.degree, decay=self.decay, dtype=jnp.float32)
+        self._n = 0
+        self._x_scale = 1000.0     # steps scaled to keep Gram conditioned
+
+    def observe(self, step: int, loss: float) -> None:
+        x = jnp.asarray([step / self._x_scale], jnp.float32)
+        y = jnp.asarray([loss], jnp.float32)
+        self._state = streaming.update(self._state, x, y)
+        self._n += 1
+
+    @property
+    def ready(self) -> bool:
+        return self._n >= self.degree + 2
+
+    def fit(self) -> fit_lib.Polynomial:
+        return streaming.current_fit(self._state, ridge=self.ridge)
+
+    def slope_at(self, step: int) -> float:
+        """d(loss)/d(step) of the fitted curve at `step`."""
+        poly = self.fit()
+        c = np.asarray(poly.coeffs, np.float64)
+        t = step / self._x_scale
+        ks = np.arange(1, len(c))
+        return float(np.sum(ks * c[1:] * t ** (ks - 1)) / self._x_scale)
+
+    def predict(self, step: int) -> float:
+        return float(self.fit()(jnp.asarray(step / self._x_scale,
+                                            jnp.float32)))
+
+    def diverging(self, step: int, patience_slope: float = 0.0) -> bool:
+        """True when the recent fitted trend slopes upward."""
+        return self.ready and self.slope_at(step) > patience_slope
+
+    def eta_to(self, target_loss: float, step: int,
+               horizon: int = 10_000_000) -> int | None:
+        """Steps until the fitted curve reaches target_loss (None if never
+        within horizon). Coarse scan of the extrapolated curve (robust for
+        any degree) + fine refinement inside the first crossing bucket."""
+        if not self.ready:
+            return None
+        poly = self.fit()
+
+        def first_hit(lo: int, hi: int, n: int) -> int | None:
+            steps = np.linspace(lo, hi, n)
+            vals = np.asarray(poly(jnp.asarray(steps / self._x_scale,
+                                               jnp.float32)))
+            hit = np.nonzero(vals <= target_loss)[0]
+            return int(steps[hit[0]]) if hit.size else None
+
+        coarse = first_hit(step, step + horizon, 4096)
+        if coarse is None:
+            return None
+        bucket = max(1, horizon // 4096)
+        fine = first_hit(max(step, coarse - bucket), coarse + 1,
+                         min(4096, 2 * bucket + 2))
+        return (fine if fine is not None else coarse) - step
+
+
+@dataclasses.dataclass
+class StepTimeMonitor:
+    """Fleet-wide straggler detection from per-host step times.
+
+    Keeps one streaming degree-1 fit per host (batched Moments — the paper's
+    matricization makes the per-host fits one vmapped solve)."""
+    n_hosts: int
+    decay: float = 0.98
+    threshold: float = 1.25       # fitted level vs fleet median
+
+    def __post_init__(self):
+        self._state = streaming.StreamState.create(
+            1, batch=(self.n_hosts,), decay=self.decay, dtype=jnp.float32)
+        self._n = 0
+
+    def observe(self, step: int, times_s) -> None:
+        x = jnp.full((self.n_hosts, 1), step / 1000.0, jnp.float32)
+        y = jnp.asarray(times_s, jnp.float32)[:, None]
+        self._state = streaming.update(self._state, x, y)
+        self._n += 1
+
+    def fitted_levels(self, step: int) -> np.ndarray:
+        poly = streaming.current_fit(self._state, ridge=1e-6)
+        t = jnp.full((self.n_hosts,), step / 1000.0, jnp.float32)
+        # evaluate per-host fits at the current step
+        c = poly.coeffs            # (hosts, 2)
+        return np.asarray(c[:, 0] + c[:, 1] * t, np.float64)
+
+    def stragglers(self, step: int) -> list[int]:
+        if self._n < 3:
+            return []
+        lv = self.fitted_levels(step)
+        med = np.median(lv)
+        return [int(i) for i in np.nonzero(lv > self.threshold * med)[0]]

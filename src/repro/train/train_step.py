@@ -1,0 +1,121 @@
+"""Train-step builder: loss, mixed precision, microbatch gradient
+accumulation, MoE aux-loss, z-loss — one jitted function per (model, shape).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.registry import ModelAPI
+from repro.train import optimizer as opt_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    optimizer: opt_lib.AdamWConfig = opt_lib.AdamWConfig()
+    microbatches: int = 1          # grad accumulation splits of the batch
+    z_loss: float = 1e-4
+    aux_loss_weight: float = 1e-2  # MoE load-balance loss
+
+
+def cross_entropy(logits, labels, loss_mask):
+    """logits (B,S,V) any float dtype; labels (B,S) int32; mask (B,S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = loss_mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(nll * mask) / denom, jnp.sum(lse * lse * mask) / denom
+
+
+def _loss_fn(model: ModelAPI, tc: TrainConfig, params, batch):
+    compute = jnp.dtype(model.cfg.compute_dtype)
+    cparams = jax.tree.map(
+        lambda a: a.astype(compute)
+        if jnp.issubdtype(a.dtype, jnp.floating) else a, params)
+    logits, aux = model.forward_train(cparams, batch)
+    labels = batch["labels"]
+    mask = batch.get("loss_mask")
+    if mask is None:
+        mask = jnp.ones(labels.shape, jnp.float32)
+    ce, zsq = cross_entropy(logits, labels, mask)
+    loss = ce + tc.z_loss * zsq + tc.aux_loss_weight * aux
+    return loss, {"ce": ce, "aux": aux, "z": zsq}
+
+
+def init_train_state(model: ModelAPI, rng):
+    params = model.init_params(rng, dtype=jnp.dtype(model.cfg.param_dtype))
+    return {"params": params, "opt": opt_lib.init_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_train_state(model: ModelAPI):
+    return jax.eval_shape(
+        lambda: init_train_state(model, jax.random.PRNGKey(0)))
+
+
+def train_state_specs(model: ModelAPI):
+    """Logical-axis tree matching the train-state structure."""
+    pspecs = model.param_specs()
+    return {"params": pspecs,
+            "opt": {"mu": pspecs, "nu": pspecs, "count": ()},
+            "step": ()}
+
+
+def make_train_step(model: ModelAPI, tc: TrainConfig):
+    """Returns fn(state, batch) -> (state, metrics). jit-ready (donate state).
+
+    microbatches > 1 scans over batch splits, accumulating f32 grads —
+    the standard large-batch/low-HBM trade (see EXPERIMENTS.md §Perf).
+    """
+
+    def grads_of(params, batch):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: _loss_fn(model, tc, p, batch), has_aux=True)(params)
+        return loss, m, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if tc.microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((tc.microbatches, b // tc.microbatches)
+                                 + x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def body(carry, micro):
+                acc, loss_acc = carry
+                loss, _, g = grads_of(params, micro)
+                acc = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss), None
+
+            from repro.models import common as cm
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum), _ = cm.scan(
+                body, (zero, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: g / tc.microbatches, gsum)
+            loss = loss_sum / tc.microbatches
+            metrics = {}
+        else:
+            loss, metrics, grads = grads_of(params, batch)
+        new_params, new_opt, om = opt_lib.apply_updates(
+            tc.optimizer, params, grads, state["opt"])
+        out = {"loss": loss, **metrics, **om}
+        return ({"params": new_params, "opt": new_opt,
+                 "step": state["step"] + 1}, out)
+
+    return step
+
+
+def make_eval_step(model: ModelAPI, tc: TrainConfig):
+    def step(params, batch):
+        loss, m = _loss_fn(model, tc, params, batch)
+        return {"loss": loss, **m}
+    return step

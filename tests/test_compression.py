@@ -1,0 +1,74 @@
+"""Gradient compression: quantization properties + error feedback
+convergence + compressed-allreduce equivalence under shard_map."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.train import compression as comp
+
+settings.register_profile("comp", deadline=None, max_examples=20)
+settings.load_profile("comp")
+
+
+@given(st.integers(0, 10_000))
+def test_quantize_dequantize_bounded_error(seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(0, 3, (37, 19)), jnp.float32)
+    q, scale = comp.quantize(x)
+    assert q.dtype == jnp.int8
+    back = comp.dequantize(q, scale, x.shape)
+    # per-block max error <= scale/2 = max|block| / 254
+    err = np.abs(np.asarray(back - x))
+    bound = np.abs(np.asarray(x)).max() / 127.0
+    assert err.max() <= bound + 1e-6
+
+
+def test_error_feedback_unbiased_over_time():
+    """With error feedback, the ACCUMULATED transmitted signal converges to
+    the accumulated true signal (residual stays bounded)."""
+    rng = np.random.default_rng(0)
+    true = jnp.asarray(rng.normal(0, 1, (256,)), jnp.float32)
+    residual = jnp.zeros((256,), jnp.float32)
+    sent_total = np.zeros(256)
+    for step in range(50):
+        (q, s), residual = comp.compress_residual(true, residual)
+        sent_total += np.asarray(comp.dequantize(q, s, true.shape))
+    # mean transmitted per step ≈ true signal
+    np.testing.assert_allclose(sent_total / 50, np.asarray(true),
+                               rtol=0.05, atol=0.02)
+    assert float(jnp.max(jnp.abs(residual))) < 0.1
+
+
+@pytest.mark.skipif(len(jax.devices()) < 8,
+                    reason="needs 8 fake devices")
+def test_compressed_allreduce_shard_map():
+    from jax.sharding import PartitionSpec as P
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_host_mesh(data=8, model=1)
+    rng = np.random.default_rng(1)
+    grads = jnp.asarray(rng.normal(0, 1, (8, 512)), jnp.float32)
+    residuals = jnp.zeros((8, 512), jnp.float32)
+
+    @jax.jit
+    @lambda f: jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+                             out_specs=(P("data"), P("data")))
+    def sync(g, r):
+        out, nr = comp.allreduce_compressed(g[0], r[0], "data")
+        return out[None], nr[None]
+
+    mean_c, _ = sync(grads, residuals)
+    true_mean = jnp.mean(grads, axis=0)
+    got = np.asarray(mean_c[0])
+    np.testing.assert_allclose(got, np.asarray(true_mean),
+                               rtol=0.05, atol=0.03)
+
+
+def test_wire_bytes_are_4x_smaller():
+    """The int8 payload (what crosses DCN) is 4x smaller than f32 + per-256
+    scales overhead."""
+    x = jnp.ones((1024,), jnp.float32)
+    q, scale = comp.quantize(x)
+    wire = q.size + scale.size * 4
+    assert wire < x.size * 4 / 3.5

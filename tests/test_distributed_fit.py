@@ -1,0 +1,80 @@
+"""Distributed (shard_map) fit == serial fit, on a fake 8-device mesh.
+
+Runs in a subprocess-isolated pytest module? No — the whole test session
+uses 8 host devices via conftest-free env guard: these tests SKIP unless the
+process was started with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(tests/run_distributed.py wrapper and the CI target set it). A conftest
+option would force 8 devices on every test; we keep the default session at
+1 device per the dry-run isolation rule.
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.launch import mesh as mesh_lib
+
+needs_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@needs_devices
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("normalize", [False, True])
+def test_distributed_equals_serial(use_kernel, normalize):
+    mesh = mesh_lib.make_host_mesh(data=4, model=2)
+    rng = np.random.default_rng(0)
+    n = 4096
+    x = jnp.asarray(rng.uniform(-10, 10, n), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, n) + 3 * rng.uniform(-10, 10, n),
+                    jnp.float32)
+    fit = core.make_distributed_fit(mesh, degree=2, data_axes=("data",),
+                                    normalize=normalize,
+                                    use_kernel=use_kernel)
+    poly, moments = fit(x, y)
+    serial = core.polyfit(x, y, 2, normalize=normalize,
+                          accum_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(poly.coeffs),
+                               np.asarray(serial.coeffs),
+                               rtol=5e-3, atol=5e-3)
+    assert float(moments.count) == n
+
+
+@needs_devices
+def test_distributed_weighted_padding():
+    """Ragged global dataset: padded tail carries weight 0."""
+    mesh = mesh_lib.make_host_mesh(data=8, model=1)
+    rng = np.random.default_rng(1)
+    n_real, n_pad = 1000, 24
+    x = np.zeros(n_real + n_pad, np.float32)
+    y = np.zeros(n_real + n_pad, np.float32)
+    w = np.zeros(n_real + n_pad, np.float32)
+    x[:n_real] = rng.uniform(-5, 5, n_real)
+    y[:n_real] = 2.0 + 0.5 * x[:n_real]
+    w[:n_real] = 1.0
+    fit = core.make_distributed_fit(mesh, degree=1)
+    poly, m = fit(jnp.asarray(x), jnp.asarray(y), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(poly.coeffs), [2.0, 0.5],
+                               rtol=1e-3, atol=1e-3)
+    assert float(m.count) == n_real
+
+
+@needs_devices
+def test_collective_payload_is_tiny():
+    """The paper's point at pod scale: the only collective moves O(m²)
+    bytes, independent of n. Verified on the lowered HLO."""
+    from repro.launch import roofline as roof
+    mesh = mesh_lib.make_host_mesh(data=8, model=1)
+    fit = core.make_distributed_fit(mesh, degree=3)
+    n = 1 << 20
+    s = jax.ShapeDtypeStruct((n,), jnp.float32)
+    lowered = fit.lower(s, s, s)
+    coll = roof.collective_bytes(lowered.compile().as_text())
+    total = sum(coll.values())
+    # all-reduce of gram(4x4)+vty(4)+yty+count floats ≈ 22 f32 ≈ 88B;
+    # wire model doubles it; anything under 4KB proves O(m²) not O(n)
+    assert total < 4096, coll

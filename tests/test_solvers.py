@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) for the solver layer and the fit's
+mathematical invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _well_conditioned_system(seed, m):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, m))
+    a = a @ a.T + m * np.eye(m)     # SPD, well conditioned
+    b = rng.normal(0, 1, (m,))
+    return jnp.asarray(a, jnp.float32), jnp.asarray(b, jnp.float32)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 9))
+def test_gaussian_elimination_solves(seed, m):
+    a, b = _well_conditioned_system(seed, m)
+    x = core.gaussian_elimination(a, b)
+    np.testing.assert_allclose(np.asarray(a @ x), np.asarray(b),
+                               rtol=2e-3, atol=2e-3)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 9))
+def test_gauss_matches_cholesky_on_spd(seed, m):
+    a, b = _well_conditioned_system(seed, m)
+    xg = core.gaussian_elimination(a, b)
+    xc = core.cholesky_solve(a, b)
+    np.testing.assert_allclose(np.asarray(xg), np.asarray(xc),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_gaussian_elimination_pivots():
+    """Zero leading pivot requires row exchange — the paper's plain
+    elimination would divide by zero; partial pivoting must handle it."""
+    a = jnp.asarray([[0.0, 1.0], [1.0, 0.0]])
+    b = jnp.asarray([2.0, 3.0])
+    x = core.gaussian_elimination(a, b)
+    np.testing.assert_allclose(np.asarray(x), [3.0, 2.0], rtol=1e-6)
+
+
+def test_gaussian_elimination_batched():
+    rng = np.random.default_rng(0)
+    a = rng.normal(0, 1, (5, 4, 4)) + 4 * np.eye(4)
+    b = rng.normal(0, 1, (5, 4))
+    x = core.gaussian_elimination(jnp.asarray(a, jnp.float32),
+                                  jnp.asarray(b, jnp.float32))
+    for i in range(5):
+        np.testing.assert_allclose(a[i] @ np.asarray(x[i], np.float64),
+                                   b[i], rtol=1e-3, atol=1e-3)
+
+
+# ------------------------------------------------------------ fit invariants
+@given(st.integers(0, 10_000), st.integers(0, 4), st.integers(8, 200))
+def test_exact_polynomial_recovery(seed, degree, n):
+    """Noise-free data from a degree-m polynomial is recovered exactly
+    (interpolation property of least squares)."""
+    rng = np.random.default_rng(seed)
+    coeffs = rng.normal(0, 1, degree + 1)
+    x = np.sort(rng.uniform(-2, 2, n))
+    y = np.polyval(coeffs[::-1], x)
+    poly = core.polyfit(jnp.asarray(x, jnp.float32),
+                        jnp.asarray(y, jnp.float32), degree, normalize=True)
+    np.testing.assert_allclose(np.asarray(poly.monomial_coeffs(), np.float64),
+                               coeffs, rtol=5e-2, atol=5e-3)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3))
+def test_residual_orthogonality(seed, degree):
+    """LSE optimality: residuals are orthogonal to every basis column —
+    Vᵀ(y - Va) = 0. This is the defining property of the minimum."""
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, 64)
+    y = rng.normal(0, 1, 64)
+    xj = jnp.asarray(x, jnp.float32)
+    yj = jnp.asarray(y, jnp.float32)
+    poly = core.polyfit(xj, yj, degree)
+    resid = yj - poly(xj)
+    v = core.vandermonde(xj, degree)
+    ortho = np.asarray(jnp.einsum("nk,n->k", v, resid), np.float64)
+    scale = np.asarray(jnp.einsum("nk,n->k", jnp.abs(v), jnp.abs(yj)))
+    np.testing.assert_allclose(ortho / (scale + 1e-9), 0.0, atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+def test_fit_beats_any_perturbation(seed):
+    """Σe² at the LSE solution is <= Σe² at perturbed coefficients (the
+    paper's 'best-fit' claim as a property)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, 50), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, 50), jnp.float32)
+    poly = core.polyfit(x, y, 2)
+    base = float(core.fit_report(poly, x, y).sse)
+    for _ in range(5):
+        delta = jnp.asarray(rng.normal(0, 0.05, 3), jnp.float32)
+        pert = core.Polynomial(poly.coeffs + delta, poly.domain_shift,
+                               poly.domain_scale)
+        assert float(core.fit_report(pert, x, y).sse) >= base - 1e-3
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_moments_additivity(seed, degree):
+    """The core systems property: moments of a union = sum of moments.
+    This is what makes the algorithm shard- and stream-able."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, 64), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, 64), jnp.float32)
+    whole = core.gram_moments(x, y, degree)
+    parts = (core.gram_moments(x[:20], y[:20], degree)
+             + core.gram_moments(x[20:], y[20:], degree))
+    for f in ("gram", "vty", "yty", "count"):
+        np.testing.assert_allclose(np.asarray(getattr(whole, f)),
+                                   np.asarray(getattr(parts, f)),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_blocked_equals_direct():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(-2, 2, 1000), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, 1000), jnp.float32)
+    direct = core.gram_moments(x, y, 3)
+    blocked = core.gram_moments_blocked(x, y, 3, block=128)
+    np.testing.assert_allclose(np.asarray(direct.gram),
+                               np.asarray(blocked.gram), rtol=2e-4, atol=1e-3)
+
+
+def test_chebyshev_basis_better_conditioned():
+    """Beyond-paper: Chebyshev Gram condition number << monomial Gram
+    condition number for higher degrees on [-1, 1]."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.uniform(-1, 1, 512), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, 512), jnp.float32)
+    gm = core.gram_moments(x, y, 8, basis=core.MONOMIAL).gram
+    gc = core.gram_moments(x, y, 8, basis=core.CHEBYSHEV).gram
+    cm = np.linalg.cond(np.asarray(gm, np.float64))
+    cc = np.linalg.cond(np.asarray(gc, np.float64))
+    assert cc < cm / 100
+
+
+def test_power_law_fit():
+    x = jnp.asarray(np.linspace(1e3, 1e6, 200), jnp.float32)
+    y = 5.0 * x ** -0.3 + 0.1
+    law = core.fit_power_law(x, y)
+    assert abs(float(law.exponent) + 0.3) < 0.05
+    assert abs(float(law.scale) - 5.0) / 5.0 < 0.3

@@ -1,0 +1,109 @@
+"""Streaming fitter (O(1) state) and the LSE-powered training monitors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import core
+from repro.core import streaming
+from repro.train.monitors import LossCurveMonitor, StepTimeMonitor
+
+settings.register_profile("stream", deadline=None, max_examples=20)
+settings.load_profile("stream")
+
+
+@given(st.integers(0, 10_000), st.integers(1, 3))
+def test_streaming_equals_batch(seed, degree):
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, 96).astype(np.float32)
+    y = rng.normal(0, 1, 96).astype(np.float32)
+    state = streaming.StreamState.create(degree)
+    for lo in range(0, 96, 32):
+        state = streaming.update(state, jnp.asarray(x[lo:lo + 32]),
+                                 jnp.asarray(y[lo:lo + 32]))
+    stream_poly = streaming.current_fit(state)
+    batch_poly = core.polyfit(jnp.asarray(x), jnp.asarray(y), degree)
+    np.testing.assert_allclose(np.asarray(stream_poly.coeffs),
+                               np.asarray(batch_poly.coeffs),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_streaming_decay_is_exact_ewls():
+    """γ-decayed streaming fit == direct weighted LSE with weights γ^age."""
+    rng = np.random.default_rng(0)
+    x = rng.uniform(-1, 1, 64).astype(np.float32)
+    y = (2.0 + 3.0 * x + rng.normal(0, 0.1, 64)).astype(np.float32)
+    gamma = 0.97
+    state = streaming.StreamState.create(1, decay=gamma)
+    for i in range(0, 64, 16):
+        state = streaming.update(state, jnp.asarray(x[i:i + 16]),
+                                 jnp.asarray(y[i:i + 16]))
+    got = np.asarray(streaming.current_fit(state).coeffs)
+
+    ages = np.arange(63, -1, -1)
+    w = gamma ** ages
+    m = core.gram_moments(jnp.asarray(x), jnp.asarray(y), 1,
+                          weights=jnp.asarray(w, jnp.float32))
+    want = np.asarray(core.fit_from_moments(m).coeffs)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_streaming_sse_tracks():
+    rng = np.random.default_rng(1)
+    x = rng.uniform(-1, 1, 128).astype(np.float32)
+    y = (1.0 - 0.5 * x + rng.normal(0, 0.2, 128)).astype(np.float32)
+    state = streaming.StreamState.create(1)
+    state = streaming.update(state, jnp.asarray(x), jnp.asarray(y))
+    poly = streaming.current_fit(state)
+    sse = float(streaming.current_sse(state, poly))
+    direct = float(np.sum((np.asarray(poly(jnp.asarray(x))) - y) ** 2))
+    assert abs(sse - direct) / direct < 0.05
+
+
+# -------------------------------------------------------------- monitors
+def test_loss_monitor_detects_divergence():
+    mon = LossCurveMonitor(degree=2, decay=0.9)
+    for step in range(50):
+        mon.observe(step, 5.0 * np.exp(-step / 30))     # improving
+    assert not mon.diverging(49)
+    for step in range(50, 90):
+        mon.observe(step, 1.0 + 0.05 * (step - 50))     # diverging
+    assert mon.diverging(89)
+
+
+def test_loss_monitor_eta():
+    mon = LossCurveMonitor(degree=1, decay=1.0)
+    for step in range(100):
+        mon.observe(step, 10.0 - 0.01 * step)           # linear descent
+    eta = mon.eta_to(8.0, 99)
+    assert eta is not None and 50 <= eta <= 150          # ~100 steps away
+    assert mon.eta_to(-100.0, 99, horizon=1000) is None
+
+
+def test_steptime_monitor_flags_straggler():
+    mon = StepTimeMonitor(n_hosts=8, threshold=1.3)
+    rng = np.random.default_rng(2)
+    for step in range(20):
+        t = 1.0 + rng.normal(0, 0.02, 8)
+        t[5] = 1.8 + rng.normal(0, 0.05)                 # slow host
+        mon.observe(step, t)
+    assert mon.stragglers(20) == [5]
+
+
+def test_steptime_monitor_no_false_positive():
+    mon = StepTimeMonitor(n_hosts=8, threshold=1.3)
+    rng = np.random.default_rng(3)
+    for step in range(20):
+        mon.observe(step, 1.0 + rng.normal(0, 0.03, 8))
+    assert mon.stragglers(20) == []
+
+
+def test_reslice_plan():
+    from repro.runtime import plan_reslice
+    mon = StepTimeMonitor(n_hosts=4, threshold=1.3)
+    for step in range(10):
+        mon.observe(step, [1.0, 1.0, 2.0, 1.0])          # host 2 at half speed
+    plan = plan_reslice(mon, 10, global_batch=64)
+    assert plan.total == 64
+    assert plan.shares[2] < plan.shares[0]               # slow host gets less
+    assert min(plan.shares) >= 1
