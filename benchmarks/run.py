@@ -1,11 +1,16 @@
 """Benchmark harness — one entry per paper table/figure + framework benches.
 
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
-quantity). Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+quantity) and writes the same rows machine-readably to
+``benchmarks/BENCH_<git-rev>.json`` so the perf trajectory is tracked across
+PRs. Run: PYTHONPATH=src python -m benchmarks.run [--quick]
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
 import sys
 import time
 
@@ -16,6 +21,7 @@ import numpy as np
 from repro import core
 from repro.core import streaming
 from repro.data import curve_dataset
+from repro.kernels import moments as kernel
 from repro.kernels import ops as kernel_ops
 
 
@@ -29,8 +35,13 @@ def _time(fn, *args, iters=20, warmup=3):
     return (time.perf_counter() - t0) / iters * 1e6  # us
 
 
+ROWS: list[dict] = []
+
+
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    ROWS.append({"name": name, "us_per_call": round(float(us), 1),
+                 "derived": derived})
 
 
 # ---------------------------------------------------------------- Table II-V
@@ -88,8 +99,8 @@ def bench_speedup(quick: bool):
 def bench_kernel(quick: bool):
     """Pallas moments kernel (interpret mode on CPU): correctness-equivalent
     throughput vs the jnp path; derived = Mpoints/s of the jnp path (the
-    kernel's CPU interpret timing is NOT the TPU number — see EXPERIMENTS.md
-    §Roofline for the TPU projection)."""
+    kernel's CPU interpret timing is NOT the TPU number — EXPERIMENTS.md
+    §Roofline derives the TPU projection)."""
     n = 1 << 18 if quick else 1 << 20
     x, y, _ = curve_dataset(n, degree=3, seed=1)
     jnp_path = jax.jit(lambda x, y: core.gram_moments(x, y, 3).gram)
@@ -102,6 +113,59 @@ def bench_kernel(quick: bool):
     row("moments_jnp", us, f"{n / us:.1f}Mpts/s")
     row("moments_blocked", us_b, f"{n / us_b:.1f}Mpts/s")
     row("moments_pallas_interpret", us_k, f"{n / us_k:.2f}Mpts/s(interpret)")
+
+
+def bench_kernel_packed(quick: bool):
+    """Packed multi-series kernel on the batched degree-3 workload (the
+    monitors/serving hot path). derived = MXU-FLOPs-per-fit ratio vs the
+    plain one-series-per-tile layout (the hardware-independent speedup; 25×
+    at degree 3), interpret-mode wall speedup, and max relative error of the
+    packed Gram vs core.gram_moments."""
+    deg = 3
+    b = 32 if quick else 64
+    n = 2048 if quick else 4096
+    x, y, _ = curve_dataset(n, degree=deg, seed=4, batch=(b,))
+
+    plain = jax.jit(lambda x, y: kernel_ops.moments(
+        x, y, deg, packing="plain").gram)
+    packed = jax.jit(lambda x, y: kernel_ops.moments(
+        x, y, deg, packing="packed").gram)
+    us_plain = _time(plain, x, y, iters=2, warmup=1)
+    us_packed = _time(packed, x, y, iters=2, warmup=1)
+
+    # MXU work is identical per (128, n)x(n, 128) tile product; the packed
+    # layout amortizes each product over P fits instead of 1.
+    pfac = kernel.packing_factor(deg)
+    groups = -(-b // pfac)
+    flops_per_fit_plain = 2 * kernel.K_PAD ** 2 * n            # b tiles / b
+    flops_per_fit_packed = 2 * kernel.K_PAD ** 2 * n * groups / b
+    ratio = flops_per_fit_plain / flops_per_fit_packed
+
+    g_ref = core.gram_moments(x, y, deg, accum_dtype=jnp.float32).gram
+    rel = float(jnp.max(jnp.abs(packed(x, y) - g_ref)
+                        / jnp.maximum(jnp.abs(g_ref), 1e-9)))
+    row("moments_packed", us_packed,
+        f"flops_per_fit_ratio={ratio:.1f}x;interpret_speedup="
+        f"{us_plain / us_packed:.1f}x;max_rel_err_vs_gram={rel:.2e}")
+
+
+def bench_fused_report(quick: bool):
+    """Fused evaluate+residual+SSE/R pass vs the materializing fit_report.
+    derived = Mpts/s of the fused pass and the HBM bytes it avoids writing
+    (fitted + residuals arrays)."""
+    b = 16 if quick else 32
+    n = 1 << 14 if quick else 1 << 16
+    x, y, _ = curve_dataset(n, degree=3, seed=5, batch=(b,))
+    poly = core.polyfit(x, y, 3)
+
+    base = jax.jit(lambda p, x, y: core.fit_report(p, x, y).sse)
+    fused = jax.jit(lambda p, x, y: core.fit_report_streamed(p, x, y).sse)
+    us_base = _time(base, poly, x, y, iters=3, warmup=1)
+    us_fused = _time(fused, poly, x, y, iters=3, warmup=1)
+    saved = 2 * b * n * 4  # fitted + residuals f32, never hit HBM
+    row("fused_report", us_fused,
+        f"{b * n / us_fused:.1f}Mpts/s;materializing_us={us_base:.1f};"
+        f"hbm_bytes_avoided={saved}")
 
 
 def bench_streaming(quick: bool):
@@ -159,13 +223,46 @@ def bench_e2e_train(quick: bool):
     row("train_step_smoke", us, f"{b * s / (us / 1e6):.0f}tok/s")
 
 
-BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_streaming,
-           bench_batched_fits, bench_e2e_train]
+BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
+           bench_fused_report, bench_streaming, bench_batched_fits,
+           bench_e2e_train]
+
+
+def _git_rev() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, check=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip()
+    except Exception:  # noqa: BLE001 — no git / not a checkout
+        return "norev"
+
+
+def _write_json(quick: bool) -> str:
+    rev = _git_rev()
+    # quick runs get their own file so a smoke check at the same rev never
+    # overwrites the full-run numbers the perf trajectory tracks
+    suffix = "_quick" if quick else ""
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        f"BENCH_{rev}{suffix}.json")
+    payload = {
+        "rev": rev,
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+        "backend": jax.default_backend(),
+        "quick": quick,
+        "rows": ROWS,
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2)
+    return path
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-json", action="store_true",
+                    help="skip writing benchmarks/BENCH_<rev>.json")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for bench in BENCHES:
@@ -175,6 +272,8 @@ def main() -> None:
             print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
                   file=sys.stderr)
             raise
+    if not args.no_json:
+        print(f"wrote {_write_json(args.quick)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

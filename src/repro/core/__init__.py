@@ -8,8 +8,10 @@ from repro.core.moments import (Moments, gram_moments, gram_moments_blocked,
 from repro.core.solve import (gaussian_elimination, cholesky_solve,
                               qr_solve_vandermonde)
 from repro.core.solve import solve as solve_linear
-from repro.core.fit import (Polynomial, FitReport, polyfit, polyfit_qr,
-                            fit_from_moments, fit_report, sse_from_moments)
+from repro.core.fit import (Polynomial, FitReport, StreamedFitReport,
+                            polyfit, polyfit_qr, fit_from_moments,
+                            fit_report, fit_report_streamed,
+                            sse_from_moments)
 from repro.core.distributed import make_distributed_fit, local_moments, psum_moments
 from repro.core.streaming import StreamState, update, current_fit, current_sse
 from repro.core.scaling_laws import PowerLaw, fit_power_law
@@ -20,8 +22,9 @@ __all__ = [
     "hankel_from_power_sums", "moment_vector",
     "gaussian_elimination", "cholesky_solve", "qr_solve_vandermonde",
     "solve_linear",
-    "Polynomial", "FitReport", "polyfit", "polyfit_qr", "fit_from_moments",
-    "fit_report", "sse_from_moments",
+    "Polynomial", "FitReport", "StreamedFitReport", "polyfit", "polyfit_qr",
+    "fit_from_moments", "fit_report", "fit_report_streamed",
+    "sse_from_moments",
     "make_distributed_fit", "local_moments", "psum_moments",
     "StreamState", "update", "current_fit", "current_sse",
     "PowerLaw", "fit_power_law",

@@ -85,17 +85,20 @@ def evaluate(coeffs: jax.Array, x: jax.Array, *, degree: int | None = None,
     deg = (coeffs.shape[-1] - 1) if degree is None else degree
     if domain is not None:
         x = domain.apply(x)
+    # batched coeffs (..., m+1) broadcast against x (..., n) on a new axis
+    c = ((lambda k: coeffs[..., k, None]) if coeffs.ndim > 1
+         else (lambda k: coeffs[..., k]))
     if basis == MONOMIAL:
-        acc = jnp.full_like(x, coeffs[..., deg])
+        acc = jnp.zeros_like(x) + c(deg)
         for k in range(deg - 1, -1, -1):
-            acc = acc * x + coeffs[..., k]
+            acc = acc * x + c(k)
         return acc
     # Clenshaw for Chebyshev
     b1 = jnp.zeros_like(x)
     b2 = jnp.zeros_like(x)
     for k in range(deg, 0, -1):
-        b1, b2 = 2.0 * x * b1 - b2 + coeffs[..., k], b1
-    return x * b1 - b2 + coeffs[..., 0]
+        b1, b2 = 2.0 * x * b1 - b2 + c(k), b1
+    return x * b1 - b2 + c(0)
 
 
 def monomial_coeffs_from_domain(coeffs: jax.Array, domain: Domain,

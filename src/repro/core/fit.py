@@ -61,6 +61,7 @@ def fit_from_moments(m: moments_lib.Moments, *, method: str = "gauss",
 @partial(jax.jit, static_argnames=("degree", "method", "basis", "normalize",
                                    "accum_dtype", "use_kernel"))
 def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
+            weights: jax.Array | None = None,
             method: str = "gauss", basis: str = basis_lib.MONOMIAL,
             normalize: bool = False, accum_dtype=None,
             use_kernel: bool = False) -> Polynomial:
@@ -68,16 +69,24 @@ def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
 
     normalize=False, basis=monomial, method=gauss  ==  the paper's algorithm.
     Batched: x, y may carry leading batch axes (..., n).
-    use_kernel=True routes moment accumulation through the Pallas kernel.
+    weights: optional per-point weights (..., n) — weighted least squares.
+    use_kernel=True routes moment accumulation through the Pallas kernel
+    (packed multi-series tiles are auto-selected for batched inputs).
     """
     dom = (basis_lib.Domain.from_data(x) if normalize
            else basis_lib.Domain.identity(x.dtype))
     xt = dom.apply(x)
     if use_kernel:
+        if basis != basis_lib.MONOMIAL:
+            raise ValueError("use_kernel=True supports the monomial basis "
+                             "only (the Pallas kernel builds monomial power "
+                             "rows); use use_kernel=False for chebyshev")
         from repro.kernels import ops as kernel_ops
-        m = kernel_ops.moments(xt, y, degree, accum_dtype=accum_dtype)
+        m = kernel_ops.moments(xt, y, degree, weights=weights,
+                               accum_dtype=accum_dtype)
     else:
         m = moments_lib.gram_moments(xt, y, degree, basis=basis,
+                                     weights=weights,
                                      accum_dtype=accum_dtype)
     return fit_from_moments(m, method=method, domain=dom, basis=basis)
 
@@ -119,6 +128,58 @@ def fit_report(poly: Polynomial, x: jax.Array, y: jax.Array) -> FitReport:
         coeffs = poly.monomial_coeffs()
     return FitReport(coeffs=coeffs, fitted=fitted, residuals=resid,
                      sse=sse, r=r)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class StreamedFitReport:
+    """``fit_report`` accuracy numbers computed in one streamed pass.
+
+    Unlike ``FitReport`` there are no (..., n) ``fitted``/``residuals``
+    arrays — the fused Pallas kernel reduces them on the fly, so HBM traffic
+    is one read of x/y and O(batch) output."""
+
+    coeffs: jax.Array          # the fit's coefficients (fitted basis/domain)
+    sse: jax.Array             # Σ w e²  (paper's headline accuracy number)
+    r: jax.Array               # correlation coefficient R
+    count: jax.Array           # Σ w (weighted mass used for the means)
+
+
+def fit_report_streamed(poly: Polynomial, x: jax.Array, y: jax.Array, *,
+                        weights: jax.Array | None = None,
+                        block_n: int | None = None,
+                        interpret: bool | None = None) -> StreamedFitReport:
+    """Fused-kernel ``fit_report``: SSE and R without materializing the
+    (..., n) fitted/residual arrays (the `fused_report` hot path).
+
+    Matches ``fit_report``'s sse/r to fp tolerance for monomial fits; falls
+    back to a materializing jnp pass with identical weighted semantics for
+    chebyshev (Clenshaw is not fused).
+    """
+    if poly.basis != basis_lib.MONOMIAL:
+        fitted = poly(x)
+        w = jnp.ones_like(y) if weights is None else weights
+        e = y - fitted
+        s = {"sw": jnp.sum(w, axis=-1),
+             "sy": jnp.sum(w * y, axis=-1),
+             "syy": jnp.sum(w * y * y, axis=-1),
+             "sf": jnp.sum(w * fitted, axis=-1),
+             "sff": jnp.sum(w * fitted * fitted, axis=-1),
+             "syf": jnp.sum(w * y * fitted, axis=-1),
+             "sse": jnp.sum(w * e * e, axis=-1)}
+    else:
+        from repro.kernels import ops as kernel_ops
+
+        dom = basis_lib.Domain(poly.domain_shift, poly.domain_scale)
+        s = kernel_ops.fused_report_sums(dom.apply(x), y, poly.coeffs,
+                                         weights=weights, block_n=block_n,
+                                         interpret=interpret)
+    n = s["sw"]
+    cov = s["syf"] - s["sy"] * s["sf"] / n
+    var_y = s["syy"] - s["sy"] * s["sy"] / n
+    var_f = s["sff"] - s["sf"] * s["sf"] / n
+    r = cov / jnp.sqrt(var_y * var_f)
+    return StreamedFitReport(coeffs=poly.coeffs, sse=s["sse"], r=r, count=n)
 
 
 def sse_from_moments(m: moments_lib.Moments, coeffs: jax.Array) -> jax.Array:

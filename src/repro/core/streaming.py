@@ -35,17 +35,36 @@ class StreamState:
                            jnp.asarray(decay, dtype))
 
 
-@partial(jax.jit, static_argnames=("basis",))
+@partial(jax.jit, static_argnames=("basis", "use_kernel"))
 def update(state: StreamState, x: jax.Array, y: jax.Array, *,
            weights: jax.Array | None = None,
-           basis: str = basis_lib.MONOMIAL) -> StreamState:
+           basis: str = basis_lib.MONOMIAL,
+           use_kernel: bool = False) -> StreamState:
     """Fold a new chunk (..., n) into the running moments.
 
     With decay γ, previous mass is multiplied by γ**n_new, giving exact
-    exponentially-weighted least squares (newest point has weight 1)."""
-    new = moments_lib.gram_moments(
-        x, y, state.moments.degree, basis=basis,
-        weights=_decay_weights(state, x, weights))
+    exponentially-weighted least squares (newest point has weight 1).
+
+    use_kernel=True accumulates the chunk through the Pallas moments kernel
+    (packed multi-series tiles for batched streams) — same gram/vty/yty,
+    kernel-rate ingest for the monitors/serving hot path. Count caveat: the
+    kernel path records the chunk's TRUE point count where the jnp path
+    records Σw — they agree only for unit weights at γ=1, so don't mix
+    kernel- and jnp-produced states when the count field matters (the solve
+    itself never reads count)."""
+    degree = state.moments.degree
+    w = _decay_weights(state, x, weights)
+    if use_kernel:
+        if basis != basis_lib.MONOMIAL:
+            raise ValueError("kernel streaming update supports the monomial "
+                             "basis only")
+        from repro.kernels import ops as kernel_ops
+        new = kernel_ops.moments(x, y, degree, weights=w,
+                                 accum_dtype=state.moments.gram.dtype)
+        new = jax.tree.map(lambda a, ref: a.astype(ref.dtype),
+                           new, state.moments)
+    else:
+        new = moments_lib.gram_moments(x, y, degree, basis=basis, weights=w)
     n_new = jnp.asarray(x.shape[-1], state.decay.dtype)
     g = state.decay ** n_new
     old = jax.tree.map(lambda a: a * g, state.moments)

@@ -1,22 +1,70 @@
-"""Pallas TPU kernel: blocked Vandermonde-Gram moment accumulation.
+"""Pallas TPU kernels: blocked Vandermonde-Gram moments + fused fit report.
 
 TPU-native adaptation of the paper's CUDA moment kernel (DESIGN.md §2):
 
 * The paper's per-thread partial power sums become a *single MXU matmul* per
   data tile. With W = [V | y] (rows = powers of x, then y), the product
   G = (W ⊙ w) Wᵀ simultaneously yields the Hankel/Gram matrix, the moment
-  vector Vᵀy, Σwy² and Σw (= count) — every sufficient statistic of the fit.
+  vector Vᵀy, Σwy² and Σw — every sufficient statistic of the fit.
 * Grid streams (batch, n-block) tiles HBM→VMEM; the (128, 128) accumulator
   tile stays VMEM-resident across the n-block grid dimension (constant
   index_map), mirroring the shared-memory block reduction on GPU.
 * Power rows are built by iterated multiply (no transcendental `pow`),
   matching the paper's "matricized" construction.
 
-Layout choices (TPU):
-  W tile: (K_PAD=128, block_n) — sublane dim 128 rows of powers, lane dim the
-  data block (multiple of 128). G += W_w @ Wᵀ contracts over lanes on the MXU
-  with f32 accumulation (preferred_element_type), independent of input dtype.
-  VMEM footprint ≈ (2·K_PAD·block_n + K_PAD²)·4B ≈ 4.3 MB at block_n=4096.
+Three kernels live here:
+
+``moments_extended``          one series per (128, block_n) tile (the
+                              original layout; rows degree+2..127 are zero).
+``moments_packed_extended``   P = 128 // (degree+2) series per tile — the
+                              packed layout below.
+``fused_report_sums``         one streamed pass computing everything
+                              ``core.fit.fit_report`` needs (SSE, R) without
+                              materializing fitted/residual arrays in HBM.
+
+Packed layout (the perf-critical path for batched fits)
+-------------------------------------------------------
+The MXU always multiplies full (128, block_n) × (block_n, 128) tiles, so
+with one series per tile a degree-3 fit (K = degree+2 = 5 live rows) wastes
+123/128 ≈ 96% of every matmul on zeros. Packing P = 128 // K independent
+series into the sublane dimension turns that padding into useful work:
+
+      sublane 0   ┌ 1  1  1 … ┐   series 0, power 0
+              1   │ x₀ row    │   series 0, power 1..m
+              …   │ …         │
+              K-1 │ y₀ row    │   series 0, response
+              K   │ 1  1  1 … │   series 1, power 0
+              …   │ …         │   …
+          P·K-1   │ y_{P-1}   │   series P-1, response
+          P·K..127└ 0 zeros   ┘   remainder rows (128 mod K)
+
+G = (W ⊙ w) Wᵀ then contains each series' (K × K) extended Gram as the
+p-th diagonal block G[pK:(p+1)K, pK:(p+1)K]; off-diagonal blocks are
+cross-series products we simply never read. Per *fit* the MXU work drops
+from 2·128²·n to 2·128²·n/P FLOPs — 25× at degree 3, 14× at degree 7,
+9× at degree 12. Tail series (batch not divisible by P) ride in with
+weight 0, so they contribute exact zeros and are sliced away by ops.py.
+
+VMEM footprint of the packed tile (f32 accumulate, block_n = 4096):
+  x/y/w input tiles   3 · P·block_n · 4 B   ≈ 1.2 MB  (P = 25)
+  W and (W ⊙ w)       2 · 128·block_n · 4 B ≈ 4.2 MB
+  G accumulator       128² · 4 B            ≈ 65 KB   (×2 if compensated)
+  total ≈ 5.5 MB — comfortably inside the ~16 MB/core budget; halve
+  block_n for the compensated path if other buffers share the core.
+
+Path selection (see ``ops.moments``): packed when the batch has ≥ 2 series
+and P ≥ 2 (i.e. degree ≤ 62); plain for single series or huge degrees; the
+pure-jnp ``core.gram_moments`` remains the non-kernel reference path.
+
+Compensated accumulation
+------------------------
+Skala (arXiv:1802.07591) shows naive monomial power sums lose precision at
+exactly the large-n scale the paper targets. ``compensated=True`` keeps a
+second VMEM-resident tile carrying a Kahan running-error term: each block's
+contribution is corrected by the error of the previous addition, making the
+cross-block reduction error O(1) in the number of blocks instead of O(nblk).
+Costs one extra (128, 128) tile and 3 extra VPU adds per block — invisible
+next to the MXU matmul.
 """
 from __future__ import annotations
 
@@ -29,26 +77,56 @@ from jax.experimental import pallas as pl
 K_PAD = 128          # fixed row count: degree + 2 <= 128
 DEFAULT_BLOCK_N = 4096
 
+# index layout of the fused-report sums vector (lane j of the (B, 128) out)
+SUM_W, SUM_Y, SUM_YY, SUM_F, SUM_FF, SUM_YF, SUM_SSE, N_SUMS = range(8)
 
-def _moments_kernel(x_ref, y_ref, w_ref, g_ref, *, degree: int,
-                    accum_dtype):
-    """One (batch, block) grid step: G[b] += (W·w) Wᵀ for this tile."""
-    i = pl.program_id(1)
 
+def packing_factor(degree: int) -> int:
+    """How many independent series fit in one 128-sublane tile."""
+    return K_PAD // (degree + 2)
+
+
+def _accum_init(i, out_refs):
+    """Zero all VMEM accumulator tiles on the first n-block."""
     @pl.when(i == 0)
     def _init():
-        g_ref[...] = jnp.zeros_like(g_ref)
+        for ref in out_refs:
+            ref[...] = jnp.zeros_like(ref)
+
+
+def _accum_add(update, g_ref, c_ref):
+    """g += update, optionally Kahan-compensated via the c_ref error tile."""
+    if c_ref is None:
+        g_ref[...] += update
+    else:
+        y = update - c_ref[...]
+        t = g_ref[...] + y
+        c_ref[...] = (t - g_ref[...]) - y
+        g_ref[...] = t
+
+
+def _power_rows(x, y, degree):
+    """[x^0, ..., x^degree, y] stacked on a new leading axis."""
+    rows = [jnp.ones_like(x)]
+    for _ in range(degree):
+        rows.append(rows[-1] * x)
+    rows.append(y)
+    return jnp.stack(rows, axis=0)
+
+
+def _moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
+                    accum_dtype):
+    """One (batch, block) grid step: G[b] += (W·w) Wᵀ for this tile."""
+    c_ref = maybe_c[0] if maybe_c else None
+    i = pl.program_id(1)
+    _accum_init(i, (g_ref,) + ((c_ref,) if c_ref is not None else ()))
 
     x = x_ref[...].astype(accum_dtype)   # (1, block_n)
     y = y_ref[...].astype(accum_dtype)   # (1, block_n)
     w = w_ref[...].astype(accum_dtype)   # (1, block_n)
 
     # Build W rows by the iterated-multiply power ladder (paper's trick).
-    rows = [jnp.ones_like(x)]
-    for _ in range(degree):
-        rows.append(rows[-1] * x)
-    rows.append(y)
-    wmat = jnp.concatenate(rows, axis=0)                     # (deg+2, bn)
+    wmat = _power_rows(x[0], y[0], degree)                   # (deg+2, bn)
     pad = K_PAD - (degree + 2)
     if pad:
         wmat = jnp.concatenate(
@@ -56,17 +134,91 @@ def _moments_kernel(x_ref, y_ref, w_ref, g_ref, *, degree: int,
 
     lhs = wmat * w                                           # weight one side
     # MXU: (128, bn) @ (bn, 128), f32 accumulation.
-    g_ref[...] += jax.lax.dot_general(
+    update = jax.lax.dot_general(
         lhs, wmat, (((1,), (1,)), ((), ())),
         preferred_element_type=accum_dtype)[None]
+    _accum_add(update, g_ref, c_ref)
+
+
+def _packed_moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
+                           accum_dtype):
+    """One (group, block) grid step with P series packed into the sublanes."""
+    c_ref = maybe_c[0] if maybe_c else None
+    i = pl.program_id(1)
+    _accum_init(i, (g_ref,) + ((c_ref,) if c_ref is not None else ()))
+
+    x = x_ref[0].astype(accum_dtype)     # (P, block_n)
+    y = y_ref[0].astype(accum_dtype)
+    w = w_ref[0].astype(accum_dtype)
+    p, bn = x.shape
+    k = degree + 2
+
+    # (K, P, bn) power rows -> interleave to series-major (P*K, bn) so each
+    # series owns a contiguous sublane block (diagonal extraction below).
+    rows = _power_rows(x, y, degree)
+    wmat = jnp.swapaxes(rows, 0, 1).reshape(p * k, bn)
+    wfull = jnp.repeat(w, k, axis=0)                         # row p*K+j <- w[p]
+    pad = K_PAD - p * k
+    if pad:
+        zpad = jnp.zeros((pad, bn), accum_dtype)
+        wmat = jnp.concatenate([wmat, zpad], axis=0)
+        wfull = jnp.concatenate([wfull, zpad], axis=0)
+
+    update = jax.lax.dot_general(
+        wmat * wfull, wmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=accum_dtype)[None]
+    _accum_add(update, g_ref, c_ref)
+
+
+def _fused_report_kernel(x_ref, y_ref, w_ref, coef_ref, o_ref, *, degree: int,
+                         accum_dtype):
+    """Evaluate + residual + SSE/R sums in one pass; no HBM intermediates."""
+    i = pl.program_id(1)
+    _accum_init(i, (o_ref,))
+
+    x = x_ref[...].astype(accum_dtype)       # (1, block_n)
+    y = y_ref[...].astype(accum_dtype)
+    w = w_ref[...].astype(accum_dtype)
+    c = coef_ref[...].astype(accum_dtype)    # (1, 128): coeffs then zero pad
+
+    # Horner evaluation — same O(m) ladder as basis.evaluate, in-register.
+    f = jnp.full_like(x, c[0, degree])
+    for k in range(degree - 1, -1, -1):
+        f = f * x + c[0, k]
+    e = y - f
+
+    sums = (jnp.sum(w), jnp.sum(w * y), jnp.sum(w * y * y),
+            jnp.sum(w * f), jnp.sum(w * f * f), jnp.sum(w * y * f),
+            jnp.sum(w * e * e))
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, K_PAD), 1)
+    update = jnp.zeros((1, K_PAD), accum_dtype)
+    for j, s in enumerate(sums):
+        update = update + jnp.where(lane == j, s, jnp.zeros((), accum_dtype))
+    o_ref[...] += update
+
+
+def _moments_call(kernel_fn, grid, in_specs, out_spec, b_out, *,
+                  compensated, accum_dtype, interpret, args):
+    """Shared pallas_call plumbing for the plain/packed moment kernels."""
+    struct = jax.ShapeDtypeStruct((b_out, K_PAD, K_PAD), accum_dtype)
+    if compensated:
+        out = pl.pallas_call(
+            kernel_fn, grid=grid, in_specs=in_specs,
+            out_specs=[out_spec, out_spec], out_shape=[struct, struct],
+            interpret=interpret)(*args)
+        return out[0]   # Kahan: the corrected sum is the primary tile
+    return pl.pallas_call(
+        kernel_fn, grid=grid, in_specs=in_specs,
+        out_specs=out_spec, out_shape=struct, interpret=interpret)(*args)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("degree", "block_n", "interpret",
-                                    "accum_dtype"))
+                                    "accum_dtype", "compensated"))
 def moments_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
                      degree: int, block_n: int = DEFAULT_BLOCK_N,
                      accum_dtype=jnp.float32,
+                     compensated: bool = False,
                      interpret: bool = False) -> jax.Array:
     """Raw kernel output: (B, K_PAD, K_PAD) extended Gram per batch row.
 
@@ -80,17 +232,91 @@ def moments_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
         raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
     if degree + 2 > K_PAD:
         raise ValueError(f"degree {degree} too large for K_PAD={K_PAD}")
-    nblk = n // block_n
 
-    kernel = functools.partial(_moments_kernel, degree=degree,
-                               accum_dtype=accum_dtype)
+    kernel_fn = functools.partial(_moments_kernel, degree=degree,
+                                  accum_dtype=accum_dtype)
     in_spec = pl.BlockSpec((1, block_n), lambda bi, ni: (bi, ni))
     out_spec = pl.BlockSpec((1, K_PAD, K_PAD), lambda bi, ni: (bi, 0, 0))
+    return _moments_call(kernel_fn, (b, n // block_n), [in_spec] * 3,
+                         out_spec, b, compensated=compensated,
+                         accum_dtype=accum_dtype, interpret=interpret,
+                         args=(x, y, weights))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("degree", "block_n", "interpret",
+                                    "accum_dtype", "compensated"))
+def moments_packed_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
+                            degree: int, block_n: int = DEFAULT_BLOCK_N,
+                            accum_dtype=jnp.float32,
+                            compensated: bool = False,
+                            interpret: bool = False) -> jax.Array:
+    """Packed kernel output: (G, K_PAD, K_PAD); series p of group g lives in
+    the diagonal block ``out[g, p*K:(p+1)*K, p*K:(p+1)*K]`` (K = degree+2).
+
+    x, y, weights: (G, P, n) with P == packing_factor(degree) and
+    n % block_n == 0. Use ``extract_packed`` to pull per-series blocks.
+    """
+    if x.ndim != 3:
+        raise ValueError("moments_packed_extended expects (G, P, n) inputs")
+    g, p, n = x.shape
+    if p != packing_factor(degree):
+        raise ValueError(f"P={p} != packing_factor({degree})="
+                         f"{packing_factor(degree)}")
+    if n % block_n:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+
+    kernel_fn = functools.partial(_packed_moments_kernel, degree=degree,
+                                  accum_dtype=accum_dtype)
+    in_spec = pl.BlockSpec((1, p, block_n), lambda gi, ni: (gi, 0, ni))
+    out_spec = pl.BlockSpec((1, K_PAD, K_PAD), lambda gi, ni: (gi, 0, 0))
+    return _moments_call(kernel_fn, (g, n // block_n), [in_spec] * 3,
+                         out_spec, g, compensated=compensated,
+                         accum_dtype=accum_dtype, interpret=interpret,
+                         args=(x, y, weights))
+
+
+def extract_packed(g: jax.Array, degree: int) -> jax.Array:
+    """(G, K_PAD, K_PAD) packed Gram -> (G*P, K, K) per-series blocks."""
+    k = degree + 2
+    p = packing_factor(degree)
+    blocks = jnp.stack([g[:, i * k:(i + 1) * k, i * k:(i + 1) * k]
+                        for i in range(p)], axis=1)       # (G, P, K, K)
+    return blocks.reshape(g.shape[0] * p, k, k)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("degree", "block_n", "interpret",
+                                    "accum_dtype"))
+def fused_report_sums(x: jax.Array, y: jax.Array, weights: jax.Array,
+                      coeffs: jax.Array, *, degree: int,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      accum_dtype=jnp.float32,
+                      interpret: bool = False) -> jax.Array:
+    """One streamed pass over (B, n) data: per-series report sums.
+
+    Returns (B, K_PAD) where lanes SUM_W..SUM_SSE hold
+    [Σw, Σwy, Σwy², Σwf, Σwf², Σwyf, Σw(y-f)²] and the rest are zero.
+    ``coeffs``: (B, K_PAD) monomial coefficients, zero-padded past degree.
+    Everything ``fit_report`` derives (SSE, R) follows from these sums with
+    O(B) work — no (B, n) fitted/residual arrays ever touch HBM.
+    """
+    if x.ndim != 2 or coeffs.shape != (x.shape[0], K_PAD):
+        raise ValueError("fused_report_sums expects x:(B,n), coeffs:(B,128)")
+    b, n = x.shape
+    if n % block_n:
+        raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+
+    kernel_fn = functools.partial(_fused_report_kernel, degree=degree,
+                                  accum_dtype=accum_dtype)
+    data_spec = pl.BlockSpec((1, block_n), lambda bi, ni: (bi, ni))
+    coef_spec = pl.BlockSpec((1, K_PAD), lambda bi, ni: (bi, 0))
+    out_spec = pl.BlockSpec((1, K_PAD), lambda bi, ni: (bi, 0))
     return pl.pallas_call(
-        kernel,
-        grid=(b, nblk),
-        in_specs=[in_spec, in_spec, in_spec],
+        kernel_fn,
+        grid=(b, n // block_n),
+        in_specs=[data_spec, data_spec, data_spec, coef_spec],
         out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((b, K_PAD, K_PAD), accum_dtype),
+        out_shape=jax.ShapeDtypeStruct((b, K_PAD), accum_dtype),
         interpret=interpret,
-    )(x, y, weights)
+    )(x, y, weights, coeffs)

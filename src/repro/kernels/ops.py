@@ -1,8 +1,26 @@
-"""Jitted public wrappers around the Pallas moments kernel.
+"""Jitted public wrappers around the Pallas moment/report kernels.
 
 Handles: batch/flat shapes, tail padding (weight-masked so padding is inert),
-block size choice, CPU fallback (interpret mode), and extraction of the
-``Moments`` sufficient statistics from the kernel's extended Gram output.
+block size choice, CPU fallback (interpret mode), packed-vs-plain path
+selection, and extraction of the ``Moments`` sufficient statistics from the
+kernels' extended Gram output.
+
+Path selection (``moments(..., packing="auto")``):
+  * **packed** — batch of ≥ 2 series and packing_factor(degree) ≥ 2: pack
+    P = 128 // (degree+2) series per MXU tile (≈ P× fewer FLOPs per fit; see
+    the layout diagram in ``repro.kernels.moments``). Batches not divisible
+    by P are padded with zero-weight tail series whose exact-zero Gram
+    blocks are sliced away.
+  * **plain** — single series, or degree > 62 (P < 2): one series per tile.
+  * the pure-jnp path stays in ``repro.core.gram_moments`` (callers choose
+    it via ``polyfit(use_kernel=False)``).
+
+Count semantics: ``Moments.count`` from this module is the TRUE number of
+contributing data points — points with nonzero weight, excluding padding.
+(The kernel's raw G[0,0] entry is Σw, which only equals the count for
+unit weights; the previous code returned it directly, so decay-weighted
+streaming reported Σγ^i instead of n. Σw is still available as
+``gram[..., 0, 0]`` for callers that want the weighted mass.)
 """
 from __future__ import annotations
 
@@ -19,18 +37,46 @@ def _should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _auto_block(n: int) -> int:
+    # smallest lane-aligned block that covers short series in one step;
+    # large series stream in DEFAULT_BLOCK_N tiles.
+    return min(kernel.DEFAULT_BLOCK_N, max(128, -(-n // 128) * 128))
+
+
+def _pad_tail(arrs, pad):
+    if not pad:
+        return arrs
+    zpad = [(0, 0)] * (arrs[0].ndim - 1) + [(0, pad)]
+    return [jnp.pad(a, zpad) for a in arrs]
+
+
+def _true_count(weights, b, n, dtype):
+    """Number of contributing points per series (not Σw — see module doc)."""
+    if weights is None:
+        return jnp.full((b,), n, dtype)
+    return jnp.sum((weights != 0).astype(dtype), axis=-1)
+
+
 @functools.partial(jax.jit, static_argnames=("degree", "block_n", "interpret",
-                                             "accum_dtype"))
+                                             "accum_dtype", "packing",
+                                             "compensated"))
 def moments(x: jax.Array, y: jax.Array, degree: int, *,
             weights: jax.Array | None = None,
             block_n: int | None = None,
             accum_dtype=jnp.float32,
+            packing: str = "auto",
+            compensated: bool = False,
             interpret: bool | None = None) -> Moments:
     """Drop-in kernel-backed equivalent of ``repro.core.gram_moments``.
 
     Accepts (n,) or (B, n) inputs of any float dtype; returns f32-accumulated
-    Moments with matching batch shape.
+    Moments with matching batch shape. ``packing`` ∈ {"auto", "packed",
+    "plain"} picks the tile layout; ``compensated=True`` enables the Kahan
+    two-float Gram accumulator (large-n precision, Skala arXiv:1802.07591).
     """
+    if packing not in ("auto", "packed", "plain"):
+        raise ValueError(f"packing={packing!r}; expected 'auto', 'packed' "
+                         "or 'plain'")
     if interpret is None:
         interpret = _should_interpret()
     if accum_dtype is None:
@@ -41,24 +87,86 @@ def moments(x: jax.Array, y: jax.Array, degree: int, *,
         if weights is not None:
             weights = weights[None]
     b, n = x.shape
+    count = _true_count(weights, b, n, accum_dtype)
+
+    pfac = kernel.packing_factor(degree)
+    use_packed = (packing == "packed"
+                  or (packing == "auto" and b > 1 and pfac > 1))
+    if use_packed and pfac < 2:
+        raise ValueError(f"degree {degree} leaves no room to pack "
+                         f"(packing_factor={pfac}); use packing='plain'")
 
     if block_n is None:
-        # smallest lane-aligned block that covers short series in one step;
-        # large series stream in DEFAULT_BLOCK_N tiles.
-        block_n = min(kernel.DEFAULT_BLOCK_N, max(128, -(-n // 128) * 128))
-    pad = (-n) % block_n
+        block_n = _auto_block(n)
     w = jnp.ones_like(x) if weights is None else weights
-    if pad:
-        zpad = [(0, 0), (0, pad)]
-        x = jnp.pad(x, zpad)
-        y = jnp.pad(y, zpad)
-        w = jnp.pad(w, zpad)   # zero weight ⇒ padded tail contributes nothing
+    x, y, w = _pad_tail([x, y, w], (-n) % block_n)
+    # zero weight ⇒ padded tail contributes nothing
 
-    g = kernel.moments_extended(x, y, w, degree=degree, block_n=block_n,
-                                accum_dtype=accum_dtype, interpret=interpret)
+    if use_packed:
+        bpad = (-b) % pfac
+        if bpad:
+            zrow = [(0, bpad), (0, 0)]
+            x = jnp.pad(x, zrow)
+            y = jnp.pad(y, zrow)
+            w = jnp.pad(w, zrow)   # zero-weight tail series: exact-zero blocks
+        groups = (b + bpad) // pfac
+        shape = (groups, pfac, x.shape[-1])
+        gp = kernel.moments_packed_extended(
+            x.reshape(shape), y.reshape(shape), w.reshape(shape),
+            degree=degree, block_n=block_n, accum_dtype=accum_dtype,
+            compensated=compensated, interpret=interpret)
+        g = kernel.extract_packed(gp, degree)[:b]         # (b, m+2, m+2)
+    else:
+        g = kernel.moments_extended(x, y, w, degree=degree, block_n=block_n,
+                                    accum_dtype=accum_dtype,
+                                    compensated=compensated,
+                                    interpret=interpret)
     m1 = degree + 1
     out = Moments(gram=g[:, :m1, :m1], vty=g[:, :m1, m1],
-                  yty=g[:, m1, m1], count=g[:, 0, 0])
+                  yty=g[:, m1, m1], count=count)
     if flat:
         out = jax.tree.map(lambda a: a[0], out)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret",
+                                             "accum_dtype"))
+def fused_report_sums(x: jax.Array, y: jax.Array, coeffs: jax.Array, *,
+                      weights: jax.Array | None = None,
+                      block_n: int | None = None,
+                      accum_dtype=jnp.float32,
+                      interpret: bool | None = None) -> dict[str, jax.Array]:
+    """One-pass evaluation/residual sums for ``core.fit.fit_report_streamed``.
+
+    x, y: (..., n); coeffs: (..., m+1) monomial coefficients in the same
+    (already domain-mapped) x. Returns a dict of (...,)-shaped sums:
+    ``sw, sy, syy, sf, sff, syf, sse`` — Σw, Σwy, Σwy², Σwf, Σwf², Σwyf,
+    Σw(y-f)². Padding rides in with weight 0 and contributes nothing.
+    """
+    if interpret is None:
+        interpret = _should_interpret()
+    if accum_dtype is None:
+        accum_dtype = jnp.float32
+    degree = coeffs.shape[-1] - 1
+    if degree + 1 > kernel.K_PAD:
+        raise ValueError(f"degree {degree} too large for K_PAD={kernel.K_PAD}")
+    batch = x.shape[:-1]
+    n = x.shape[-1]
+    xb = x.reshape(-1, n)
+    yb = y.reshape(-1, n)
+    b = xb.shape[0]
+    wb = (jnp.ones_like(xb) if weights is None
+          else jnp.broadcast_to(weights, x.shape).reshape(-1, n))
+    cb = jnp.broadcast_to(coeffs, batch + coeffs.shape[-1:]).reshape(b, -1)
+    cb = jnp.pad(cb, [(0, 0), (0, kernel.K_PAD - cb.shape[-1])])
+
+    if block_n is None:
+        block_n = _auto_block(n)
+    xb, yb, wb = _pad_tail([xb, yb, wb], (-n) % block_n)
+
+    sums = kernel.fused_report_sums(
+        xb, yb, wb, cb.astype(accum_dtype), degree=degree, block_n=block_n,
+        accum_dtype=accum_dtype, interpret=interpret)
+    names = ("sw", "sy", "syy", "sf", "sff", "syf", "sse")
+    return {name: sums[:, j].reshape(batch)
+            for j, name in enumerate(names)}

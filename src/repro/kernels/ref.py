@@ -52,3 +52,29 @@ def moments_reference(x: jnp.ndarray, y: jnp.ndarray, degree: int,
                       accum_dtype=jnp.float32) -> Moments:
     return moments_from_extended(
         extended_gram(x, y, degree, weights, accum_dtype), degree)
+
+
+def packed_extended_gram(x: jnp.ndarray, y: jnp.ndarray, degree: int,
+                         weights: jnp.ndarray | None = None,
+                         accum_dtype=jnp.float32) -> jnp.ndarray:
+    """Oracle for the packed kernel's raw (G, K_PAD, K_PAD) output.
+
+    x, y (and weights): (G, P, n) with P = K_PAD // (degree+2). Builds the
+    series-major packed W = [V₀|y₀|V₁|y₁|...|0-pad] rows explicitly and forms
+    (W·w) Wᵀ — including the cross-series off-diagonal blocks, so tests can
+    compare the kernel's full tile, not just the extracted diagonals."""
+    g, p, n = x.shape
+    k = degree + 2
+    x = x.astype(accum_dtype)
+    y = y.astype(accum_dtype)
+    v = basis_lib.vandermonde(x, degree)                 # (G, P, n, m+1)
+    w = jnp.concatenate([v, y[..., :, None]], axis=-1)   # (G, P, n, K)
+    w = jnp.swapaxes(w, -1, -2).reshape(g, p * k, n)     # (G, P*K, n)
+    w = jnp.pad(w, [(0, 0), (0, K_PAD - p * k), (0, 0)])
+    if weights is None:
+        lhs = w
+    else:
+        wexp = jnp.repeat(weights.astype(accum_dtype), k, axis=1)
+        wexp = jnp.pad(wexp, [(0, 0), (0, K_PAD - p * k), (0, 0)])
+        lhs = w * wexp
+    return jnp.einsum("gkn,gjn->gkj", lhs, w)

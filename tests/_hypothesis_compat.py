@@ -1,0 +1,123 @@
+"""Offline fallback for ``hypothesis``: fixed-example property testing.
+
+The real hypothesis package is not available in the hermetic CI/container
+image, but seven test modules use ``@given`` property sweeps.  This shim
+implements the tiny subset those tests rely on (``given``, ``settings``
+profiles, ``strategies.integers/floats/sampled_from``) and runs each
+``@given`` test on a small *deterministic* example set instead of a random
+search: the strategy boundaries first, then seeded pseudo-random draws.
+
+``tests/conftest.py`` installs this module as ``sys.modules["hypothesis"]``
+only when the real package cannot be imported, so environments that do have
+hypothesis get the genuine article.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+# examples per @given test (boundaries + seeded draws); kept small so the
+# offline suite stays fast — the real hypothesis, when installed, explores
+# the profile's full max_examples.
+_N_EXAMPLES = 5
+
+
+class _Strategy:
+    """A value source: fixed boundary examples + seeded random draws."""
+
+    def __init__(self, draw, boundaries):
+        self._draw = draw
+        self._boundaries = list(boundaries)
+
+    def example_at(self, i, rng):
+        if i < len(self._boundaries):
+            return self._boundaries[i]
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 — mimics the `hypothesis.strategies` module
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Strategy(
+            lambda rng: int(rng.integers(min_value, max_value + 1)),
+            [min_value, max_value])
+
+    @staticmethod
+    def floats(min_value, max_value, **_kw):
+        mid = 0.5 * (min_value + max_value)
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value)),
+            [min_value, max_value, mid])
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(
+            lambda rng: elements[int(rng.integers(len(elements)))],
+            elements[:2])
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)), [False, True])
+
+
+class settings:  # noqa: N801 — mimics the `hypothesis.settings` class
+    _profiles: dict = {}
+    _current: dict = {}
+
+    def __init__(self, **kwargs):
+        self.kwargs = kwargs
+
+    def __call__(self, fn):  # used as a decorator: pass through
+        return fn
+
+    @classmethod
+    def register_profile(cls, name, **kwargs):
+        cls._profiles[name] = kwargs
+
+    @classmethod
+    def load_profile(cls, name):
+        cls._current = cls._profiles.get(name, {})
+
+
+def given(*strats, **kw_strats):
+    """Run the wrapped test on a fixed, deterministic example set."""
+
+    def decorate(fn):
+        seed = zlib.crc32(fn.__qualname__.encode())
+
+        @functools.wraps(fn)
+        def wrapper():
+            rng = np.random.default_rng(seed)
+            for i in range(_N_EXAMPLES):
+                args = tuple(s.example_at(i, rng) for s in strats)
+                kwargs = {k: s.example_at(i, rng)
+                          for k, s in kw_strats.items()}
+                try:
+                    fn(*args, **kwargs)
+                except _UnsatisfiedAssumption:
+                    continue  # skip examples the test assume()s away
+
+        # hide the strategy-fed parameters from pytest's fixture resolution
+        wrapper.__signature__ = inspect.Signature()
+        return wrapper
+
+    return decorate
+
+
+class HealthCheck:  # accessed by some hypothesis configs; inert here
+    all = staticmethod(lambda: [])
+    too_slow = "too_slow"
+    data_too_large = "data_too_large"
+
+
+def assume(condition):
+    if not condition:
+        raise _UnsatisfiedAssumption()
+
+
+class _UnsatisfiedAssumption(Exception):
+    pass

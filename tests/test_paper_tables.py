@@ -12,11 +12,16 @@ x64 is enabled per-test via the jax.experimental.enable_x64 context so the
 rest of the suite keeps default f32 semantics.
 """
 import jax
+import jax.experimental
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro import core
+
+# jax >= 0.4.38 exposes the x64 context as jax.enable_x64; older releases
+# only have the jax.experimental one. Same context manager either way.
+enable_x64 = getattr(jax, "enable_x64", jax.experimental.enable_x64)
 
 X64 = [39.206, 29.74, 21.31, 12.087, 1.812, 0.001]
 Y64 = [751.912, 567.121, 403.746, 221.738, 18.8418, 1.88672]
@@ -38,7 +43,7 @@ def _data():
 
 @pytest.mark.parametrize("order", [1, 2, 3])
 def test_generated_coefficients_match_paper(order):
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         poly = core.polyfit(x, y, order)          # paper-faithful path
         got = np.asarray(poly.coeffs)
@@ -49,7 +54,7 @@ def test_generated_coefficients_match_paper(order):
 def test_gauss_equals_qr_in_f64(order):
     """In f64 the normal-equation and QR solutions coincide — the paper's
     accuracy gap is a precision artifact, which is itself informative."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         a = np.asarray(core.polyfit(x, y, order).coeffs)
         b = np.asarray(core.polyfit_qr(x, y, order).coeffs)
@@ -57,7 +62,7 @@ def test_gauss_equals_qr_in_f64(order):
 
 
 def test_order3_sse_matches_paper():
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         poly = core.polyfit(x, y, 3)
         rep = core.fit_report(poly, x, y)
@@ -68,14 +73,14 @@ def test_order3_fitted_values_match_table_v():
     """Paper's Table V f(x) column was computed with their lower-precision
     coefficients; agreement holds to ~1e-2 absolute (4-5 significant
     digits), consistent with their printed rounding."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         fitted = np.asarray(core.polyfit(x, y, 3)(x))
     np.testing.assert_allclose(fitted, PAPER_FITTED_ORDER3, atol=2e-2)
 
 
 def test_correlation_coefficient_high():
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         for order in (1, 2, 3):
             rep = core.fit_report(core.polyfit(x, y, order), x, y)
@@ -95,7 +100,7 @@ def test_f32_reproduces_papers_precision_gap():
 
 def test_power_sum_hankel_identity():
     """A == VᵀV and B == Vᵀy: the matricization is exact."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         m = core.gram_moments(x, y, 3)
         s = core.power_sums(x, 3)
@@ -109,7 +114,7 @@ def test_power_sum_hankel_identity():
 
 def test_sse_from_moments_identity():
     """Σe² computed from sufficient statistics alone (no data pass)."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         poly = core.polyfit(x, y, 3)
         m = core.gram_moments(x, y, 3)
@@ -121,7 +126,7 @@ def test_sse_from_moments_identity():
 def test_normalized_fit_recovers_raw_coefficients():
     """Beyond-paper hardened path (x→[-1,1]) converts back to the same raw
     monomial coefficients."""
-    with jax.enable_x64(True):
+    with enable_x64(True):
         x, y = _data()
         raw = np.asarray(core.polyfit(x, y, 3).coeffs)
         norm = np.asarray(core.polyfit(x, y, 3, normalize=True)
