@@ -3,7 +3,12 @@
 Prints ``name,us_per_call,derived`` CSV rows (derived = the table's headline
 quantity) and writes the same rows machine-readably to
 ``benchmarks/BENCH_<git-rev>.json`` so the perf trajectory is tracked across
-PRs. Run: PYTHONPATH=src python -m benchmarks.run [--quick]
+PRs. Run: PYTHONPATH=src python -m benchmarks.run [--quick|--smoke]
+
+``--smoke`` is the CI regression tripwire: tiny shapes, every bench still
+exercised end to end, and every row is asserted to produce finite numbers —
+a kernel-path regression fails the job in seconds instead of silently
+shipping NaNs.
 """
 from __future__ import annotations
 
@@ -36,10 +41,18 @@ def _time(fn, *args, iters=20, warmup=3):
 
 
 ROWS: list[dict] = []
+SMOKE = False   # set by --smoke: tiny shapes + finite-number assertions
 
 
 def row(name, us, derived):
     print(f"{name},{us:.1f},{derived}")
+    if SMOKE:
+        import math
+        import re
+        assert math.isfinite(float(us)), f"{name}: non-finite us={us}"
+        bad = re.search(r"(?<![a-z])(nan|inf)(?![a-z])", str(derived),
+                        re.IGNORECASE)
+        assert not bad, f"{name}: non-finite derived: {derived}"
     ROWS.append({"name": name, "us_per_call": round(float(us), 1),
                  "derived": derived})
 
@@ -66,7 +79,9 @@ def bench_speedup(quick: bool):
     per-point scalar loop (the pre-matricization implementation the paper
     benchmarks against; their GPU port reached ~100x over it). derived =
     speedup of the matricized path on this host."""
-    sizes = [10_000, 100_000] if quick else [10_000, 100_000, 1_000_000]
+    sizes = ([10_000] if SMOKE
+             else [10_000, 100_000] if quick
+             else [10_000, 100_000, 1_000_000])
 
     def sequential_power_sums(xs, ys, m=3):
         """Faithful scalar baseline: one point at a time, plain floats."""
@@ -101,7 +116,7 @@ def bench_kernel(quick: bool):
     throughput vs the jnp path; derived = Mpoints/s of the jnp path (the
     kernel's CPU interpret timing is NOT the TPU number — EXPERIMENTS.md
     §Roofline derives the TPU projection)."""
-    n = 1 << 18 if quick else 1 << 20
+    n = 1 << 14 if SMOKE else 1 << 18 if quick else 1 << 20
     x, y, _ = curve_dataset(n, degree=3, seed=1)
     jnp_path = jax.jit(lambda x, y: core.gram_moments(x, y, 3).gram)
     us = _time(jnp_path, x, y, iters=10)
@@ -122,8 +137,8 @@ def bench_kernel_packed(quick: bool):
     at degree 3), interpret-mode wall speedup, and max relative error of the
     packed Gram vs core.gram_moments."""
     deg = 3
-    b = 32 if quick else 64
-    n = 2048 if quick else 4096
+    b = 8 if SMOKE else 32 if quick else 64
+    n = 512 if SMOKE else 2048 if quick else 4096
     x, y, _ = curve_dataset(n, degree=deg, seed=4, batch=(b,))
 
     plain = jax.jit(lambda x, y: kernel_ops.moments(
@@ -153,8 +168,8 @@ def bench_fused_report(quick: bool):
     """Fused evaluate+residual+SSE/R pass vs the materializing fit_report.
     derived = Mpts/s of the fused pass and the HBM bytes it avoids writing
     (fitted + residuals arrays)."""
-    b = 16 if quick else 32
-    n = 1 << 14 if quick else 1 << 16
+    b = 4 if SMOKE else 16 if quick else 32
+    n = 1 << 12 if SMOKE else 1 << 14 if quick else 1 << 16
     x, y, _ = curve_dataset(n, degree=3, seed=5, batch=(b,))
     poly = core.polyfit(x, y, 3)
 
@@ -187,11 +202,46 @@ def bench_streaming(quick: bool):
 def bench_batched_fits(quick: bool):
     """Batched (vmapped-by-construction) fitting — the monitors' workload:
     fit 4096 independent series at once. derived = fits/s."""
-    b = 512 if quick else 4096
+    b = 128 if SMOKE else 512 if quick else 4096
     x, y, _ = curve_dataset(256, degree=1, seed=3, batch=(b,))
     fit = jax.jit(lambda x, y: core.polyfit(x, y, 1).coeffs)
     us = _time(fit, x, y, iters=10)
     row("batched_fits", us, f"{b / (us / 1e6):.0f}fits/s")
+
+
+def bench_serve_fit(quick: bool):
+    """Continuous-batching fit server on a ragged request trace (1k requests
+    in the full run). derived = sustained fits/s and Mpts/s after warmup,
+    with the no-recompile invariant asserted (zero new executables across
+    the whole steady-state wave)."""
+    from repro.serve import FitServeConfig, FitServeEngine
+
+    n_req = 32 if SMOKE else 200 if quick else 1000
+    lo, hi = (8, 512) if SMOKE else (16, 4096)
+    engine = FitServeEngine(FitServeConfig(
+        degree=3, n_slots=8, buckets=(256, 2048), ridge=1e-9))
+    rng = np.random.default_rng(11)
+
+    def make_request():
+        n = int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        x = rng.uniform(-2, 2, n).astype(np.float32)
+        y = (0.3 * x**3 - 0.5 * x + 1.0
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        return engine.submit(x, y)
+
+    execs = engine.warmup()        # compiles every bucket + the solve
+
+    reqs = [make_request() for _ in range(n_req)]
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    recompiles = engine.compiled_executables() - execs
+    assert recompiles == 0, f"{recompiles} recompiles in steady state"
+    assert all(r.done for r in reqs)
+    pts = sum(r.n for r in reqs)
+    row("serve_fit", dt / n_req * 1e6,
+        f"{n_req / dt:.1f}fits/s;{pts / dt / 1e6:.2f}Mpts/s;"
+        f"executables={execs};recompiles_after_warmup={recompiles}")
 
 
 def bench_e2e_train(quick: bool):
@@ -225,7 +275,7 @@ def bench_e2e_train(quick: bool):
 
 BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
            bench_fused_report, bench_streaming, bench_batched_fits,
-           bench_e2e_train]
+           bench_serve_fit, bench_e2e_train]
 
 
 def _git_rev() -> str:
@@ -241,9 +291,9 @@ def _git_rev() -> str:
 
 def _write_json(quick: bool) -> str:
     rev = _git_rev()
-    # quick runs get their own file so a smoke check at the same rev never
-    # overwrites the full-run numbers the perf trajectory tracks
-    suffix = "_quick" if quick else ""
+    # quick/smoke runs get their own file so a smoke check at the same rev
+    # never overwrites the full-run numbers the perf trajectory tracks
+    suffix = "_smoke" if SMOKE else "_quick" if quick else ""
     path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         f"BENCH_{rev}{suffix}.json")
     payload = {
@@ -251,6 +301,7 @@ def _write_json(quick: bool) -> str:
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
         "backend": jax.default_backend(),
         "quick": quick,
+        "smoke": SMOKE,
         "rows": ROWS,
     }
     with open(path, "w") as f:
@@ -259,21 +310,27 @@ def _write_json(quick: bool) -> str:
 
 
 def main() -> None:
+    global SMOKE
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes + finite-number assertions on every "
+                         "row (CI kernel-regression tripwire)")
     ap.add_argument("--no-json", action="store_true",
                     help="skip writing benchmarks/BENCH_<rev>.json")
     args = ap.parse_args()
+    SMOKE = args.smoke
+    quick = args.quick or args.smoke
     print("name,us_per_call,derived")
     for bench in BENCHES:
         try:
-            bench(args.quick)
+            bench(quick)
         except Exception as e:  # noqa: BLE001
             print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
                   file=sys.stderr)
             raise
     if not args.no_json:
-        print(f"wrote {_write_json(args.quick)}", file=sys.stderr)
+        print(f"wrote {_write_json(quick)}", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -34,7 +34,9 @@ print("chebyshev-basis Σe²:",
       float(core.fit_report(cheb, x, y).sse))
 
 print("\n=== Pallas kernel path (TPU target; interpret on CPU) ===")
-pk = core.polyfit(x, y, 3, use_kernel=True)
+# engine="auto" picks the path from shape/basis/backend (repro.engine);
+# force the kernel here so the CPU demo still exercises it
+pk = core.polyfit(x, y, 3, engine="kernel")
 print("kernel-accumulated coeffs:", pk.coeffs)
 
 print("\n=== Streaming fit: O(1) state over a 1M-point stream ===")

@@ -1,0 +1,51 @@
+"""Continuous-batching fit serving: ragged curve-fit requests, one compiled
+ingest per length bucket, zero recompiles across request churn.
+
+    PYTHONPATH=src python examples/serve_fits.py
+"""
+import sys
+sys.path.insert(0, "src")
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core
+from repro.serve import FitServeConfig, FitServeEngine
+
+rng = np.random.default_rng(0)
+engine = FitServeEngine(FitServeConfig(
+    degree=3, n_slots=8, buckets=(256, 2048), ridge=1e-9))
+engine.warmup()   # compile both buckets' ingest + the solve up front
+
+# a ragged trace: noisy cubics between 20 and 5000 points each
+reqs = []
+for i in range(100):
+    n = int(np.exp(rng.uniform(np.log(20), np.log(5000))))
+    x = rng.uniform(-2, 2, n).astype(np.float32)
+    y = (1.0 + 0.5 * x - 0.8 * x**2 + 0.3 * x**3
+         + rng.normal(0, 0.2, n)).astype(np.float32)
+    reqs.append(engine.submit(x, y))
+
+t0 = time.perf_counter()
+engine.run()
+dt = time.perf_counter() - t0
+
+done = sum(r.done for r in reqs)
+pts = sum(r.n for r in reqs)
+print(f"served {done}/{len(reqs)} fits ({pts} points) in {dt:.2f}s "
+      f"-> {done / dt:.0f} fits/s with "
+      f"{engine.compiled_executables()} compiled executables")
+
+# every served fit matches a direct polyfit on the same series
+worst = 0.0
+for r in reqs:
+    ref = core.polyfit(jnp.asarray(r.x), jnp.asarray(r.y), 3).coeffs
+    worst = max(worst, float(np.max(np.abs(r.coeffs - np.asarray(ref)))))
+print(f"max |serve - direct polyfit| coefficient gap: {worst:.2e}")
+
+for r in reqs[:4]:
+    print(f"  req {r.uid}: n={r.n:>5} R={r.r:.4f} "
+          f"coeffs={np.round(r.coeffs, 3)}")
+assert worst < 1e-3

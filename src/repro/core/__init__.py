@@ -11,7 +11,7 @@ from repro.core.solve import solve as solve_linear
 from repro.core.fit import (Polynomial, FitReport, StreamedFitReport,
                             polyfit, polyfit_qr, fit_from_moments,
                             fit_report, fit_report_streamed,
-                            sse_from_moments)
+                            sse_from_moments, report_from_moments)
 from repro.core.distributed import make_distributed_fit, local_moments, psum_moments
 from repro.core.streaming import StreamState, update, current_fit, current_sse
 from repro.core.scaling_laws import PowerLaw, fit_power_law
@@ -24,7 +24,7 @@ __all__ = [
     "solve_linear",
     "Polynomial", "FitReport", "StreamedFitReport", "polyfit", "polyfit_qr",
     "fit_from_moments", "fit_report", "fit_report_streamed",
-    "sse_from_moments",
+    "sse_from_moments", "report_from_moments",
     "make_distributed_fit", "local_moments", "psum_moments",
     "StreamState", "update", "current_fit", "current_sse",
     "PowerLaw", "fit_power_law",

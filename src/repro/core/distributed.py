@@ -21,19 +21,33 @@ from repro.core import basis as basis_lib
 from repro.core import fit as fit_lib
 from repro.core import moments as moments_lib
 
+try:  # jax >= 0.4.38 top-level export with the renamed replication check
+    _shard_map = jax.shard_map
+    _CHECK_KW = {"check_vma": False}
+except AttributeError:  # 0.4.37: experimental home, check_rep spelling
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = {"check_rep": False}
+
 
 def local_moments(x: jax.Array, y: jax.Array, degree: int, *,
                   basis: str = basis_lib.MONOMIAL,
                   weights: jax.Array | None = None,
                   accum_dtype=None,
-                  use_kernel: bool = False) -> moments_lib.Moments:
-    """Per-shard moment accumulation (runs inside shard_map)."""
-    if use_kernel:
-        from repro.kernels import ops as kernel_ops
-        return kernel_ops.moments(x, y, degree, weights=weights,
-                                  accum_dtype=accum_dtype)
-    return moments_lib.gram_moments(x, y, degree, basis=basis,
-                                    weights=weights, accum_dtype=accum_dtype)
+                  engine: str = "auto",
+                  use_kernel: bool | None = None) -> moments_lib.Moments:
+    """Per-shard moment accumulation (runs inside shard_map).
+
+    Routes through ``repro.engine.plan_fit``, which validates the basis on
+    kernel paths — forcing the kernel with a non-monomial basis raises here
+    instead of silently fitting the wrong rows (the Pallas kernel only
+    builds monomial powers)."""
+    from repro import engine as engine_lib
+    plan = engine_lib.plan_fit(
+        x.shape, degree, basis=basis, dtype=x.dtype,
+        weighted=weights is not None,
+        engine=engine_lib.resolve_engine(engine, use_kernel),
+        accum_dtype=accum_dtype)
+    return engine_lib.compute_moments(plan, x, y, weights)
 
 
 def psum_moments(m: moments_lib.Moments, axis_names) -> moments_lib.Moments:
@@ -47,7 +61,8 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
                          basis: str = basis_lib.MONOMIAL,
                          normalize: bool = False,
                          accum_dtype=jnp.float32,
-                         use_kernel: bool = False):
+                         engine: str = "auto",
+                         use_kernel: bool | None = None):
     """Build a jitted distributed fit: (x, y, weights) -> Polynomial.
 
     x, y, weights are globally sharded over ``data_axes``; weights masks
@@ -55,14 +70,27 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
 
     normalize=True computes the global min/max first (second tiny collective)
     and fits in the normalized domain — the hardened beyond-paper mode.
+
+    ``engine`` selects each shard's local accumulation path through
+    ``repro.engine.plan_fit`` (validated up front, before any tracing);
+    ``use_kernel`` is a deprecated alias.
     """
+    from repro import engine as engine_lib
+    engine = engine_lib.resolve_engine(engine, use_kernel)
+    # eager validation + a describable plan for logs: per-shard n is not
+    # known yet, so plan with a placeholder length (path choice is re-made
+    # per shard inside local_moments with the real shard shape)
+    engine_lib.plan_fit((1,), degree, basis=basis, engine=engine,
+                        accum_dtype=accum_dtype, normalize=normalize,
+                        mesh=mesh, data_axes=data_axes)
     spec_in = P(data_axes)
     spec_rep = P()
 
-    # check_vma=False: pallas_call out_shapes don't carry vma annotations
-    @partial(jax.shard_map, mesh=mesh,
+    # check_vma/check_rep=False: pallas_call out_shapes don't carry
+    # replication annotations
+    @partial(_shard_map, mesh=mesh,
              in_specs=(spec_in, spec_in, spec_in),
-             out_specs=(spec_rep, spec_rep), check_vma=False)
+             out_specs=(spec_rep, spec_rep), **_CHECK_KW)
     def _fit_shard(x, y, w):
         if normalize:
             big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
@@ -76,7 +104,7 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
             dom = basis_lib.Domain.identity(x.dtype)
         xt = dom.apply(x)
         m = local_moments(xt, y, degree, basis=basis, weights=w,
-                          accum_dtype=accum_dtype, use_kernel=use_kernel)
+                          accum_dtype=accum_dtype, engine=engine)
         m = psum_moments(m, data_axes)
         poly = fit_lib.fit_from_moments(m, method=method, domain=dom,
                                         basis=basis)

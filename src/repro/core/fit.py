@@ -59,35 +59,34 @@ def fit_from_moments(m: moments_lib.Moments, *, method: str = "gauss",
 
 
 @partial(jax.jit, static_argnames=("degree", "method", "basis", "normalize",
-                                   "accum_dtype", "use_kernel"))
+                                   "accum_dtype", "engine", "use_kernel"))
 def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
             weights: jax.Array | None = None,
             method: str = "gauss", basis: str = basis_lib.MONOMIAL,
             normalize: bool = False, accum_dtype=None,
-            use_kernel: bool = False) -> Polynomial:
+            engine: str = "auto",
+            use_kernel: bool | None = None) -> Polynomial:
     """Paper-faithful matricized LSE fit (defaults) with hardening knobs.
 
     normalize=False, basis=monomial, method=gauss  ==  the paper's algorithm.
     Batched: x, y may carry leading batch axes (..., n).
     weights: optional per-point weights (..., n) — weighted least squares.
-    use_kernel=True routes moment accumulation through the Pallas kernel
-    (packed multi-series tiles are auto-selected for batched inputs).
+    engine: how moments accumulate — "auto" lets ``repro.engine.plan_fit``
+    pick (packed Pallas kernel for batched monomial inputs on TPU, reference
+    jnp elsewhere); "reference"/"kernel"/"kernel_packed"/"kernel_plain"
+    force a path.  ``use_kernel`` is a deprecated alias for
+    engine="kernel"/"reference".
     """
+    from repro import engine as engine_lib
+    plan = engine_lib.plan_fit(
+        x.shape, degree, basis=basis, dtype=x.dtype,
+        weighted=weights is not None,
+        engine=engine_lib.resolve_engine(engine, use_kernel),
+        accum_dtype=accum_dtype, normalize=normalize)
     dom = (basis_lib.Domain.from_data(x) if normalize
            else basis_lib.Domain.identity(x.dtype))
     xt = dom.apply(x)
-    if use_kernel:
-        if basis != basis_lib.MONOMIAL:
-            raise ValueError("use_kernel=True supports the monomial basis "
-                             "only (the Pallas kernel builds monomial power "
-                             "rows); use use_kernel=False for chebyshev")
-        from repro.kernels import ops as kernel_ops
-        m = kernel_ops.moments(xt, y, degree, weights=weights,
-                               accum_dtype=accum_dtype)
-    else:
-        m = moments_lib.gram_moments(xt, y, degree, basis=basis,
-                                     weights=weights,
-                                     accum_dtype=accum_dtype)
+    m = engine_lib.compute_moments(plan, xt, y, weights)
     return fit_from_moments(m, method=method, domain=dom, basis=basis)
 
 
@@ -148,32 +147,25 @@ class StreamedFitReport:
 def fit_report_streamed(poly: Polynomial, x: jax.Array, y: jax.Array, *,
                         weights: jax.Array | None = None,
                         block_n: int | None = None,
-                        interpret: bool | None = None) -> StreamedFitReport:
+                        interpret: bool | None = None,
+                        engine: str = "auto") -> StreamedFitReport:
     """Fused-kernel ``fit_report``: SSE and R without materializing the
     (..., n) fitted/residual arrays (the `fused_report` hot path).
 
     Matches ``fit_report``'s sse/r to fp tolerance for monomial fits; falls
     back to a materializing jnp pass with identical weighted semantics for
-    chebyshev (Clenshaw is not fused).
+    chebyshev (Clenshaw is not fused).  ``engine="reference"`` forces the
+    materializing pass (the plan layer's report workload has no packed
+    variant — see ``repro.engine.plan_fit``).
     """
-    if poly.basis != basis_lib.MONOMIAL:
-        fitted = poly(x)
-        w = jnp.ones_like(y) if weights is None else weights
-        e = y - fitted
-        s = {"sw": jnp.sum(w, axis=-1),
-             "sy": jnp.sum(w * y, axis=-1),
-             "syy": jnp.sum(w * y * y, axis=-1),
-             "sf": jnp.sum(w * fitted, axis=-1),
-             "sff": jnp.sum(w * fitted * fitted, axis=-1),
-             "syf": jnp.sum(w * y * fitted, axis=-1),
-             "sse": jnp.sum(w * e * e, axis=-1)}
-    else:
-        from repro.kernels import ops as kernel_ops
-
-        dom = basis_lib.Domain(poly.domain_shift, poly.domain_scale)
-        s = kernel_ops.fused_report_sums(dom.apply(x), y, poly.coeffs,
-                                         weights=weights, block_n=block_n,
-                                         interpret=interpret)
+    from repro import engine as engine_lib
+    plan = engine_lib.plan_fit(
+        x.shape, poly.degree, basis=poly.basis, dtype=x.dtype,
+        weighted=weights is not None, engine=engine,
+        block_n=block_n, interpret=interpret, workload="report")
+    dom = basis_lib.Domain(poly.domain_shift, poly.domain_scale)
+    s = engine_lib.compute_report_sums(plan, dom.apply(x), y, poly.coeffs,
+                                       weights=weights)
     n = s["sw"]
     cov = s["syf"] - s["sy"] * s["sf"] / n
     var_y = s["syy"] - s["sy"] * s["sy"] / n
@@ -189,3 +181,25 @@ def sse_from_moments(m: moments_lib.Moments, coeffs: jax.Array) -> jax.Array:
     quad = jnp.einsum("...j,...jk,...k->...", coeffs, m.gram, coeffs)
     cross = jnp.einsum("...j,...j->...", coeffs, m.vty)
     return m.yty - 2.0 * cross + quad
+
+
+def report_from_moments(m: moments_lib.Moments,
+                        coeffs: jax.Array) -> StreamedFitReport:
+    """The full streamed report (SSE + R) from the O(m²) state alone.
+
+    Every sum ``fit_report`` needs is a linear/quadratic form in the
+    moments: Σwf = aᵀ·G[0,:], Σwf² = aᵀG a, Σwyf = aᵀB, Σwy = B[0],
+    Σwy² = yᵀy, Σw = weight_sum — so the fit-serving engine reports
+    quality without ever re-reading the data."""
+    sw = m.weight_sum
+    sf = jnp.einsum("...j,...j->...", coeffs, m.gram[..., 0, :])
+    sff = jnp.einsum("...j,...jk,...k->...", coeffs, m.gram, coeffs)
+    syf = jnp.einsum("...j,...j->...", coeffs, m.vty)
+    sy = m.vty[..., 0]
+    syy = m.yty
+    sse = syy - 2.0 * syf + sff
+    cov = syf - sy * sf / sw
+    var_y = syy - sy * sy / sw
+    var_f = sff - sf * sf / sw
+    r = cov / jnp.sqrt(var_y * var_f)
+    return StreamedFitReport(coeffs=coeffs, sse=sse, r=r, count=sw)

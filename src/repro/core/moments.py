@@ -30,16 +30,26 @@ from repro.core import basis as basis_lib
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class Moments:
-    """Sufficient statistics of an LSE fit. Additive: m1 + m2 fits the union."""
+    """Sufficient statistics of an LSE fit. Additive: m1 + m2 fits the union.
 
-    gram: jax.Array      # (..., m+1, m+1)  == Vᵀ V
-    vty: jax.Array       # (..., m+1)       == Vᵀ y
-    yty: jax.Array       # (...,)           == Σ y²  (for residual/R without refit)
-    count: jax.Array     # (...,)           == n
+    ``count`` is the TRUE number of contributing points (nonzero combined
+    weight, padding excluded) on every producing path — jnp and kernel alike
+    — so states from different paths mix freely.  The weighted mass Σw lives
+    in ``weight_sum`` (== gram[..., 0, 0] for weight-1 bases); it is what
+    decays under exponential forgetting, while ``count`` keeps counting raw
+    points seen.
+    """
+
+    gram: jax.Array        # (..., m+1, m+1)  == Vᵀ V
+    vty: jax.Array         # (..., m+1)       == Vᵀ y
+    yty: jax.Array         # (...,)           == Σ w y²  (residual/R without refit)
+    count: jax.Array       # (...,)           == # points with nonzero weight
+    weight_sum: jax.Array  # (...,)           == Σ w
 
     def __add__(self, other: "Moments") -> "Moments":
         return Moments(self.gram + other.gram, self.vty + other.vty,
-                       self.yty + other.yty, self.count + other.count)
+                       self.yty + other.yty, self.count + other.count,
+                       self.weight_sum + other.weight_sum)
 
     @property
     def degree(self) -> int:
@@ -53,6 +63,7 @@ class Moments:
             vty=jnp.zeros(batch + (m1,), dtype),
             yty=jnp.zeros(batch, dtype),
             count=jnp.zeros(batch, dtype),
+            weight_sum=jnp.zeros(batch, dtype),
         )
 
 
@@ -109,10 +120,16 @@ def gram_moments(x: jax.Array, y: jax.Array, degree: int, *,
     gram = jnp.einsum("...nj,...nk->...jk", wv, v)
     vty = jnp.einsum("...nj,...n->...j", wv, y)
     yty = jnp.sum((weights * y if weights is not None else y) * y, axis=-1)
-    count = (jnp.sum(weights, axis=-1) if weights is not None
-             else jnp.full(x.shape[:-1], x.shape[-1], (accum_dtype or x.dtype)))
+    if weights is None:
+        count = jnp.full(x.shape[:-1], x.shape[-1], (accum_dtype or x.dtype))
+        weight_sum = count
+    else:
+        # true contributing-point count (kernel-path semantics); Σw separately
+        count = jnp.sum((weights != 0).astype(gram.dtype), axis=-1)
+        weight_sum = jnp.sum(weights, axis=-1)
     return Moments(gram=gram, vty=vty, yty=yty,
-                   count=count.astype(gram.dtype))
+                   count=count.astype(gram.dtype),
+                   weight_sum=weight_sum.astype(gram.dtype))
 
 
 @partial(jax.jit, static_argnames=("degree", "basis", "block", "accum_dtype"))

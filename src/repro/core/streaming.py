@@ -35,39 +35,46 @@ class StreamState:
                            jnp.asarray(decay, dtype))
 
 
-@partial(jax.jit, static_argnames=("basis", "use_kernel"))
+@partial(jax.jit, static_argnames=("basis", "engine", "use_kernel"))
 def update(state: StreamState, x: jax.Array, y: jax.Array, *,
            weights: jax.Array | None = None,
            basis: str = basis_lib.MONOMIAL,
-           use_kernel: bool = False) -> StreamState:
+           engine: str = "auto",
+           use_kernel: bool | None = None) -> StreamState:
     """Fold a new chunk (..., n) into the running moments.
 
-    With decay γ, previous mass is multiplied by γ**n_new, giving exact
-    exponentially-weighted least squares (newest point has weight 1).
+    With decay γ, previous weighted mass is multiplied by γ**n_new, giving
+    exact exponentially-weighted least squares (newest point has weight 1).
+    ``count`` is exempt from decay: it keeps the true number of contributing
+    points ever folded in, identically on every engine path, so kernel- and
+    jnp-produced states mix freely (the solve itself never reads count).
 
-    use_kernel=True accumulates the chunk through the Pallas moments kernel
-    (packed multi-series tiles for batched streams) — same gram/vty/yty,
-    kernel-rate ingest for the monitors/serving hot path. Count caveat: the
-    kernel path records the chunk's TRUE point count where the jnp path
-    records Σw — they agree only for unit weights at γ=1, so don't mix
-    kernel- and jnp-produced states when the count field matters (the solve
-    itself never reads count)."""
+    ``engine`` picks the accumulation path via ``repro.engine.plan_fit``
+    ("auto" = reference off-TPU, packed Pallas kernel for batched streams on
+    TPU); ``use_kernel`` is a deprecated alias."""
+    from repro import engine as engine_lib
     degree = state.moments.degree
     w = _decay_weights(state, x, weights)
-    if use_kernel:
-        if basis != basis_lib.MONOMIAL:
-            raise ValueError("kernel streaming update supports the monomial "
-                             "basis only")
-        from repro.kernels import ops as kernel_ops
-        new = kernel_ops.moments(x, y, degree, weights=w,
-                                 accum_dtype=state.moments.gram.dtype)
-        new = jax.tree.map(lambda a, ref: a.astype(ref.dtype),
-                           new, state.moments)
-    else:
-        new = moments_lib.gram_moments(x, y, degree, basis=basis, weights=w)
+    plan = engine_lib.plan_fit(
+        x.shape, degree, basis=basis, dtype=x.dtype, weighted=True,
+        engine=engine_lib.resolve_engine(engine, use_kernel),
+        accum_dtype=state.moments.gram.dtype)
+    new = engine_lib.compute_moments(plan, x, y, w)
+    new = jax.tree.map(lambda a, ref: a.astype(ref.dtype),
+                       new, state.moments)
+    # count from the USER weights only: γ^age underflows to exactly 0 in
+    # f32 past age ~700, and compute_moments counts nonzero combined
+    # weights — decay must never make a point "not contribute" to count
+    cdt = new.count.dtype
+    true_count = (jnp.full(x.shape[:-1], x.shape[-1], cdt) if weights is None
+                  else jnp.sum((weights != 0), axis=-1).astype(cdt))
+    new = dataclasses.replace(
+        new, count=jnp.broadcast_to(true_count, new.count.shape))
     n_new = jnp.asarray(x.shape[-1], state.decay.dtype)
     g = state.decay ** n_new
-    old = jax.tree.map(lambda a: a * g, state.moments)
+    m = state.moments
+    old = dataclasses.replace(
+        jax.tree.map(lambda a: a * g, m), count=m.count)
     return StreamState(old + new, state.decay)
 
 

@@ -1,0 +1,21 @@
+"""Unified fit-engine dispatch: one place decides how a fit executes.
+
+``plan_fit`` inspects the problem (shape, dtype, degree, basis, mesh,
+backend) and returns a ``FitPlan`` — execution path + numerics policy —
+which ``compute_moments`` / ``compute_report_sums`` execute.  Every public
+fitting entry point (``core.polyfit``, ``core.fit_report_streamed``,
+``streaming.update``, ``distributed``) routes through here.
+"""
+from repro.engine.plan import (FitPlan, NumericsPolicy, plan_fit,
+                               compute_moments, compute_report_sums,
+                               resolve_engine,
+                               REFERENCE, KERNEL_PLAIN, KERNEL_PACKED,
+                               PATHS, ENGINES,
+                               PACKED_MIN_BATCH, KERNEL_MIN_POINTS)
+
+__all__ = [
+    "FitPlan", "NumericsPolicy", "plan_fit",
+    "compute_moments", "compute_report_sums", "resolve_engine",
+    "REFERENCE", "KERNEL_PLAIN", "KERNEL_PACKED", "PATHS", "ENGINES",
+    "PACKED_MIN_BATCH", "KERNEL_MIN_POINTS",
+]

@@ -1,0 +1,295 @@
+"""FitPlan — the one place that decides HOW a matricized LSE fit executes.
+
+The paper's algorithm has exactly one heavy step (moment/Gram accumulation,
+O(n·m²) additive work) and the framework grew four ways to run it:
+
+* ``reference``      pure-jnp ``core.moments.gram_moments`` (XLA fuses it);
+* ``kernel_plain``   one-series-per-tile Pallas kernel;
+* ``kernel_packed``  P = ⌊128/(degree+2)⌋ series per MXU tile (PR-1);
+* distributed       any of the above per shard inside ``shard_map`` + psum.
+
+Previously each callsite (``polyfit``, ``streaming.update``,
+``distributed.local_moments``, ``fit_report_streamed``) hand-threaded a
+``use_kernel`` boolean and re-implemented its own validation.  ``plan_fit``
+centralizes the choice: it inspects the static facts of the problem — batch
+shape, series length, degree, basis, dtype, the active mesh and backend —
+and returns a ``FitPlan`` naming the execution path plus the numerics
+policy (accumulation dtype, Kahan compensation, domain normalization).
+``compute_moments`` then executes any plan.  Callers keep ``use_kernel`` as
+a deprecated alias that maps onto ``engine=``.
+
+Selection heuristics (measured table in EXPERIMENTS.md §Plan selection):
+
+* non-monomial bases and degree+2 > 128 always take ``reference`` (the
+  kernels build monomial power rows in a 128-sublane tile);
+* off-TPU, ``auto`` always takes ``reference`` — interpret-mode Pallas is a
+  correctness tool, ~100-1000× slower than XLA on CPU;
+* on TPU, a batch of ≥ PACKED_MIN_BATCH series with packing room takes
+  ``kernel_packed`` (the P× FLOPs-per-fit win applies at any n);
+* on TPU, a single series takes ``kernel_plain`` only past
+  ``KERNEL_MIN_POINTS`` — below it, compile/dispatch overhead beats the
+  kernel's bandwidth advantage;
+* everything else stays ``reference``.
+
+Forcing is always available: ``engine="kernel"`` (auto packing),
+``"kernel_packed"``, ``"kernel_plain"``, ``"reference"`` — with central
+validation, so e.g. the distributed path can no longer silently drop a
+chebyshev basis on the kernel route.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+# path names (FitPlan.path)
+REFERENCE = "reference"
+KERNEL_PLAIN = "kernel_plain"
+KERNEL_PACKED = "kernel_packed"
+PATHS = (REFERENCE, KERNEL_PLAIN, KERNEL_PACKED)
+
+# engine= values accepted by plan_fit and every refactored callsite
+ENGINES = ("auto", "reference", "kernel", "kernel_plain", "kernel_packed")
+
+# auto heuristics — see module docstring and EXPERIMENTS.md for the numbers
+PACKED_MIN_BATCH = 2          # packed needs ≥ 2 series to beat plain
+KERNEL_MIN_POINTS = 1 << 15   # single-series TPU crossover (total points)
+
+
+@dataclasses.dataclass(frozen=True)
+class NumericsPolicy:
+    """Numerical-robustness knobs, decided once per fit (Skala 1802.07591).
+
+    ``accum_dtype=None`` means "accumulate in the input dtype" on the
+    reference path and f32 on the kernel paths (their tile dtype).
+    """
+
+    accum_dtype: Any = None
+    compensated: bool = False      # Kahan two-float Gram accumulator
+    normalize: bool = False       # map the sample domain to [-1, 1]
+
+
+@dataclasses.dataclass(frozen=True)
+class FitPlan:
+    """A fully-resolved execution plan for one moment-accumulation problem.
+
+    Hashable / static: safe to close over or pass as a jit static arg.
+    """
+
+    path: str                      # one of PATHS
+    degree: int
+    basis: str
+    batch: tuple[int, ...]         # leading batch shape of x/y
+    n: int                         # series length (last axis)
+    weighted: bool
+    numerics: NumericsPolicy
+    block_n: int | None = None     # kernel tile width override
+    interpret: bool | None = None  # None = auto (non-TPU backends interpret)
+    distributed: bool = False      # wrapped in shard_map + psum by the caller
+    devices: int = 1               # mesh size over the data axes
+    reason: str = ""               # human-readable why (logs / tests)
+
+    @property
+    def uses_kernel(self) -> bool:
+        return self.path in (KERNEL_PLAIN, KERNEL_PACKED)
+
+    @property
+    def packing(self) -> str:
+        """ops.moments packing= argument for this plan."""
+        return {KERNEL_PLAIN: "plain", KERNEL_PACKED: "packed"}.get(
+            self.path, "plain")
+
+    def describe(self) -> str:
+        shard = (f" x{self.devices}shards" if self.distributed else "")
+        return (f"FitPlan[{self.path}{shard}] deg={self.degree} "
+                f"basis={self.basis} batch={self.batch} n={self.n} "
+                f"accum={self.numerics.accum_dtype} "
+                f"kahan={self.numerics.compensated} "
+                f"norm={self.numerics.normalize} ({self.reason})")
+
+
+def resolve_engine(engine: str, use_kernel: bool | None) -> str:
+    """Fold the deprecated ``use_kernel`` boolean into ``engine=``."""
+    if use_kernel is not None:
+        warnings.warn(
+            "use_kernel= is deprecated; pass engine='kernel' / "
+            "engine='reference' (or leave engine='auto')",
+            DeprecationWarning, stacklevel=3)
+        mapped = "kernel" if use_kernel else "reference"
+        if engine not in ("auto", mapped):
+            raise ValueError(
+                f"conflicting engine={engine!r} and use_kernel={use_kernel} "
+                f"(the deprecated alias means engine={mapped!r}); drop "
+                "use_kernel=")
+        return mapped
+    return engine
+
+
+def _packing_factor(degree: int) -> int:
+    from repro.kernels import moments as kernel
+    return kernel.packing_factor(degree)
+
+
+def _kernel_degree_ok(degree: int) -> bool:
+    from repro.kernels import moments as kernel
+    return degree + 2 <= kernel.K_PAD
+
+
+def plan_fit(shape: tuple[int, ...], degree: int, *,
+             basis: str = "monomial",
+             dtype: Any = jnp.float32,
+             weighted: bool = False,
+             engine: str = "auto",
+             accum_dtype: Any = None,
+             normalize: bool = False,
+             compensated: bool = False,
+             block_n: int | None = None,
+             interpret: bool | None = None,
+             mesh: jax.sharding.Mesh | None = None,
+             data_axes: tuple[str, ...] = (),
+             backend: str | None = None,
+             workload: str = "moments") -> FitPlan:
+    """Resolve an execution path + numerics policy from static problem facts.
+
+    ``shape``: full x/y shape (leading batch axes + series length).
+    ``engine``: "auto" or a forced path; forcing a kernel path validates
+    centrally (non-monomial basis / oversized degree raise here, for every
+    caller).  ``mesh``/``data_axes``: the active mesh — ``shape`` is then the
+    per-shard shape and the plan is marked distributed.  ``backend``
+    overrides ``jax.default_backend()`` (tests / what-if planning).
+    ``workload``: "moments" (Gram accumulation) or "report" (fused
+    evaluate/residual pass) — the report kernel has no packed variant and a
+    different auto rule (it is the only one-pass option, so monomial fits
+    take it on every backend).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
+    if workload not in ("moments", "report"):
+        raise ValueError(f"workload={workload!r}")
+    if not shape:
+        raise ValueError("x/y must have at least one (series) axis")
+    batch = tuple(int(s) for s in shape[:-1])
+    n = int(shape[-1])
+    b = 1
+    for s in batch:
+        b *= s
+    backend = backend or jax.default_backend()
+    numerics = NumericsPolicy(accum_dtype=accum_dtype,
+                              compensated=compensated, normalize=normalize)
+    devices = 1
+    if mesh is not None and data_axes:
+        for ax in data_axes:
+            devices *= mesh.shape[ax]
+    common = dict(degree=degree, basis=basis, batch=batch, n=n,
+                  weighted=weighted, numerics=numerics, block_n=block_n,
+                  interpret=interpret, distributed=devices > 1,
+                  devices=devices)
+
+    kernel_forced = engine in ("kernel", "kernel_plain", "kernel_packed")
+    monomial = basis == "monomial"
+    if kernel_forced:
+        # central validation — every callsite gets the same errors
+        if not monomial:
+            raise ValueError(
+                f"engine={engine!r} supports the monomial basis only (the "
+                f"Pallas kernels build monomial power rows); use "
+                f"engine='reference' or 'auto' for basis={basis!r}")
+        if not _kernel_degree_ok(degree):
+            raise ValueError(f"degree {degree} exceeds the kernel tile "
+                             "(degree + 2 must be <= 128)")
+
+    if workload == "report":
+        if engine == "reference" or not monomial:
+            return FitPlan(path=REFERENCE, reason="report: materializing "
+                           "jnp pass (forced or non-monomial)", **common)
+        return FitPlan(path=KERNEL_PLAIN, reason="report: fused one-pass "
+                       "kernel (only one-pass option)", **common)
+
+    if engine == "reference":
+        return FitPlan(path=REFERENCE, reason="forced", **common)
+    if engine == "kernel_plain":
+        return FitPlan(path=KERNEL_PLAIN, reason="forced", **common)
+    if engine == "kernel_packed":
+        if _packing_factor(degree) < 2:
+            raise ValueError(f"degree {degree} leaves no room to pack "
+                             f"(packing_factor="
+                             f"{_packing_factor(degree)})")
+        return FitPlan(path=KERNEL_PACKED, reason="forced", **common)
+    if engine == "kernel":
+        if b >= PACKED_MIN_BATCH and _packing_factor(degree) >= 2:
+            return FitPlan(path=KERNEL_PACKED,
+                           reason=f"forced kernel; batch {b} packs "
+                           f"{_packing_factor(degree)}/tile", **common)
+        return FitPlan(path=KERNEL_PLAIN,
+                       reason="forced kernel; no packing room", **common)
+
+    # ---- auto -----------------------------------------------------------
+    if not monomial:
+        return FitPlan(path=REFERENCE, reason=f"auto: basis={basis} has no "
+                       "kernel", **common)
+    if not _kernel_degree_ok(degree):
+        return FitPlan(path=REFERENCE,
+                       reason=f"auto: degree {degree} > kernel tile",
+                       **common)
+    if backend != "tpu":
+        return FitPlan(path=REFERENCE, reason=f"auto: backend={backend} "
+                       "(interpret-mode Pallas loses to XLA)", **common)
+    if b >= PACKED_MIN_BATCH and _packing_factor(degree) >= 2:
+        return FitPlan(path=KERNEL_PACKED,
+                       reason=f"auto: batch {b} packs "
+                       f"{_packing_factor(degree)} series/tile", **common)
+    if b * n >= KERNEL_MIN_POINTS:
+        return FitPlan(path=KERNEL_PLAIN,
+                       reason=f"auto: {b * n} pts >= crossover "
+                       f"{KERNEL_MIN_POINTS}", **common)
+    return FitPlan(path=REFERENCE,
+                   reason=f"auto: {b * n} pts below kernel crossover",
+                   **common)
+
+
+def compute_moments(plan: FitPlan, x: jax.Array, y: jax.Array,
+                    weights: jax.Array | None = None):
+    """Execute a plan's moment accumulation.  Returns ``core.Moments``.
+
+    ``x``/``y`` must already be domain-mapped if ``plan.numerics.normalize``
+    (the Domain lives with the caller, next to the solve)."""
+    if plan.uses_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.moments(
+            x, y, plan.degree, weights=weights,
+            block_n=plan.block_n,
+            accum_dtype=plan.numerics.accum_dtype,
+            packing=plan.packing,
+            compensated=plan.numerics.compensated,
+            interpret=plan.interpret)
+    from repro.core import moments as moments_lib
+    return moments_lib.gram_moments(
+        x, y, plan.degree, basis=plan.basis, weights=weights,
+        accum_dtype=plan.numerics.accum_dtype)
+
+
+def compute_report_sums(plan: FitPlan, x: jax.Array, y: jax.Array,
+                        coeffs: jax.Array,
+                        weights: jax.Array | None = None) -> dict:
+    """Execute a ``workload="report"`` plan: the seven evaluate/residual
+    sums (Σw, Σwy, Σwy², Σwf, Σwf², Σwyf, Σwe²) every fit-report quantity
+    derives from.  ``x`` must already be domain-mapped (monomial Horner)."""
+    if plan.uses_kernel:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.fused_report_sums(
+            x, y, coeffs, weights=weights, block_n=plan.block_n,
+            interpret=plan.interpret)
+    from repro.core import basis as basis_lib
+    fitted = basis_lib.evaluate(coeffs, x, basis=plan.basis)
+    w = jnp.ones_like(y) if weights is None else weights
+    e = y - fitted
+    return {"sw": jnp.sum(w, axis=-1),
+            "sy": jnp.sum(w * y, axis=-1),
+            "syy": jnp.sum(w * y * y, axis=-1),
+            "sf": jnp.sum(w * fitted, axis=-1),
+            "sff": jnp.sum(w * fitted * fitted, axis=-1),
+            "syf": jnp.sum(w * y * fitted, axis=-1),
+            "sse": jnp.sum(w * e * e, axis=-1)}

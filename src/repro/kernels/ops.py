@@ -12,15 +12,15 @@ Path selection (``moments(..., packing="auto")``):
     by P are padded with zero-weight tail series whose exact-zero Gram
     blocks are sliced away.
   * **plain** — single series, or degree > 62 (P < 2): one series per tile.
-  * the pure-jnp path stays in ``repro.core.gram_moments`` (callers choose
-    it via ``polyfit(use_kernel=False)``).
+  * the pure-jnp path stays in ``repro.core.gram_moments`` (the
+    ``repro.engine`` plan layer picks between them; ``engine="reference"``
+    forces it).
 
 Count semantics: ``Moments.count`` from this module is the TRUE number of
-contributing data points — points with nonzero weight, excluding padding.
-(The kernel's raw G[0,0] entry is Σw, which only equals the count for
-unit weights; the previous code returned it directly, so decay-weighted
-streaming reported Σγ^i instead of n. Σw is still available as
-``gram[..., 0, 0]`` for callers that want the weighted mass.)
+contributing data points — points with nonzero weight, excluding padding —
+and ``Moments.weight_sum`` is Σw (== the kernel's raw G[0,0] entry).  The
+jnp path records the same split, so kernel- and jnp-produced states mix
+freely.
 """
 from __future__ import annotations
 
@@ -88,6 +88,8 @@ def moments(x: jax.Array, y: jax.Array, degree: int, *,
             weights = weights[None]
     b, n = x.shape
     count = _true_count(weights, b, n, accum_dtype)
+    weight_sum = (jnp.full((b,), n, accum_dtype) if weights is None
+                  else jnp.sum(weights, axis=-1).astype(accum_dtype))
 
     pfac = kernel.packing_factor(degree)
     use_packed = (packing == "packed"
@@ -123,7 +125,7 @@ def moments(x: jax.Array, y: jax.Array, degree: int, *,
                                     interpret=interpret)
     m1 = degree + 1
     out = Moments(gram=g[:, :m1, :m1], vty=g[:, :m1, m1],
-                  yty=g[:, m1, m1], count=count)
+                  yty=g[:, m1, m1], count=count, weight_sum=weight_sum)
     if flat:
         out = jax.tree.map(lambda a: a[0], out)
     return out

@@ -38,20 +38,30 @@ def extended_gram(x: jnp.ndarray, y: jnp.ndarray, degree: int,
     return jnp.einsum("...kn,...jn->...kj", lhs, w_mat)
 
 
-def moments_from_extended(g: jnp.ndarray, degree: int) -> Moments:
-    """Slice the paper's statistics out of the extended Gram matrix."""
+def moments_from_extended(g: jnp.ndarray, degree: int,
+                          count: jnp.ndarray | None = None) -> Moments:
+    """Slice the paper's statistics out of the extended Gram matrix.
+
+    G[0,0] is Σw (``weight_sum``); the true contributing-point count is not
+    recoverable from G alone, so pass it when weights are in play (defaults
+    to Σw, which is exact for 0/1 weights)."""
     m1 = degree + 1
     return Moments(gram=g[..., :m1, :m1],
                    vty=g[..., :m1, m1],
                    yty=g[..., m1, m1],
-                   count=g[..., 0, 0])
+                   count=g[..., 0, 0] if count is None else count,
+                   weight_sum=g[..., 0, 0])
 
 
 def moments_reference(x: jnp.ndarray, y: jnp.ndarray, degree: int,
                       weights: jnp.ndarray | None = None,
                       accum_dtype=jnp.float32) -> Moments:
+    count = None
+    if weights is not None:
+        count = jnp.sum((weights != 0), axis=-1).astype(accum_dtype)
     return moments_from_extended(
-        extended_gram(x, y, degree, weights, accum_dtype), degree)
+        extended_gram(x, y, degree, weights, accum_dtype), degree,
+        count=count)
 
 
 def packed_extended_gram(x: jnp.ndarray, y: jnp.ndarray, degree: int,

@@ -1,6 +1,13 @@
-"""Batched serving driver: continuous-batching engine over a zoo arch.
+"""Serving drivers: continuous-batching engines over fixed slot pools.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch internlm2-1.8b --smoke
+Fit serving (the paper's workload — the flagship path):
+
+    PYTHONPATH=src python -m repro.launch.serve --requests 200
+
+Token serving (the zoo-arch decode engine):
+
+    PYTHONPATH=src python -m repro.launch.serve --workload tokens \
+        --arch internlm2-1.8b --smoke
 """
 from __future__ import annotations
 
@@ -8,21 +15,51 @@ import argparse
 import time
 
 import jax
-
-from repro import configs
-from repro.models import get_model
-from repro.serve import EngineConfig, ServeEngine
+import numpy as np
 
 
-def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=24)
-    args = ap.parse_args(argv)
+def serve_fits(args) -> None:
+    from repro.serve import FitServeConfig, FitServeEngine
+
+    cfg = FitServeConfig(degree=args.degree, n_slots=args.slots,
+                         buckets=tuple(args.buckets), ridge=1e-9,
+                         engine=args.engine)
+    engine = FitServeEngine(cfg)
+
+    rng = np.random.default_rng(7)
+    coef = rng.normal(0, 1, args.degree + 1)
+
+    def make_request():
+        # ragged lengths, log-uniform: most requests short, a heavy tail
+        n = int(np.exp(rng.uniform(np.log(args.min_n), np.log(args.max_n))))
+        x = rng.uniform(-2, 2, n).astype(np.float32)
+        y = (np.polyval(coef[::-1], x)
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        return engine.submit(x, y)
+
+    execs = engine.warmup()   # compiles every bucket's ingest + the solve
+
+    reqs = [make_request() for _ in range(args.requests)]
+    t0 = time.perf_counter()
+    engine.run()
+    dt = time.perf_counter() - t0
+    recompiles = engine.compiled_executables() - execs
+    done = sum(r.done for r in reqs)
+    pts = sum(r.n for r in reqs)
+    print(f"[serve-fits] {done}/{len(reqs)} fits, {pts} points in {dt:.2f}s "
+          f"({done / dt:.1f} fits/s, {pts / dt / 1e6:.2f} Mpts/s, "
+          f"{execs} executables, {recompiles} recompiles after warmup)")
+    for r in reqs[:3]:
+        print(f"  req {r.uid}: n={r.n} R={r.r:.4f} sse={r.sse:.3g} "
+              f"coeffs={np.round(r.coeffs, 3)}")
+    assert done == len(reqs)
+    assert recompiles == 0, f"{recompiles} recompiles during steady state"
+
+
+def serve_tokens(args) -> None:
+    from repro import configs
+    from repro.models import get_model
+    from repro.serve import EngineConfig, ServeEngine
 
     cfg = (configs.get_smoke_config(args.arch) if args.smoke
            else configs.get_config(args.arch))
@@ -52,6 +89,35 @@ def main(argv=None):
         print(f"  req {r.uid}: {len(r.out_tokens)} tokens "
               f"{r.out_tokens[:10]}...")
     assert done == len(reqs)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=("fits", "tokens"), default="fits")
+    # per-workload defaults: fits churns cheap requests, tokens decodes
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--slots", type=int, default=None)
+    # fit-serving knobs
+    ap.add_argument("--degree", type=int, default=3)
+    ap.add_argument("--buckets", type=int, nargs="+", default=[256, 2048])
+    ap.add_argument("--min-n", type=int, default=16)
+    ap.add_argument("--max-n", type=int, default=8192)
+    ap.add_argument("--engine", default="auto",
+                    help="repro.engine path: auto/reference/kernel/...")
+    # token-serving knobs
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=24)
+    args = ap.parse_args(argv)
+    if args.workload == "fits":
+        args.requests = 200 if args.requests is None else args.requests
+        args.slots = 8 if args.slots is None else args.slots
+        serve_fits(args)
+    else:
+        args.requests = 12 if args.requests is None else args.requests
+        args.slots = 4 if args.slots is None else args.slots
+        serve_tokens(args)
 
 
 if __name__ == "__main__":

@@ -1,4 +1,13 @@
+"""Serving engines: continuous batching over fixed slot pools.
+
+``fit_engine`` serves the paper's workload — matricized LSE curve fits —
+and is the flagship path; ``engine`` is the token-decode engine the slot
+-pool design was first built around.
+"""
 from repro.serve.engine import ServeEngine, EngineConfig, Request
+from repro.serve.fit_engine import (FitServeEngine, FitServeConfig,
+                                    FitRequest)
 from repro.serve.sampling import sample
 
-__all__ = ["ServeEngine", "EngineConfig", "Request", "sample"]
+__all__ = ["ServeEngine", "EngineConfig", "Request",
+           "FitServeEngine", "FitServeConfig", "FitRequest", "sample"]

@@ -1,0 +1,230 @@
+"""Continuous-batching fit server: the paper's workload as a service.
+
+The token engine next door (``serve.engine``) batches decode steps over a
+fixed slot pool; this engine does the same for *curve fits* — the workload
+this repo actually reproduces.  Ragged per-request (x, y) series arrive,
+are bucketed by length onto fixed-width slot pools, and ingest through the
+matricized moment accumulator (packed P-series-per-tile Pallas kernel on
+TPU, via ``repro.engine`` plan dispatch) with per-slot streaming
+``StreamState`` — so a million-point series occupies one slot and folds in
+chunk-by-chunk while short requests churn through the other slots.
+
+vLLM-style static shapes: every bucket owns exactly TWO compiled
+executables — one ingest step of shape (n_slots, width) and one solve of
+the pooled O(m²) state — warmed once and reused across arbitrary request
+churn.  Padding rides in with weight 0 (contributes nothing, by the
+additive-moments property), slot reuse zeroes the slot's moments with a
+keep-mask inside the same compiled step, so request arrival/departure
+never changes a shape and never recompiles.  ``compiled_executables()``
+exposes the counter the serve benchmark asserts on.
+
+The host loop is deliberately synchronous/deterministic — the scheduling
+substrate an async front-end would wrap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fit as fit_lib
+from repro.core import moments as moments_lib
+from repro.core import streaming
+
+
+@dataclasses.dataclass
+class FitRequest:
+    """One fit job: a ragged series in, a polynomial + quality report out."""
+
+    uid: int
+    x: np.ndarray                      # (n,) host-side series
+    y: np.ndarray
+    coeffs: np.ndarray | None = None   # (degree+1,) when done
+    sse: float | None = None
+    r: float | None = None
+    count: float | None = None         # points the fit actually used
+    done: bool = False
+
+    @property
+    def n(self) -> int:
+        return int(self.x.shape[0])
+
+
+@dataclasses.dataclass(frozen=True)
+class FitServeConfig:
+    degree: int = 3
+    n_slots: int = 8                    # concurrent series per bucket
+    buckets: tuple[int, ...] = (256, 2048)   # chunk widths, ascending
+    method: str = "gauss"
+    ridge: float = 1e-9                 # λI stabilizer for the pooled solve
+    # (idle slots hold all-zero moments and degenerate series are accepted,
+    # so the pooled solve must never be exactly singular)
+    decay: float = 1.0                  # exponential forgetting (γ=1: off);
+    # γ<1 assumes full chunks (ages are counted inside each ingest chunk)
+    engine: str = "auto"                # repro.engine path selection
+    dtype: Any = jnp.float32
+
+
+class _Bucket:
+    """One length bucket: a slot pool + its compiled ingest step."""
+
+    def __init__(self, width: int, n_slots: int, cfg: FitServeConfig):
+        self.width = width
+        self.state = streaming.StreamState.create(
+            cfg.degree, (n_slots,), decay=cfg.decay, dtype=cfg.dtype)
+        self.slot_req: list[FitRequest | None] = [None] * n_slots
+        self.slot_pos = np.zeros(n_slots, np.int64)    # points ingested
+        self.reset = np.zeros(n_slots, bool)           # zero slot next step
+        self.queue: list[FitRequest] = []
+
+        @jax.jit
+        def ingest(state, x, y, w, keep):
+            # keep==0 wipes a slot's previous occupant inside the same
+            # compiled step (count included: it restarts for the new series)
+            m = state.moments
+            k = keep.astype(m.gram.dtype)
+            m = moments_lib.Moments(
+                gram=m.gram * k[:, None, None], vty=m.vty * k[:, None],
+                yty=m.yty * k, count=m.count * k, weight_sum=m.weight_sum * k)
+            return streaming.update(
+                streaming.StreamState(m, state.decay), x, y, weights=w,
+                engine=cfg.engine)
+
+        self.ingest = ingest
+
+
+class FitServeEngine:
+    """Host-side continuous batching around compiled moment-ingest steps."""
+
+    def __init__(self, cfg: FitServeConfig | None = None):
+        self.cfg = cfg = cfg or FitServeConfig()
+        if tuple(sorted(cfg.buckets)) != tuple(cfg.buckets):
+            raise ValueError(f"buckets must ascend: {cfg.buckets}")
+        self.buckets = [_Bucket(w, cfg.n_slots, cfg) for w in cfg.buckets]
+        self._uid = 0
+        self.fits_done = 0
+        self.points_ingested = 0
+
+        @jax.jit
+        def solve(state):
+            poly = streaming.current_fit(state, method=cfg.method,
+                                         ridge=cfg.ridge)
+            rep = fit_lib.report_from_moments(state.moments, poly.coeffs)
+            return poly.coeffs, rep.sse, rep.r, state.moments.count
+
+        self._solve = solve
+
+    # ------------------------------------------------------------- plumbing
+    def submit(self, x, y) -> FitRequest:
+        """Queue one ragged series; routed to the smallest bucket that holds
+        it in one chunk, else the largest (multi-chunk streaming ingest)."""
+        x = np.asarray(x, np.float32)
+        y = np.asarray(y, np.float32)
+        if x.ndim != 1 or x.shape != y.shape or x.shape[0] == 0:
+            raise ValueError(f"expected equal non-empty 1-D x/y, got "
+                             f"{x.shape} vs {y.shape}")
+        if x.shape[0] < self.cfg.degree + 1:
+            raise ValueError(
+                f"series of {x.shape[0]} points cannot determine a "
+                f"degree-{self.cfg.degree} fit (need >= "
+                f"{self.cfg.degree + 1})")
+        req = FitRequest(self._uid, x, y)
+        self._uid += 1
+        for b in self.buckets[:-1]:
+            if req.n <= b.width:
+                b.queue.append(req)
+                return req
+        self.buckets[-1].queue.append(req)
+        return req
+
+    def warmup(self) -> int:
+        """Compile every executable up front — one full-width synthetic
+        request per bucket, drained immediately — so steady-state serving
+        provably never recompiles.  Returns ``compiled_executables()``
+        (the baseline the no-recompile invariant is asserted against).
+        Deterministic: does not depend on the live traffic's lengths."""
+        if self.pending:
+            raise RuntimeError("warmup() requires an idle engine")
+        for b in self.buckets:
+            n = max(b.width, self.cfg.degree + 1)
+            x = np.linspace(-1.0, 1.0, n, dtype=np.float32)
+            self.submit(x, x)
+        self.run()
+        return self.compiled_executables()
+
+    def compiled_executables(self) -> int:
+        """Total compiled executables across the engine's jitted steps —
+        constant after warmup is the no-recompile serving invariant."""
+        return (self._solve._cache_size()
+                + sum(b.ingest._cache_size() for b in self.buckets))
+
+    @property
+    def pending(self) -> int:
+        return (sum(len(b.queue) for b in self.buckets)
+                + sum(r is not None for b in self.buckets
+                      for r in b.slot_req))
+
+    # ----------------------------------------------------------------- run
+    def _step_bucket(self, b: _Bucket) -> None:
+        # admit: fill free slots from this bucket's queue
+        for slot, req in enumerate(b.slot_req):
+            if req is None and b.queue:
+                b.slot_req[slot] = b.queue.pop(0)
+                b.slot_pos[slot] = 0
+                b.reset[slot] = True
+        active = [s for s, r in enumerate(b.slot_req) if r is not None]
+        if not active:
+            return
+
+        n_slots, w = len(b.slot_req), b.width
+        xh = np.zeros((n_slots, w), np.float32)
+        yh = np.zeros((n_slots, w), np.float32)
+        wh = np.zeros((n_slots, w), np.float32)
+        for s in active:
+            req = b.slot_req[s]
+            lo = int(b.slot_pos[s])
+            chunk = req.x[lo:lo + w]
+            m = chunk.shape[0]
+            xh[s, :m] = chunk
+            yh[s, :m] = req.y[lo:lo + w]
+            wh[s, :m] = 1.0
+            b.slot_pos[s] = lo + m
+            self.points_ingested += m
+        keep = np.where(b.reset, 0.0, 1.0).astype(np.float32)
+        b.reset[:] = False
+        b.state = b.ingest(b.state, jnp.asarray(xh), jnp.asarray(yh),
+                           jnp.asarray(wh), jnp.asarray(keep))
+
+        ready = [s for s in active if b.slot_pos[s] >= b.slot_req[s].n]
+        if not ready:
+            return
+        coeffs, sse, r, count = (np.asarray(a) for a in
+                                 self._solve(b.state))
+        for s in ready:
+            req = b.slot_req[s]
+            req.coeffs = coeffs[s].copy()
+            req.sse = float(sse[s])
+            req.r = float(r[s])
+            req.count = float(count[s])
+            req.done = True
+            b.slot_req[s] = None
+            self.fits_done += 1
+
+    def step(self) -> None:
+        """One engine iteration: admit + one compiled ingest per non-empty
+        bucket (+ one compiled solve per bucket that finished a series)."""
+        for b in self.buckets:
+            self._step_bucket(b)
+
+    def run(self, max_steps: int = 1_000_000) -> None:
+        """Drive until every queued request is served (or max_steps)."""
+        for _ in range(max_steps):
+            if not self.pending:
+                return
+            self.step()
+        if self.pending:
+            raise RuntimeError(f"{self.pending} requests still pending "
+                               f"after {max_steps} steps")

@@ -1,0 +1,188 @@
+"""Unified fit-engine dispatch: plan selection, central validation, the
+deprecated use_kernel alias, and the unified count/weight_sum semantics."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core, engine
+from repro.core import streaming
+from repro.kernels import ops as kernel_ops
+
+
+def _data(seed, shape):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-2, 2, shape), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, shape), jnp.float32)
+    return x, y
+
+
+# ------------------------------------------------------------ plan selection
+def test_auto_selects_packed_for_batched_monomial_on_tpu():
+    plan = engine.plan_fit((33, 512), 3, backend="tpu")
+    assert plan.path == engine.KERNEL_PACKED
+    assert plan.packing == "packed"
+    assert plan.uses_kernel
+
+
+def test_auto_single_series_crossover_on_tpu():
+    small = engine.plan_fit((1000,), 3, backend="tpu")
+    big = engine.plan_fit((engine.KERNEL_MIN_POINTS,), 3, backend="tpu")
+    assert small.path == engine.REFERENCE
+    assert big.path == engine.KERNEL_PLAIN
+
+
+def test_auto_stays_reference_off_tpu():
+    plan = engine.plan_fit((33, 512), 3, backend="cpu")
+    assert plan.path == engine.REFERENCE
+
+
+def test_auto_reference_for_chebyshev_and_huge_degree():
+    assert engine.plan_fit((8, 256), 3, basis="chebyshev",
+                           backend="tpu").path == engine.REFERENCE
+    assert engine.plan_fit((8, 256), 200,
+                           backend="tpu").path == engine.REFERENCE
+
+
+def test_report_workload_prefers_fused_kernel_everywhere():
+    assert engine.plan_fit((4, 256), 3, backend="cpu",
+                           workload="report").path == engine.KERNEL_PLAIN
+    assert engine.plan_fit((4, 256), 3, basis="chebyshev",
+                           workload="report").path == engine.REFERENCE
+
+
+def test_mesh_marks_plan_distributed():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    plan = engine.plan_fit((512,), 2, mesh=mesh, data_axes=("data",))
+    assert not plan.distributed and plan.devices == 1
+    assert "FitPlan" in plan.describe()
+
+
+# -------------------------------------------------------- central validation
+def test_forced_kernel_rejects_chebyshev_everywhere():
+    x, y = _data(0, (4, 128))
+    with pytest.raises(ValueError, match="monomial"):
+        engine.plan_fit((4, 128), 2, basis="chebyshev", engine="kernel")
+    with pytest.raises(ValueError, match="monomial"):
+        core.polyfit(x, y, 2, basis="chebyshev", engine="kernel")
+    with pytest.raises(ValueError, match="monomial"):
+        # previously silently ignored the basis on the kernel path
+        core.local_moments(x, y, 2, basis="chebyshev", engine="kernel")
+
+
+def test_make_distributed_fit_validates_eagerly():
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_host_mesh(data=1, model=1)
+    with pytest.raises(ValueError, match="monomial"):
+        core.make_distributed_fit(mesh, 2, basis="chebyshev",
+                                  engine="kernel")
+
+
+def test_forced_packed_needs_packing_room():
+    with pytest.raises(ValueError, match="pack"):
+        engine.plan_fit((4, 128), 63, engine="kernel_packed")
+
+
+def test_bad_engine_name():
+    with pytest.raises(ValueError, match="engine"):
+        engine.plan_fit((128,), 2, engine="cuda")
+
+
+# ----------------------------------------------- execution matches old paths
+def test_engine_kernel_bitwise_matches_use_kernel_true():
+    x, y = _data(1, (33, 512))
+    a = core.polyfit(x, y, 3, engine="kernel").coeffs
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        b = core.polyfit(x, y, 3, use_kernel=True).coeffs
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_use_kernel_alias_warns():
+    x, y = _data(2, (257,))
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        core.polyfit(x, y, 2, use_kernel=False)
+
+
+def test_plan_execution_matches_direct_kernel_call():
+    """compute_moments on a packed plan == calling ops.moments directly."""
+    x, y = _data(3, (10, 300))
+    plan = engine.plan_fit(x.shape, 3, engine="kernel_packed")
+    mp = engine.compute_moments(plan, x, y)
+    mk = kernel_ops.moments(x, y, 3, packing="packed")
+    for f in ("gram", "vty", "yty", "count", "weight_sum"):
+        np.testing.assert_array_equal(np.asarray(getattr(mp, f)),
+                                      np.asarray(getattr(mk, f)), err_msg=f)
+
+
+def test_auto_reference_matches_legacy_default():
+    x, y = _data(4, (6, 400))
+    a = core.polyfit(x, y, 2).coeffs                      # engine="auto", CPU
+    b = core.polyfit(x, y, 2, engine="reference").coeffs
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------------------- unified count/weight_sum semantics
+def test_jnp_count_is_true_count_weight_sum_is_mass():
+    x, y = _data(5, (3, 200))
+    w = jnp.concatenate([jnp.full((3, 150), 0.5), jnp.zeros((3, 50))], axis=1)
+    mj = core.gram_moments(x, y, 2, weights=w)
+    mk = kernel_ops.moments(x, y, 2, weights=w)
+    np.testing.assert_array_equal(np.asarray(mj.count), 150.0)
+    np.testing.assert_array_equal(np.asarray(mk.count), 150.0)
+    np.testing.assert_allclose(np.asarray(mj.weight_sum), 75.0, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(mk.weight_sum), 75.0, rtol=1e-5)
+
+
+def test_kernel_and_jnp_stream_states_mix():
+    """The old caveat is gone: states from both paths fold together and the
+    count stays the exact point total."""
+    x, y = _data(6, (4, 160))
+    st = streaming.StreamState.create(2, (4,))
+    st = streaming.update(st, x, y, engine="reference")
+    st = streaming.update(st, x, y, engine="kernel")
+    np.testing.assert_array_equal(np.asarray(st.moments.count), 320.0)
+    np.testing.assert_allclose(np.asarray(st.moments.weight_sum), 320.0,
+                               rtol=1e-6)
+
+
+def test_decay_underflow_does_not_undercount():
+    """γ^age underflows to exactly 0 in f32 past age ~700 — count must
+    still record every point of a long chunk."""
+    x, y = _data(9, (2048,))
+    st = streaming.StreamState.create(1, decay=0.9)
+    st = streaming.update(st, x, y)
+    np.testing.assert_array_equal(np.asarray(st.moments.count), 2048.0)
+
+
+def test_use_kernel_conflicting_with_engine_raises():
+    x, y = _data(10, (4, 128))
+    with pytest.raises(ValueError, match="conflicting"):
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            core.polyfit(x, y, 2, engine="kernel_packed", use_kernel=False)
+
+
+def test_decayed_stream_count_does_not_decay():
+    x, y = _data(7, (96,))
+    st = streaming.StreamState.create(1, decay=0.9)
+    for lo in range(0, 96, 32):
+        st = streaming.update(st, x[lo:lo + 32], y[lo:lo + 32])
+    np.testing.assert_array_equal(np.asarray(st.moments.count), 96.0)
+    # weighted mass decays: Σ γ^age over all 96 points
+    want = float(np.sum(0.9 ** np.arange(96)))
+    np.testing.assert_allclose(np.asarray(st.moments.weight_sum), want,
+                               rtol=1e-5)
+
+
+def test_report_from_moments_matches_fit_report():
+    x, y = _data(8, (5, 300))
+    poly = core.polyfit(x, y, 3)
+    rep = core.fit_report(poly, x, y)
+    got = core.report_from_moments(core.gram_moments(x, y, 3), poly.coeffs)
+    np.testing.assert_allclose(np.asarray(got.sse), np.asarray(rep.sse),
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(got.r), np.asarray(rep.r),
+                               rtol=1e-3, atol=1e-3)

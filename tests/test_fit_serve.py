@@ -1,0 +1,117 @@
+"""Continuous-batching fit server: parity with direct polyfit on ragged
+traces, chunked ingest of long series, and the no-recompile invariant."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import core
+from repro.serve import FitRequest, FitServeConfig, FitServeEngine
+
+
+def _trace(seed, n_reqs, lo, hi, degree=3):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(n_reqs):
+        n = int(rng.integers(lo, hi + 1))
+        x = rng.uniform(-2, 2, n).astype(np.float32)
+        coef = rng.normal(0, 1, degree + 1)
+        y = (np.polyval(coef[::-1], x)
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        out.append((x, y))
+    return out
+
+
+def _assert_matches_polyfit(reqs: list[FitRequest], degree, atol=5e-4):
+    for r in reqs:
+        assert r.done and r.count == r.n
+        ref = core.polyfit(jnp.asarray(r.x), jnp.asarray(r.y), degree)
+        np.testing.assert_allclose(r.coeffs, np.asarray(ref.coeffs),
+                                   rtol=5e-3, atol=atol,
+                                   err_msg=f"req {r.uid} n={r.n}")
+
+
+def test_ragged_trace_matches_direct_polyfit():
+    eng = FitServeEngine(FitServeConfig(degree=3, n_slots=4,
+                                        buckets=(64, 256), ridge=1e-9))
+    reqs = [eng.submit(x, y) for x, y in _trace(0, 25, 5, 700)]
+    eng.run()
+    assert eng.fits_done == 25
+    _assert_matches_polyfit(reqs, 3)
+
+
+def test_long_series_streams_through_small_bucket():
+    """A series much longer than every bucket ingests chunk-by-chunk."""
+    eng = FitServeEngine(FitServeConfig(degree=2, n_slots=2,
+                                        buckets=(128,), ridge=1e-9))
+    (x, y), = _trace(1, 1, 5000, 5000, degree=2)
+    req = eng.submit(x, y)
+    eng.run()
+    assert req.done and req.count == 5000
+    _assert_matches_polyfit([req], 2)
+
+
+def test_zero_recompiles_across_request_churn():
+    eng = FitServeEngine(FitServeConfig(degree=3, n_slots=3,
+                                        buckets=(64, 256), ridge=1e-9))
+    warm = eng.warmup()
+    assert warm == len(eng.buckets) + 1       # one ingest/bucket + one solve
+    for x, y in _trace(2, 8, 5, 500):
+        eng.submit(x, y)
+    eng.run()
+    assert eng.compiled_executables() == warm
+    reqs = [eng.submit(x, y) for x, y in _trace(3, 30, 5, 500)]
+    eng.run()
+    assert eng.compiled_executables() == warm
+    _assert_matches_polyfit(reqs, 3)
+
+
+def test_slot_reuse_isolates_requests():
+    """Back-to-back occupants of the same slot don't contaminate each other:
+    serve a constant series after a wild one, slot pool of 1."""
+    eng = FitServeEngine(FitServeConfig(degree=1, n_slots=1,
+                                        buckets=(32,), ridge=1e-9))
+    rng = np.random.default_rng(4)
+    wild_x = rng.uniform(-100, 100, 200).astype(np.float32)
+    wild_y = rng.normal(0, 1000, 200).astype(np.float32)
+    eng.submit(wild_x, wild_y)
+    x = np.linspace(-1, 1, 30).astype(np.float32)
+    clean = eng.submit(x, (2.0 + 3.0 * x).astype(np.float32))
+    eng.run()
+    np.testing.assert_allclose(clean.coeffs, [2.0, 3.0], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_kernel_engine_path():
+    """Forced packed-kernel ingest (interpret mode on CPU) serves correctly."""
+    eng = FitServeEngine(FitServeConfig(degree=3, n_slots=3, buckets=(128,),
+                                        engine="kernel", ridge=1e-9))
+    reqs = [eng.submit(x, y) for x, y in _trace(5, 4, 20, 200)]
+    eng.run()
+    _assert_matches_polyfit(reqs, 3)
+
+
+def test_report_quality_fields():
+    eng = FitServeEngine(FitServeConfig(degree=2, n_slots=2, buckets=(256,),
+                                        ridge=1e-9))
+    rng = np.random.default_rng(6)
+    x = rng.uniform(-2, 2, 400).astype(np.float32)
+    y = (x ** 2 + rng.normal(0, 0.05, 400)).astype(np.float32)
+    req = eng.submit(x, y)
+    eng.run()
+    rep = core.fit_report(core.polyfit(jnp.asarray(x), jnp.asarray(y), 2),
+                          jnp.asarray(x), jnp.asarray(y))
+    np.testing.assert_allclose(req.sse, float(rep.sse), rtol=5e-3, atol=1e-3)
+    np.testing.assert_allclose(req.r, float(rep.r), rtol=1e-3)
+
+
+def test_submit_validation():
+    eng = FitServeEngine(FitServeConfig(n_slots=1, buckets=(32,)))
+    with pytest.raises(ValueError):
+        eng.submit(np.ones(3), np.ones(4))
+    with pytest.raises(ValueError):
+        eng.submit(np.ones(0), np.ones(0))
+    with pytest.raises(ValueError, match="determine"):
+        # degree-3 default: an underdetermined request is rejected up front
+        eng.submit(np.ones(2), np.ones(2))
+    with pytest.raises(ValueError):
+        FitServeEngine(FitServeConfig(buckets=(256, 64)))

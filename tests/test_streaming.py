@@ -60,6 +60,39 @@ def test_streaming_sse_tracks():
     assert abs(sse - direct) / direct < 0.05
 
 
+@given(st.integers(0, 10_000), st.integers(2, 5),
+       st.sampled_from([0.9, 0.97, 0.999]),
+       st.sampled_from(["reference", "kernel"]))
+def test_streaming_decay_chunks_match_weighted_polyfit(seed, k_chunks,
+                                                       gamma, engine):
+    """Property: a γ-decayed StreamState folded over K chunks solves the
+    exact γ-weighted LSE on the concatenated data — on the kernel path and
+    the jnp path alike (the paths share count/weight_sum semantics now)."""
+    chunk = 32
+    n = chunk * k_chunks
+    rng = np.random.default_rng(seed)
+    x = rng.uniform(-1, 1, n).astype(np.float32)
+    y = (1.5 - 2.0 * x + 0.5 * x * x
+         + rng.normal(0, 0.1, n)).astype(np.float32)
+
+    state = streaming.StreamState.create(2, decay=gamma)
+    for lo in range(0, n, chunk):
+        state = streaming.update(state, jnp.asarray(x[lo:lo + chunk]),
+                                 jnp.asarray(y[lo:lo + chunk]),
+                                 engine=engine)
+    got = np.asarray(streaming.current_fit(state).coeffs)
+
+    ages = np.arange(n - 1, -1, -1, dtype=np.float64)
+    w = jnp.asarray(gamma ** ages, jnp.float32)
+    want = np.asarray(core.polyfit(jnp.asarray(x), jnp.asarray(y), 2,
+                                   weights=w).coeffs)
+    np.testing.assert_allclose(got, want, rtol=5e-3, atol=5e-3)
+    # count is the raw point total (undecayed); weight_sum the γ-mass
+    np.testing.assert_allclose(np.asarray(state.moments.count), n)
+    np.testing.assert_allclose(np.asarray(state.moments.weight_sum),
+                               float(np.sum(gamma ** ages)), rtol=1e-4)
+
+
 # -------------------------------------------------------------- monitors
 def test_loss_monitor_detects_divergence():
     mon = LossCurveMonitor(degree=2, decay=0.9)
