@@ -183,6 +183,85 @@ def bench_fused_report(quick: bool):
         f"hbm_bytes_avoided={saved}")
 
 
+def bench_solver_stack(quick: bool):
+    """Condition-aware solver stack (PR-3): the explicit ladder's hot rung
+    (batched GE), the SVD rescue on an ill-conditioned degree-9 Gram, IRLS
+    robust fitting under 20% contamination, and the matrix-free LSPIA
+    iteration.  Every derived field is finite-asserted under --smoke, so a
+    solver regression that starts shipping NaNs trips CI here."""
+    rng = np.random.default_rng(9)
+
+    # solve_ge: the paper's solver, batched over a slot-pool-sized stack
+    deg = 3
+    b = 64 if SMOKE else 1024
+    a = rng.normal(0, 1, (b, deg + 1, deg + 1))
+    a = a @ a.transpose(0, 2, 1) + (deg + 1) * np.eye(deg + 1)
+    rhs = rng.normal(0, 1, (b, deg + 1))
+    aj = jnp.asarray(a, jnp.float32)
+    bj = jnp.asarray(rhs, jnp.float32)
+    ge = jax.jit(core.gaussian_elimination)
+    us = _time(ge, aj, bj)
+    resid = float(jnp.max(jnp.abs(
+        jnp.einsum("bij,bj->bi", aj, ge(aj, bj)) - bj)))
+    row("solve_ge", us, f"{b / us * 1e6:.0f}solves/s;max_resid={resid:.2e}")
+
+    # solve_svd_fallback: degree-9 raw-monomial Gram on [0, 8] — κ far past
+    # the f32 cap, GE alone degrades; the guard must swap in the SVD and
+    # stay finite
+    n = 1 << 10 if SMOKE else 1 << 14
+    x9 = jnp.asarray(np.linspace(0.0, 8.0, n), jnp.float32)
+    y9 = jnp.asarray(np.polyval(rng.normal(0, 1, 10)[::-1],
+                                np.linspace(0.0, 8.0, n)), jnp.float32)
+    m9 = core.gram_moments(x9, y9, 9)
+    fb = jax.jit(lambda a, b: core.solve_with_fallback(a, b, method="gauss",
+                                                       fallback="svd"))
+    us = _time(fb, m9.gram, m9.vty, iters=10)
+    coeffs, cond, used = fb(m9.gram, m9.vty)
+    ok = bool(jnp.all(jnp.isfinite(coeffs)))
+    row("solve_svd_fallback", us,
+        f"fallback_used={bool(used)};finite_coeffs={ok};"
+        f"cond_past_cap={float(cond) > core.cond_cap_for(jnp.float32)}")
+    if SMOKE:
+        assert bool(used) and ok, "SVD rescue failed to produce finite output"
+
+    # irls: Tukey robust fit under 20% gross contamination
+    n = 1 << 10 if SMOKE else 1 << 13
+    xr = rng.uniform(-2, 2, n)
+    true = np.array([1.0, -2.0, 0.5, 0.8])
+    yr = np.polyval(true[::-1], xr) + rng.normal(0, 0.05, n)
+    out = rng.choice(n, n // 5, replace=False)
+    yr[out] += rng.choice([-1.0, 1.0], out.size) * 50.0
+    xrj = jnp.asarray(xr, jnp.float32)
+    yrj = jnp.asarray(yr, jnp.float32)
+    irls = jax.jit(lambda x, y: core.robust_polyfit(x, y, 3,
+                                                    loss="tukey").poly.coeffs)
+    us = _time(irls, xrj, yrj, iters=5, warmup=1)
+    rfit = core.robust_polyfit(xrj, yrj, 3, loss="tukey")
+    rel = float(np.linalg.norm(np.asarray(rfit.poly.monomial_coeffs(),
+                                          np.float64) - true)
+                / np.linalg.norm(true))
+    row("irls", us, f"rel_err_20pct_outliers={rel:.2e};"
+        f"iters={int(rfit.iterations)};converged={bool(rfit.converged)}")
+    if SMOKE:
+        assert rel < 0.05, f"IRLS accuracy regression: {rel:.3f}"
+
+    # lspia: the Gram-free iteration on its natural (Chebyshev) basis
+    n = 1 << 10 if SMOKE else 1 << 14
+    xl = jnp.asarray(rng.uniform(-3, 3, n), jnp.float32)
+    yl = jnp.asarray(np.sin(np.asarray(xl)) + 0.02 * rng.normal(0, 1, n),
+                     jnp.float32)
+    lsp = jax.jit(lambda x, y: core.lspia_fit(x, y, 5,
+                                              basis="chebyshev").poly.coeffs)
+    us = _time(lsp, xl, yl, iters=5, warmup=1)
+    lf = core.lspia_fit(xl, yl, 5, basis="chebyshev")
+    ref = core.polyfit(xl, yl, 5, basis="chebyshev", normalize=True)
+    gap = float(jnp.max(jnp.abs(lf.poly.coeffs - ref.coeffs)))
+    row("lspia", us, f"iters={int(lf.iterations)};"
+        f"converged={bool(lf.converged)};max_coeff_gap_vs_lse={gap:.2e}")
+    if SMOKE:
+        assert bool(lf.converged), "LSPIA failed to converge on smoke shapes"
+
+
 def bench_streaming(quick: bool):
     """Streaming O(1)-state fitter: points/s through update() + solve cost.
     derived = Mpts/s and the (constant) state size."""
@@ -274,8 +353,8 @@ def bench_e2e_train(quick: bool):
 
 
 BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
-           bench_fused_report, bench_streaming, bench_batched_fits,
-           bench_serve_fit, bench_e2e_train]
+           bench_fused_report, bench_solver_stack, bench_streaming,
+           bench_batched_fits, bench_serve_fit, bench_e2e_train]
 
 
 def _git_rev() -> str:

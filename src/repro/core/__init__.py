@@ -6,12 +6,17 @@ from repro.core.moments import (Moments, gram_moments, gram_moments_blocked,
                                 power_sums, hankel_from_power_sums,
                                 moment_vector)
 from repro.core.solve import (gaussian_elimination, cholesky_solve,
-                              qr_solve_vandermonde)
+                              qr_solve_vandermonde, qr_solve_gram,
+                              svd_solve, condition_estimate, select_solver,
+                              solve_with_fallback, cond_cap_for, SOLVERS)
 from repro.core.solve import solve as solve_linear
 from repro.core.fit import (Polynomial, FitReport, StreamedFitReport,
+                            FitDiagnostics,
                             polyfit, polyfit_qr, fit_from_moments,
                             fit_report, fit_report_streamed,
                             sse_from_moments, report_from_moments)
+from repro.core.robust import (robust_polyfit, RobustFit, HUBER, TUKEY)
+from repro.core.lspia import (lspia_fit, LSPIAFit)
 from repro.core.distributed import make_distributed_fit, local_moments, psum_moments
 from repro.core.streaming import StreamState, update, current_fit, current_sse
 from repro.core.scaling_laws import PowerLaw, fit_power_law
@@ -21,10 +26,15 @@ __all__ = [
     "Moments", "gram_moments", "gram_moments_blocked", "power_sums",
     "hankel_from_power_sums", "moment_vector",
     "gaussian_elimination", "cholesky_solve", "qr_solve_vandermonde",
+    "qr_solve_gram", "svd_solve", "condition_estimate", "select_solver",
+    "solve_with_fallback", "cond_cap_for", "SOLVERS",
     "solve_linear",
-    "Polynomial", "FitReport", "StreamedFitReport", "polyfit", "polyfit_qr",
+    "Polynomial", "FitReport", "StreamedFitReport", "FitDiagnostics",
+    "polyfit", "polyfit_qr",
     "fit_from_moments", "fit_report", "fit_report_streamed",
     "sse_from_moments", "report_from_moments",
+    "robust_polyfit", "RobustFit", "HUBER", "TUKEY",
+    "lspia_fit", "LSPIAFit",
     "make_distributed_fit", "local_moments", "psum_moments",
     "StreamState", "update", "current_fit", "current_sse",
     "PowerLaw", "fit_power_law",

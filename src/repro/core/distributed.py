@@ -57,7 +57,9 @@ def psum_moments(m: moments_lib.Moments, axis_names) -> moments_lib.Moments:
 
 def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
                          data_axes: tuple[str, ...] = ("data",),
-                         method: str = "gauss",
+                         method: str | None = None,
+                         solver: str = "auto",
+                         fallback: str | None = "svd",
                          basis: str = basis_lib.MONOMIAL,
                          normalize: bool = False,
                          accum_dtype=jnp.float32,
@@ -73,16 +75,29 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
 
     ``engine`` selects each shard's local accumulation path through
     ``repro.engine.plan_fit`` (validated up front, before any tracing);
-    ``use_kernel`` is a deprecated alias.
+    ``use_kernel`` is a deprecated alias.  ``solver``/``fallback`` pick the
+    replicated normal-equation solve the same way ``core.polyfit`` does
+    (condition-aware GE → Cholesky → QR → SVD; the psum'd Gram feeds the
+    runtime κ estimate, so the fallback decision is identical on every
+    device — no divergence).  ``method=`` is the legacy spelling of
+    ``solver=``.
     """
     from repro import engine as engine_lib
     engine = engine_lib.resolve_engine(engine, use_kernel)
+    if method is not None:
+        solver = method
     # eager validation + a describable plan for logs: per-shard n is not
     # known yet, so plan with a placeholder length (path choice is re-made
-    # per shard inside local_moments with the real shard shape)
-    engine_lib.plan_fit((1,), degree, basis=basis, engine=engine,
-                        accum_dtype=accum_dtype, normalize=normalize,
-                        mesh=mesh, data_axes=data_axes)
+    # per shard inside local_moments with the real shard shape).  The
+    # numerics policy (solver rung, auto-normalization escalation) IS
+    # resolved here, once, from the static facts.
+    plan = engine_lib.plan_fit((1,), degree, basis=basis, engine=engine,
+                               dtype=accum_dtype or jnp.float32,
+                               accum_dtype=accum_dtype, normalize=normalize,
+                               solver=solver, fallback=fallback,
+                               mesh=mesh, data_axes=data_axes)
+    pol = plan.numerics
+    normalize = pol.normalize
     spec_in = P(data_axes)
     spec_rep = P()
 
@@ -106,8 +121,11 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
         m = local_moments(xt, y, degree, basis=basis, weights=w,
                           accum_dtype=accum_dtype, engine=engine)
         m = psum_moments(m, data_axes)
-        poly = fit_lib.fit_from_moments(m, method=method, domain=dom,
-                                        basis=basis)
+        poly = fit_lib.fit_from_moments(m, solver=pol.solver,
+                                        fallback=pol.fallback,
+                                        cond_cap=pol.cond_cap, domain=dom,
+                                        basis=basis,
+                                        normalized=pol.normalize)
         return poly, m
 
     def fit(x: jax.Array, y: jax.Array, weights: jax.Array | None = None):

@@ -22,6 +22,25 @@ from repro.core import solve as solve_lib
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
+class FitDiagnostics:
+    """Numerical health of one normal-equation solve.
+
+    ``condition`` is the estimated κ₂ of the Gram matrix (from the O(m²)
+    moment state; +inf when singular) and ``fallback_used`` whether the
+    condition-triggered rescue solver produced the returned coefficients —
+    the signal plain Gaussian elimination never gave when it silently
+    returned inf/NaN on degenerate inputs."""
+
+    condition: jax.Array       # (...,) estimated κ₂(VᵀV)
+    fallback_used: jax.Array   # (...,) bool — rescue solver engaged
+    solver: str = dataclasses.field(metadata=dict(static=True),
+                                    default="gauss")
+    fallback: str = dataclasses.field(metadata=dict(static=True),
+                                      default="none")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
 class Polynomial:
     """A fitted polynomial: coefficients + the basis/domain they live in."""
 
@@ -29,6 +48,7 @@ class Polynomial:
     domain_shift: jax.Array                # scalar (0 for paper-faithful)
     domain_scale: jax.Array                # scalar (1 for paper-faithful)
     basis: str = dataclasses.field(metadata=dict(static=True), default=basis_lib.MONOMIAL)
+    diagnostics: FitDiagnostics | None = None   # solve health (None: not tracked)
 
     @property
     def degree(self) -> int:
@@ -47,47 +67,106 @@ class Polynomial:
             self.coeffs, dom, self.degree)
 
 
-def fit_from_moments(m: moments_lib.Moments, *, method: str = "gauss",
+def fit_from_moments(m: moments_lib.Moments, *, method: str | None = None,
+                     solver: str = "auto",
+                     fallback: str | None = "svd",
+                     cond_cap: float | None = None,
                      domain: basis_lib.Domain | None = None,
-                     basis: str = basis_lib.MONOMIAL) -> Polynomial:
+                     basis: str = basis_lib.MONOMIAL,
+                     normalized: bool = False) -> Polynomial:
     """Solve the normal equations held in ``m``. The tiny-solve half of the
-    paper's algorithm; separated so distributed/streaming paths reuse it."""
-    coeffs = solve_lib.solve(m.gram, m.vty, method=method)
+    paper's algorithm; separated so distributed/streaming paths reuse it.
+
+    ``solver="auto"`` picks the GE → Cholesky → QR → SVD rung statically
+    from degree/dtype/basis (``core.solve.select_solver``; ``normalized``
+    tells the heuristic the moments were accumulated on a [-1,1] domain);
+    any explicit name forces that primary.  Unless ``fallback=None``, the
+    runtime condition estimate swaps in the rank-revealing rescue past
+    ``cond_cap`` (per-dtype default) or on non-finite output, and the
+    returned ``Polynomial.diagnostics`` records κ(Gram) + whether the
+    rescue fired.  ``method=`` is the legacy spelling of ``solver=``.
+    """
+    if method is not None:
+        solver = method
+    if solver == "lspia":
+        raise ValueError(
+            "solver='lspia' needs the raw data (matrix-free V/Vᵀ sweeps) "
+            "and cannot run from moments; use core.polyfit(..., "
+            "solver='lspia') or core.lspia.lspia_fit")
+    if solver == "auto":
+        solver = solve_lib.select_solver(m.degree, m.gram.dtype, basis=basis,
+                                         normalized=normalized)
+    coeffs, cond, used = solve_lib.solve_with_fallback(
+        m.gram, m.vty, method=solver, fallback=fallback, cond_cap=cond_cap)
+    diag = FitDiagnostics(condition=cond, fallback_used=used, solver=solver,
+                          fallback=fallback or "none")
     dom = domain or basis_lib.Domain.identity(coeffs.dtype)
     return Polynomial(coeffs=coeffs, domain_shift=dom.shift,
-                      domain_scale=dom.scale, basis=basis)
+                      domain_scale=dom.scale, basis=basis, diagnostics=diag)
 
 
 @partial(jax.jit, static_argnames=("degree", "method", "basis", "normalize",
-                                   "accum_dtype", "engine", "use_kernel"))
+                                   "accum_dtype", "engine", "use_kernel",
+                                   "solver", "fallback", "cond_cap"))
 def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
             weights: jax.Array | None = None,
-            method: str = "gauss", basis: str = basis_lib.MONOMIAL,
+            method: str | None = None, basis: str = basis_lib.MONOMIAL,
             normalize: bool = False, accum_dtype=None,
             engine: str = "auto",
+            solver: str = "auto",
+            fallback: str | None = "svd",
+            cond_cap: float | None = None,
             use_kernel: bool | None = None) -> Polynomial:
     """Paper-faithful matricized LSE fit (defaults) with hardening knobs.
 
-    normalize=False, basis=monomial, method=gauss  ==  the paper's algorithm.
+    normalize=False, basis=monomial, solver="gauss", fallback=None  ==  the
+    paper's algorithm, silent failures included.  The defaults are
+    condition-aware instead (EXPERIMENTS.md §Solver selection): ``plan_fit``
+    resolves solver="auto" into the GE → Cholesky → QR → SVD rung that
+    matches degree/dtype/basis, flips domain normalization on for
+    raw-monomial fits at degrees where the un-normalized Gram is beyond
+    every solver (the returned Polynomial carries its Domain, so evaluation
+    is unchanged — but ``.coeffs`` are then normalized-basis coefficients;
+    use ``.monomial_coeffs()`` for raw ones), and the solve itself swaps in
+    the rank-revealing ``fallback`` when the runtime condition estimate
+    demands it.  ``Polynomial.diagnostics`` records κ(Gram) and whether the
+    fallback fired.  ``solver="lspia"`` skips the normal equations entirely
+    and delegates to ``core.lspia.lspia_fit`` (matrix-free, iterative).
+
     Batched: x, y may carry leading batch axes (..., n).
     weights: optional per-point weights (..., n) — weighted least squares.
     engine: how moments accumulate — "auto" lets ``repro.engine.plan_fit``
     pick (packed Pallas kernel for batched monomial inputs on TPU, reference
     jnp elsewhere); "reference"/"kernel"/"kernel_packed"/"kernel_plain"
     force a path.  ``use_kernel`` is a deprecated alias for
-    engine="kernel"/"reference".
+    engine="kernel"/"reference"; ``method=`` the legacy spelling of
+    ``solver=``.
     """
     from repro import engine as engine_lib
+    if method is not None:
+        solver = method
+    if solver == "lspia":
+        # matrix-free delegation; always on the normalized domain (LSPIA's
+        # first-order convergence rate needs the bounded-domain κ — call
+        # core.lspia.lspia_fit directly for raw-domain control)
+        from repro.core import lspia as lspia_lib
+        return lspia_lib.lspia_fit(
+            x, y, degree, basis=basis, normalize=True,
+            weights=weights, engine=engine).poly
     plan = engine_lib.plan_fit(
         x.shape, degree, basis=basis, dtype=x.dtype,
         weighted=weights is not None,
         engine=engine_lib.resolve_engine(engine, use_kernel),
-        accum_dtype=accum_dtype, normalize=normalize)
-    dom = (basis_lib.Domain.from_data(x) if normalize
+        accum_dtype=accum_dtype, normalize=normalize,
+        solver=solver, fallback=fallback, cond_cap=cond_cap)
+    pol = plan.numerics
+    dom = (basis_lib.Domain.from_data(x) if pol.normalize
            else basis_lib.Domain.identity(x.dtype))
     xt = dom.apply(x)
     m = engine_lib.compute_moments(plan, xt, y, weights)
-    return fit_from_moments(m, method=method, domain=dom, basis=basis)
+    return fit_from_moments(m, solver=pol.solver, fallback=pol.fallback,
+                            cond_cap=pol.cond_cap, domain=dom, basis=basis,
+                            normalized=pol.normalize)
 
 
 @partial(jax.jit, static_argnames=("degree",))

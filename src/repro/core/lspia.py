@@ -1,0 +1,210 @@
+"""LSPIA: least-squares progressive-iterative approximation, matrix-free.
+
+The paper's matricization — and this repo's entire fast path — still ends
+in an explicit (m+1)×(m+1) normal-equation solve, and the Gram matrix it
+solves squares the Vandermonde's condition number the moment it is formed.
+LSPIA (Deng & Lin 2014; asynchronous variant Wu & Liu, arXiv:2211.06556)
+sidesteps the Gram entirely: iterate
+
+    c ← c + μ · Vᵀ W (y − V c)
+
+where both operators are applied *matrix-free* — ``V c`` is Horner/Clenshaw
+evaluation and ``Vᵀ r`` an iterated-multiply reduction — so the working
+state is O(m) coefficients plus one O(n) residual stream, never an O(m²)
+matrix.  Fixed point: the weighted LSE solution (the update is Richardson
+iteration on the normal equations; it converges for 0 < μ < 2/λmax(VᵀWV)).
+
+The step size is set from a matrix-free power-iteration estimate of λmax
+(a handful of V/Vᵀ passes).  Convergence rate degrades with κ(VᵀV) like
+any first-order method, so the practical regime is normalized domains and
+the Chebyshev basis — where κ is small and the iteration converges in tens
+of steps — and colossal/streamed datasets where forming the Gram in low
+precision loses more than the iteration does (measured crossovers:
+EXPERIMENTS.md §Solver selection).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+from repro.core import fit as fit_lib
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LSPIAFit:
+    """An LSPIA fit: polynomial + the iteration's convergence record."""
+
+    poly: fit_lib.Polynomial
+    iterations: jax.Array      # ()     iterations actually run
+    converged: jax.Array       # (...,) ‖∇‖ fell below tol·‖Vᵀwy‖
+    grad_norm: jax.Array       # (...,) final ‖Vᵀ W (y - Vc)‖₂
+    step: jax.Array            # (...,) μ used (1/λ̂max)
+
+
+def vt_apply(x: jax.Array, r: jax.Array, degree: int, *,
+             basis: str = basis_lib.MONOMIAL) -> jax.Array:
+    """Matrix-free Vᵀ r over the last axis: out[k] = Σ_i basis_k(x_i)·r_i.
+
+    Iterated multiply for monomials (the paper's CUDA trick), the
+    three-term recurrence for Chebyshev — O(n·m) work, O(n) live memory,
+    no (n, m+1) Vandermonde materialized."""
+    if basis not in (basis_lib.MONOMIAL, basis_lib.CHEBYSHEV):
+        raise ValueError(f"unknown basis {basis!r}")
+    outs = [jnp.sum(r, axis=-1)]
+    if degree >= 1:
+        prev, cur = r, x * r
+        outs.append(jnp.sum(cur, axis=-1))
+        for _ in range(2, degree + 1):
+            if basis == basis_lib.MONOMIAL:
+                prev, cur = cur, x * cur
+            else:
+                prev, cur = cur, 2.0 * x * cur - prev
+            outs.append(jnp.sum(cur, axis=-1))
+    return jnp.stack(outs, axis=-1)
+
+
+def _normal_op(x: jax.Array, w: jax.Array, c: jax.Array, degree: int,
+               basis: str) -> jax.Array:
+    """Matrix-free (VᵀWV)·c — evaluate then reduce, never the Gram."""
+    f = basis_lib.evaluate(c, x, basis=basis)
+    return vt_apply(x, w * f, degree, basis=basis)
+
+
+def _power_iter(op, shape, dtype, iters: int) -> jax.Array:
+    """Largest eigenvalue of the SPD operator ``op`` by power iteration."""
+    m1 = shape[-1]
+    v0 = jnp.broadcast_to(jnp.ones(m1, dtype) / jnp.sqrt(jnp.asarray(
+        m1, dtype)), shape)
+
+    def body(_, carry):
+        v, _ = carry
+        av = op(v)
+        lam = jnp.linalg.norm(av, axis=-1)
+        safe = jnp.maximum(lam[..., None], jnp.finfo(dtype).tiny)
+        return av / safe, lam
+
+    _, lam = jax.lax.fori_loop(0, iters, body,
+                               (v0, jnp.ones(shape[:-1], dtype)))
+    return lam
+
+
+def _lambda_max(x: jax.Array, w: jax.Array, degree: int, basis: str,
+                iters: int) -> jax.Array:
+    """Power-iteration λmax(VᵀWV) from V/Vᵀ passes only (batched)."""
+    return _power_iter(lambda v: _normal_op(x, w, v, degree, basis),
+                       x.shape[:-1] + (degree + 1,), x.dtype, iters)
+
+
+def _condition_from_rate(rho: jax.Array, lam_mu: jax.Array) -> jax.Array:
+    """Matrix-free κ̂(VᵀWV) from the iteration's own contraction rate.
+
+    Richardson with step μ contracts the gradient by ρ = 1 − μ·λmin per
+    sweep asymptotically, so κ = λmax/λmin = λmax·μ/(1 − ρ) — observed for
+    free from the last two gradient norms, with no extra operator passes
+    (a *shifted* power iteration for λmin is useless here: its top-two
+    eigenvalue gap is λ2−λmin ≪ λmax, so it would need thousands of
+    sweeps).  A LOWER bound when the run stopped before its asymptotic
+    regime — early sweeps contract at mid-spectrum rates — so read it as
+    "at least this ill-conditioned".  ρ ≥ 1 (no contraction: singular or
+    mis-stepped) reports +inf, matching
+    ``core.solve.condition_estimate``'s convention."""
+    inf = jnp.asarray(jnp.inf, rho.dtype)
+    denom = 1.0 - rho
+    return jnp.where(denom > 0,
+                     jnp.maximum(lam_mu / jnp.where(denom > 0, denom, 1.0),
+                                 1.0),
+                     inf)
+
+
+@partial(jax.jit, static_argnames=("degree", "basis", "normalize", "tol",
+                                   "max_iter", "power_iters", "step",
+                                   "engine"))
+def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
+              weights: jax.Array | None = None,
+              basis: str = basis_lib.MONOMIAL,
+              normalize: bool = True,
+              tol: float = 1e-8,
+              max_iter: int = 5000,
+              power_iters: int = 12,
+              step: float | None = None,
+              init: jax.Array | None = None,
+              engine: str = "auto") -> LSPIAFit:
+    """Gram-free iterative LSE fit with tolerance/max-iter control.
+
+    Converges to the (weighted) least-squares polynomial without ever
+    forming VᵀV — the path for degrees/precisions where the explicit
+    normal equations are hopeless, and for data too large to want an
+    O(m²)-state accumulation pass per solve.  ``normalize=True`` (default:
+    unlike ``polyfit``, LSPIA *needs* a bounded domain for its first-order
+    convergence rate) maps the sample range to [-1, 1].
+
+    Stops when ‖Vᵀ W (y − Vc)‖ ≤ tol·‖Vᵀ W y‖ (relative normal-equation
+    residual — exactly the LSE optimality condition) or at ``max_iter``.
+    ``step=None`` estimates μ = 1/λmax by matrix-free power iteration;
+    pass an explicit μ to skip those passes.  Batched over leading axes;
+    the loop runs until every series converges.
+    """
+    from repro import engine as engine_lib
+    plan = engine_lib.plan_fit(
+        x.shape, degree, basis=basis, dtype=x.dtype,
+        weighted=weights is not None, engine=engine, normalize=normalize,
+        workload="lspia")
+    dom = (basis_lib.Domain.from_data(x) if plan.numerics.normalize
+           else basis_lib.Domain.identity(x.dtype))
+    xt = dom.apply(x)
+    w = jnp.ones_like(x) if weights is None else weights
+
+    lam = _lambda_max(xt, w, degree, basis, power_iters)
+    if step is None:
+        mu = 1.0 / jnp.maximum(lam, jnp.finfo(x.dtype).tiny)
+    else:
+        mu = jnp.full(x.shape[:-1], step, x.dtype)
+
+    gref = jnp.linalg.norm(vt_apply(xt, w * y, degree, basis=basis), axis=-1)
+    gref = jnp.maximum(gref, jnp.finfo(x.dtype).tiny)
+    # the gradient is recomputed from O(n) sums each step, so its relative
+    # floor is ~eps·√n of gref — clamp tol there or f32 fits spin to
+    # max_iter chasing an unreachable residual
+    tol = max(float(tol), 25.0 * float(jnp.finfo(x.dtype).eps))
+    c0 = (jnp.zeros(x.shape[:-1] + (degree + 1,), x.dtype)
+          if init is None else init)
+
+    def cond_fn(carry):
+        _, gnorm, _, it = carry
+        return (it < max_iter) & jnp.any(gnorm > tol * gref)
+
+    def body_fn(carry):
+        c, gprev, _, it = carry
+        f = basis_lib.evaluate(c, xt, basis=basis)
+        g = vt_apply(xt, w * (y - f), degree, basis=basis)
+        c = c + mu[..., None] * g
+        return c, jnp.linalg.norm(g, axis=-1), gprev, it + 1
+
+    init_carry = (c0, jnp.full(x.shape[:-1], jnp.inf, x.dtype),
+                  jnp.full(x.shape[:-1], jnp.inf, x.dtype),
+                  jnp.zeros((), jnp.int32))
+    c, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init_carry)
+    converged = gnorm <= tol * gref
+    # observed per-sweep contraction (last two gradient norms) → κ̂; a
+    # single-sweep run has no ratio yet and reports the κ ≈ 1 it implies
+    rho = jnp.where(jnp.isfinite(gprev) & (gprev > 0),
+                    gnorm / jnp.where(gprev > 0, gprev, 1.0), 0.0)
+    cond = _condition_from_rate(rho, lam * mu)
+    # diagnostics keep the no-silent-failure contract of the explicit
+    # solvers: condition is the matrix-free κ̂ estimate, and fallback_used
+    # doubles as the "iteration did NOT meet tol within max_iter" flag —
+    # LSPIA has no rescue solver, so an unconverged result is exactly the
+    # state a caller must not consume unexamined
+    diag = fit_lib.FitDiagnostics(condition=cond,
+                                  fallback_used=~converged,
+                                  solver="lspia", fallback="none")
+    poly = fit_lib.Polynomial(coeffs=c, domain_shift=dom.shift,
+                              domain_scale=dom.scale, basis=basis,
+                              diagnostics=diag)
+    return LSPIAFit(poly=poly, iterations=it, converged=converged,
+                    grad_norm=gnorm, step=mu)

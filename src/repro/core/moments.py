@@ -55,6 +55,24 @@ class Moments:
     def degree(self) -> int:
         return self.gram.shape[-1] - 1
 
+    def condition(self) -> jax.Array:
+        """Estimated κ₂ of the normal-equation matrix, from the O(m²) state.
+
+        This is the quantity the condition-aware solver stack keys on
+        (``core.solve.solve_with_fallback``): it costs O(m³) on the tiny
+        sufficient statistics — nothing next to the O(n·m²) accumulation —
+        so streaming/serving paths can re-check it every solve.  +inf means
+        singular (fewer distinct x than coefficients, zero-weight state)."""
+        from repro.core import solve as solve_lib
+        return solve_lib.condition_estimate(self.gram)
+
+    def regularized(self, ridge: float) -> "Moments":
+        """Moments with λI added to the Gram (Tikhonov / early-stream
+        stabilizer).  Shared by streaming and the fit server's pooled
+        solve, which must tolerate all-zero idle slots."""
+        eye = jnp.eye(self.degree + 1, dtype=self.gram.dtype)
+        return dataclasses.replace(self, gram=self.gram + ridge * eye)
+
     @staticmethod
     def zeros(degree: int, batch: tuple[int, ...] = (), dtype=jnp.float32) -> "Moments":
         m1 = degree + 1

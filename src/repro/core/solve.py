@@ -4,10 +4,33 @@
 solved for using the method of Gaussian Elimination"), implemented with partial
 pivoting in pure ``jax.lax`` control flow so it jits, vmaps and shards.
 
-``qr_solve`` is the paper's *comparison baseline* (MATLAB polyfit's method:
-QR-factorize the Vandermonde, never form the Gram matrix).
+``qr_solve_vandermonde`` is the paper's *comparison baseline* (MATLAB
+polyfit's method: QR-factorize the Vandermonde, never form the Gram matrix).
 
-``cholesky_solve`` is a beyond-paper option exploiting SPD-ness of VᵀV.
+Beyond the paper, this module holds the condition-aware solver stack
+(Skala, arXiv:1802.07591: the normal equations square the Vandermonde's
+condition number, so plain elimination silently degrades or NaNs at higher
+degrees / wider domains):
+
+* ``cholesky_solve``       SPD fast path (VᵀV is SPD when full rank);
+* ``qr_solve_gram``        Householder QR of the Gram matrix — no SPD
+                           assumption, stable pivot-free triangular solve;
+* ``svd_solve``            rank-revealing minimum-norm solve: symmetric
+                           Jacobi-equilibrated SVD pseudo-inverse with a
+                           relative singular-value cutoff.  Finite output
+                           even on exactly singular systems;
+* ``condition_estimate``   2-norm condition number of the Gram from its
+                           eigenvalues — O(m³) on the O(m²) moment state,
+                           negligible next to the O(n·m²) accumulation;
+* ``select_solver``        static GE → Cholesky → QR → SVD choice from
+                           degree/dtype/basis (the ``plan_fit`` hook);
+* ``solve_with_fallback``  runtime guard: run the planned solver, and where
+                           the condition estimate exceeds the dtype's cap —
+                           or the output is non-finite — swap in the SVD
+                           result (``lax.cond``: the fallback branch costs
+                           nothing unless taken; under vmap it lowers to
+                           select, still O(m³) on a tiny matrix).
+
 All solvers are batched over leading axes via vmap-compatible code.
 """
 from __future__ import annotations
@@ -16,6 +39,28 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+# the explicit-solve ladder, in escalation order (LSPIA — the matrix-free
+# iterative path that never forms the Gram — lives in repro.core.lspia and
+# is selectable one level up, in repro.engine.plan_fit / core.polyfit)
+SOLVERS = ("gauss", "cholesky", "qr", "svd")
+
+# runtime condition caps: past these the planned solver's normwise error
+# bound (~eps·κ) has lost every digit and the SVD rescue replaces its
+# result.  f32: 1/eps ≈ 8e6 rounded up — note this means wide-raw-domain
+# f32 fits (the paper's own [0, 40] degree-3 tables sit at κ ≈ 2.6e9,
+# already past f32 precision) report fallback_used=True and return the
+# equilibrated-SVD result; it reproduces the paper's tables to the same
+# digits GE does, but byte-identical paper-literal output needs
+# solver="gauss", fallback=None.  The cap stays below the f32 eigvalsh
+# noise floor of exactly-singular matrices (≈1e8: wmin rounds to ~eps·wmax)
+# so singularity is still caught by κ, not just by non-finite output.
+COND_CAP = {jnp.dtype(jnp.float32): 3e7, jnp.dtype(jnp.float64): 1e11}
+
+
+def cond_cap_for(dtype) -> float:
+    """Condition cap above which ``solve_with_fallback`` engages the SVD."""
+    return COND_CAP.get(jnp.dtype(dtype), 3e7)
 
 
 @jax.jit
@@ -73,9 +118,140 @@ def qr_solve_vandermonde(v: jax.Array, y: jax.Array) -> jax.Array:
         r, jnp.einsum("...nk,...n->...k", q, y)[..., None], lower=False)[..., 0]
 
 
+@jax.jit
+def qr_solve_gram(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Householder-QR solve of the (m+1)×(m+1) Gram system.
+
+    More robust than elimination for moderately ill-conditioned A (no pivot
+    growth, orthogonal reduction); still limited by cond(A) = cond(V)²."""
+    q, r = jnp.linalg.qr(a)
+    qtb = jnp.einsum("...ji,...j->...i", q, b)
+    return jax.scipy.linalg.solve_triangular(
+        r, qtb[..., None], lower=False)[..., 0]
+
+
+@jax.jit
+def svd_solve(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Rank-revealing minimum-norm solve: equilibrate, SVD, truncate, invert.
+
+    Symmetric Jacobi equilibration (A' = DAD, D = diag(A)^-½) first: for
+    Gram matrices it is exactly "scale every basis column to unit norm",
+    which soaks up the domain-width part of the conditioning (the dominant
+    term for raw monomials — see EXPERIMENTS.md §Solver selection) before
+    the SVD sees the matrix.  Singular values below ``eps·(m+1)·σmax`` are
+    truncated, so exactly-singular systems (constant x, zero-weight slots)
+    return the finite minimum-norm solution instead of inf/NaN.
+    """
+    d = jnp.diagonal(a, axis1=-2, axis2=-1)
+    d = jnp.where(d > 0, jax.lax.rsqrt(jnp.where(d > 0, d, 1.0)), 1.0)
+    ae = a * d[..., :, None] * d[..., None, :]
+    be = b * d
+    u, s, vt = jnp.linalg.svd(ae)
+    cutoff = (jnp.finfo(a.dtype).eps * a.shape[-1]
+              * jnp.max(s, axis=-1, keepdims=True))
+    keep = s > cutoff
+    s_inv = jnp.where(keep, 1.0 / jnp.where(keep, s, 1.0), 0.0)
+    utb = jnp.einsum("...ji,...j->...i", u, be)
+    xe = jnp.einsum("...ji,...j->...i", vt, s_inv * utb)
+    return xe * d
+
+
+@jax.jit
+def condition_estimate(a: jax.Array) -> jax.Array:
+    """2-norm condition number κ(A) of the symmetric Gram, batched.
+
+    Eigenvalue ratio max|λ|/min|λ| via ``eigvalsh`` — O(m³) on the O(m²)
+    sufficient-statistic state, so streaming/serving can afford it per
+    solve.  Returns +inf for singular (or all-zero) matrices; near-singular
+    matrices whose smallest eigenvalue rounds negative report the honest
+    huge-but-finite ratio of magnitudes."""
+    w = jnp.abs(jnp.linalg.eigvalsh(a))
+    wmax = jnp.max(w, axis=-1)
+    wmin = jnp.min(w, axis=-1)
+    inf = jnp.asarray(jnp.inf, wmax.dtype)
+    return jnp.where(wmin > 0, wmax / jnp.where(wmin > 0, wmin, 1.0), inf)
+
+
+def select_solver(degree: int, dtype, *, basis: str = "monomial",
+                  normalized: bool = False) -> str:
+    """Static GE → Cholesky → QR → SVD choice from degree/dtype/basis.
+
+    The static pick covers what is knowable before seeing data: the Gram's
+    condition grows roughly geometrically with degree, slowly for bases
+    confined to [-1, 1] (normalized domain or Chebyshev), explosively for
+    raw monomials on arbitrary domains (measured crossovers in
+    EXPERIMENTS.md §Solver selection).  The runtime condition estimate in
+    ``solve_with_fallback`` then catches what only the data can reveal
+    (wide un-normalized domains at low degree, degenerate inputs).
+    """
+    f64 = jnp.finfo(jnp.dtype(dtype)).eps < 1e-9
+    well = normalized or basis == "chebyshev"
+    if well:
+        # [-1,1]-confined bases: cond(Gram) ≈ 10^(0.55·deg) monomial-normalized,
+        # far less for Chebyshev — elimination is fine deep into the degrees.
+        if degree <= 5:
+            return "gauss"
+        if degree <= 8:
+            return "cholesky"      # SPD fast path, still comfortably ranked
+        return "qr" if f64 else "svd"
+    # raw monomial on an arbitrary domain: cond(Gram) ≈ (width/2)^(2·deg) ·
+    # normalized-cond — already ~2.6e9 at degree 3 on the paper's [0, 40]
+    # data, so on wide domains the runtime guard may still swap in the SVD
+    # over the GE picked here (see COND_CAP).
+    if degree <= 3:
+        return "gauss"             # the paper's regime; fallback guards it
+    if degree <= 5:
+        return "cholesky" if f64 else "qr"
+    return "qr" if f64 else "svd"
+
+
 def solve(a: jax.Array, b: jax.Array, method: str = "gauss") -> jax.Array:
     if method == "gauss":
         return gaussian_elimination(a, b)
     if method == "cholesky":
         return cholesky_solve(a, b)
-    raise ValueError(f"unknown solve method {method!r}")
+    if method == "qr":
+        return qr_solve_gram(a, b)
+    if method == "svd":
+        return svd_solve(a, b)
+    raise ValueError(f"unknown solve method {method!r}; "
+                     f"expected one of {SOLVERS}")
+
+
+@partial(jax.jit, static_argnames=("method", "fallback", "cond_cap"))
+def solve_with_fallback(a: jax.Array, b: jax.Array, *,
+                        method: str = "gauss",
+                        fallback: str | None = "svd",
+                        cond_cap: float | None = None):
+    """Condition-guarded solve: planned solver, SVD rescue when it degrades.
+
+    Returns ``(x, cond, fallback_used)``.  The fallback engages when the
+    estimated κ(A) exceeds ``cond_cap`` (default per-dtype ``COND_CAP``) or
+    the primary produced non-finite output — the silent-NaN regime of plain
+    elimination on singular Grams (constant x, zero-range domains).  With
+    ``fallback=None`` the guard is off (pure planned solver; cond is still
+    reported, fallback_used is always False).
+
+    Unbatched: ``lax.cond`` skips the fallback entirely on the hot path.
+    Batched (leading axes on a/b): vmapped, where cond lowers to select —
+    both branches run, still O(m³) on tiny matrices.
+    """
+    if a.ndim > 2:
+        part = partial(solve_with_fallback, method=method, fallback=fallback,
+                       cond_cap=cond_cap)
+        return jax.vmap(part)(a, b)
+    cap = float(cond_cap) if cond_cap is not None else cond_cap_for(a.dtype)
+    cond = condition_estimate(a)
+    x = solve(a, b, method)
+    if fallback is None:
+        return x, cond, jnp.zeros((), bool)
+    bad = (~jnp.all(jnp.isfinite(x))) | ~(cond <= cap)   # NaN cond counts
+    if fallback == method:
+        # nothing different to re-solve with, but the condition breach must
+        # still be reported — flagging is the guard's contract, the second
+        # solve just its remedy
+        return x, cond, bad
+    x = jax.lax.cond(bad,
+                     lambda ab: solve(ab[0], ab[1], fallback),
+                     lambda ab: x, (a, b))
+    return x, cond, bad

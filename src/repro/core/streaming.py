@@ -87,16 +87,23 @@ def _decay_weights(state: StreamState, x: jax.Array,
     return w if weights is None else w * weights
 
 
-@partial(jax.jit, static_argnames=("method", "ridge"))
-def current_fit(state: StreamState, *, method: str = "gauss",
+@partial(jax.jit, static_argnames=("method", "ridge", "solver", "fallback"))
+def current_fit(state: StreamState, *, method: str | None = None,
+                solver: str = "auto", fallback: str | None = "svd",
                 ridge: float = 0.0) -> fit_lib.Polynomial:
     """Solve the running normal equations. ridge>0 adds λI (stabilizes early,
-    nearly-singular states — e.g. fewer points seen than coefficients)."""
+    nearly-singular states — e.g. fewer points seen than coefficients).
+
+    ``solver``/``fallback`` select the condition-aware solve
+    (``core.fit.fit_from_moments``): the returned ``Polynomial.diagnostics``
+    carries the running state's κ(Gram) and whether the rank-revealing
+    rescue fired — the monitor-friendly health signal for a stream going
+    degenerate.  ``method=`` is the legacy spelling of ``solver=``."""
     m = state.moments
     if ridge:
-        eye = jnp.eye(m.degree + 1, dtype=m.gram.dtype)
-        m = dataclasses.replace(m, gram=m.gram + ridge * eye)
-    return fit_lib.fit_from_moments(m, method=method)
+        m = m.regularized(ridge)
+    return fit_lib.fit_from_moments(m, method=method, solver=solver,
+                                    fallback=fallback)
 
 
 def current_sse(state: StreamState, poly: fit_lib.Polynomial) -> jax.Array:

@@ -8,14 +8,18 @@ fitting entry point (``core.polyfit``, ``core.fit_report_streamed``,
 """
 from repro.engine.plan import (FitPlan, NumericsPolicy, plan_fit,
                                compute_moments, compute_report_sums,
-                               resolve_engine,
+                               resolve_engine, resolve_numerics,
                                REFERENCE, KERNEL_PLAIN, KERNEL_PACKED,
-                               PATHS, ENGINES,
-                               PACKED_MIN_BATCH, KERNEL_MIN_POINTS)
+                               PATHS, ENGINES, SOLVERS,
+                               PACKED_MIN_BATCH, KERNEL_MIN_POINTS,
+                               AUTO_NORMALIZE_DEGREE_F32,
+                               AUTO_NORMALIZE_DEGREE_F64)
 
 __all__ = [
     "FitPlan", "NumericsPolicy", "plan_fit",
     "compute_moments", "compute_report_sums", "resolve_engine",
+    "resolve_numerics",
     "REFERENCE", "KERNEL_PLAIN", "KERNEL_PACKED", "PATHS", "ENGINES",
-    "PACKED_MIN_BATCH", "KERNEL_MIN_POINTS",
+    "SOLVERS", "PACKED_MIN_BATCH", "KERNEL_MIN_POINTS",
+    "AUTO_NORMALIZE_DEGREE_F32", "AUTO_NORMALIZE_DEGREE_F64",
 ]

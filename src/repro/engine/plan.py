@@ -58,6 +58,19 @@ ENGINES = ("auto", "reference", "kernel", "kernel_plain", "kernel_packed")
 PACKED_MIN_BATCH = 2          # packed needs ≥ 2 series to beat plain
 KERNEL_MIN_POINTS = 1 << 15   # single-series TPU crossover (total points)
 
+# solver= values plan_fit accepts: the explicit ladder plus "auto"
+# (select_solver from degree/dtype/basis) and "lspia" (the matrix-free
+# iterative path — polyfit delegates to core.lspia, which never forms the
+# Gram; only meaningful where the raw data is in hand)
+SOLVERS = ("auto", "gauss", "cholesky", "qr", "svd", "lspia")
+
+# solver="auto" escalates NumericsPolicy.normalize on raw-monomial fits at
+# these degrees: past them a wide-domain Gram is unsalvageable *after*
+# accumulation (every factorization of it fails — EXPERIMENTS.md §Solver
+# selection), so conditioning must be fixed before the Gram is formed.
+AUTO_NORMALIZE_DEGREE_F32 = 6
+AUTO_NORMALIZE_DEGREE_F64 = 8
+
 
 @dataclasses.dataclass(frozen=True)
 class NumericsPolicy:
@@ -65,11 +78,21 @@ class NumericsPolicy:
 
     ``accum_dtype=None`` means "accumulate in the input dtype" on the
     reference path and f32 on the kernel paths (their tile dtype).
+
+    ``solver`` is the resolved primary solver for the normal-equation solve
+    (never "auto" inside a built plan); ``fallback`` the rank-revealing
+    rescue ``core.solve.solve_with_fallback`` swaps in when the runtime
+    condition estimate exceeds ``cond_cap`` (None = per-dtype default) or
+    the primary output is non-finite.  ``fallback=None`` disables the guard
+    (pure planned solver — the paper-literal failure mode).
     """
 
     accum_dtype: Any = None
     compensated: bool = False      # Kahan two-float Gram accumulator
     normalize: bool = False       # map the sample domain to [-1, 1]
+    solver: str = "gauss"          # resolved primary normal-equation solver
+    fallback: str | None = "svd"   # condition-triggered rescue (None = off)
+    cond_cap: float | None = None  # κ threshold (None = dtype default)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -138,6 +161,63 @@ def _kernel_degree_ok(degree: int) -> bool:
     return degree + 2 <= kernel.K_PAD
 
 
+def _autonorm_degree(dtype: Any) -> int:
+    try:
+        f64 = jnp.finfo(jnp.dtype(dtype)).eps < 1e-9
+    except (TypeError, ValueError):
+        f64 = False
+    return AUTO_NORMALIZE_DEGREE_F64 if f64 else AUTO_NORMALIZE_DEGREE_F32
+
+
+def resolve_numerics(degree: int, *, basis: str = "monomial",
+                     dtype: Any = jnp.float32,
+                     accum_dtype: Any = None,
+                     normalize: bool = False,
+                     compensated: bool = False,
+                     solver: str = "auto",
+                     fallback: str | None = "svd",
+                     cond_cap: float | None = None) -> NumericsPolicy:
+    """Resolve solver="auto" + auto-normalization into a concrete policy.
+
+    The condition-aware chain (EXPERIMENTS.md §Solver selection):
+
+    1. **before the Gram** — raw-monomial fits at degree ≥ 6 (f32) / 8
+       (f64) flip ``normalize`` on: a wide-domain Gram at those degrees is
+       beyond every factorization *after* accumulation, so the domain map
+       must happen first;
+    2. **static solver** — ``core.solve.select_solver`` picks the cheapest
+       rung of GE → Cholesky → QR → SVD whose expected error survives the
+       degree/dtype/basis;
+    3. **runtime guard** — the solve itself estimates κ(Gram) from the
+       O(m²) state and swaps in ``fallback`` (default rank-revealing SVD)
+       past ``cond_cap`` or on non-finite output.
+    """
+    from repro.core import solve as solve_lib
+    if solver not in SOLVERS:
+        raise ValueError(f"solver={solver!r}; expected one of {SOLVERS}")
+    if solver == "lspia":
+        # only polyfit (which holds the raw data) can delegate to the
+        # matrix-free iteration; a moment-based solve cannot run it
+        raise ValueError(
+            "solver='lspia' needs the raw data (matrix-free V/Vᵀ sweeps); "
+            "use core.polyfit(..., solver='lspia') or core.lspia.lspia_fit "
+            "— moment-based solves (streaming, distributed, robust, serve) "
+            "only take the explicit ladder "
+            f"{solve_lib.SOLVERS} or 'auto'")
+    if fallback is not None and fallback not in solve_lib.SOLVERS:
+        raise ValueError(f"fallback={fallback!r}; expected one of "
+                         f"{solve_lib.SOLVERS} or None")
+    if solver == "auto":
+        if (basis == "monomial" and not normalize
+                and degree >= _autonorm_degree(dtype)):
+            normalize = True
+        solver = solve_lib.select_solver(degree, dtype, basis=basis,
+                                         normalized=normalize)
+    return NumericsPolicy(accum_dtype=accum_dtype, compensated=compensated,
+                          normalize=normalize, solver=solver,
+                          fallback=fallback, cond_cap=cond_cap)
+
+
 def plan_fit(shape: tuple[int, ...], degree: int, *,
              basis: str = "monomial",
              dtype: Any = jnp.float32,
@@ -146,6 +226,9 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
              accum_dtype: Any = None,
              normalize: bool = False,
              compensated: bool = False,
+             solver: str = "auto",
+             fallback: str | None = "svd",
+             cond_cap: float | None = None,
              block_n: int | None = None,
              interpret: bool | None = None,
              mesh: jax.sharding.Mesh | None = None,
@@ -160,14 +243,16 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
     caller).  ``mesh``/``data_axes``: the active mesh — ``shape`` is then the
     per-shard shape and the plan is marked distributed.  ``backend``
     overrides ``jax.default_backend()`` (tests / what-if planning).
-    ``workload``: "moments" (Gram accumulation) or "report" (fused
-    evaluate/residual pass) — the report kernel has no packed variant and a
-    different auto rule (it is the only one-pass option, so monomial fits
-    take it on every backend).
+    ``workload``: "moments" (Gram accumulation), "report" (fused
+    evaluate/residual pass — no packed variant, and it is the only one-pass
+    option so monomial fits take it on every backend), or "lspia" (the
+    matrix-free iterative fit: no Gram at all, always the reference basis
+    ops).  ``solver``/``fallback``/``cond_cap`` resolve the normal-equation
+    solve policy (see ``resolve_numerics``) and ride in ``plan.numerics``.
     """
     if engine not in ENGINES:
         raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
-    if workload not in ("moments", "report"):
+    if workload not in ("moments", "report", "lspia"):
         raise ValueError(f"workload={workload!r}")
     if not shape:
         raise ValueError("x/y must have at least one (series) axis")
@@ -177,8 +262,18 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
     for s in batch:
         b *= s
     backend = backend or jax.default_backend()
-    numerics = NumericsPolicy(accum_dtype=accum_dtype,
-                              compensated=compensated, normalize=normalize)
+    if workload == "lspia":
+        # the matrix-free workload has no normal-equation solve to plan
+        numerics = NumericsPolicy(accum_dtype=accum_dtype,
+                                  compensated=compensated,
+                                  normalize=normalize, solver="lspia",
+                                  fallback=None, cond_cap=cond_cap)
+    else:
+        numerics = resolve_numerics(degree, basis=basis, dtype=dtype,
+                                    accum_dtype=accum_dtype,
+                                    normalize=normalize,
+                                    compensated=compensated, solver=solver,
+                                    fallback=fallback, cond_cap=cond_cap)
     devices = 1
     if mesh is not None and data_axes:
         for ax in data_axes:
@@ -200,6 +295,13 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
         if not _kernel_degree_ok(degree):
             raise ValueError(f"degree {degree} exceeds the kernel tile "
                              "(degree + 2 must be <= 128)")
+
+    if workload == "lspia":
+        # matrix-free: basis matvecs only, no Gram to accumulate — the
+        # kernel paths have nothing to offer (central basis validation for
+        # a forced kernel engine already ran above)
+        return FitPlan(path=REFERENCE, reason="lspia: matrix-free basis "
+                       "matvecs (never forms the Gram)", **common)
 
     if workload == "report":
         if engine == "reference" or not monomial:

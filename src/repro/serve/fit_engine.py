@@ -18,6 +18,12 @@ keep-mask inside the same compiled step, so request arrival/departure
 never changes a shape and never recompiles.  ``compiled_executables()``
 exposes the counter the serve benchmark asserts on.
 
+The pooled solve is condition-aware (``core.solve`` ladder + SVD rescue,
+selected by ``FitServeConfig.solver``/``fallback``): each finished request
+reports the estimated κ(Gram) and whether the rescue fired
+(``FitRequest.condition`` / ``fallback_used``), so degenerate series
+come back finite and flagged instead of NaN-ing a whole slot pool.
+
 The host loop is deliberately synchronous/deterministic — the scheduling
 substrate an async front-end would wrap.
 """
@@ -46,6 +52,8 @@ class FitRequest:
     sse: float | None = None
     r: float | None = None
     count: float | None = None         # points the fit actually used
+    condition: float | None = None     # estimated κ(Gram) at solve time
+    fallback_used: bool | None = None  # rescue solver produced the coeffs
     done: bool = False
 
     @property
@@ -58,7 +66,9 @@ class FitServeConfig:
     degree: int = 3
     n_slots: int = 8                    # concurrent series per bucket
     buckets: tuple[int, ...] = (256, 2048)   # chunk widths, ascending
-    method: str = "gauss"
+    solver: str = "auto"                # condition-aware solve (core.solve)
+    fallback: str | None = "svd"        # rank-revealing rescue (None = off)
+    method: str | None = None           # legacy spelling of solver=
     ridge: float = 1e-9                 # λI stabilizer for the pooled solve
     # (idle slots hold all-zero moments and degenerate series are accepted,
     # so the pooled solve must never be exactly singular)
@@ -111,9 +121,13 @@ class FitServeEngine:
         @jax.jit
         def solve(state):
             poly = streaming.current_fit(state, method=cfg.method,
+                                         solver=cfg.solver,
+                                         fallback=cfg.fallback,
                                          ridge=cfg.ridge)
             rep = fit_lib.report_from_moments(state.moments, poly.coeffs)
-            return poly.coeffs, rep.sse, rep.r, state.moments.count
+            d = poly.diagnostics
+            return (poly.coeffs, rep.sse, rep.r, state.moments.count,
+                    d.condition, d.fallback_used)
 
         self._solve = solve
 
@@ -201,14 +215,16 @@ class FitServeEngine:
         ready = [s for s in active if b.slot_pos[s] >= b.slot_req[s].n]
         if not ready:
             return
-        coeffs, sse, r, count = (np.asarray(a) for a in
-                                 self._solve(b.state))
+        coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
+                                           self._solve(b.state))
         for s in ready:
             req = b.slot_req[s]
             req.coeffs = coeffs[s].copy()
             req.sse = float(sse[s])
             req.r = float(r[s])
             req.count = float(count[s])
+            req.condition = float(cond[s])
+            req.fallback_used = bool(fb[s])
             req.done = True
             b.slot_req[s] = None
             self.fits_done += 1

@@ -1,0 +1,267 @@
+"""Property + regression tests for the condition-aware solver stack.
+
+* hypothesis: on well-conditioned inputs every (engine, solver) combination
+  the plan layer can produce agrees within NumericsPolicy tolerance, and
+  IRLS with zero contamination converges to the plain LSE coefficients;
+* regression: singular/near-singular Grams (constant x, zero-range
+  ``Domain.from_data``) — previously silent inf/NaN out of Gaussian
+  elimination — now produce finite coefficients with
+  ``diagnostics.condition`` / ``diagnostics.fallback_used`` raised.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import core, engine
+from repro.core import streaming
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+EXPLICIT = [s for s in core.SOLVERS]          # ("gauss","cholesky","qr","svd")
+
+
+def _clean_data(seed, degree, n=192, noise=0.02):
+    rng = np.random.default_rng(seed)
+    x = np.sort(rng.uniform(-1.0, 1.0, n))
+    coeffs = rng.normal(0, 1, degree + 1)
+    y = np.polyval(coeffs[::-1], x) + noise * rng.normal(0, 1, n)
+    return (jnp.asarray(x, jnp.float32), jnp.asarray(y, jnp.float32), coeffs)
+
+
+# ------------------------------------------------------------- properties
+@given(st.integers(0, 10_000), st.integers(1, 5))
+def test_solver_invariance_on_well_conditioned(seed, degree):
+    """Every rung of the explicit ladder solves the same well-conditioned
+    normal equations to the same coefficients (within fp tolerance)."""
+    x, y, _ = _clean_data(seed, degree)
+    fits = {s: core.polyfit(x, y, degree, solver=s) for s in EXPLICIT}
+    ref = np.asarray(fits["gauss"].coeffs, np.float64)
+    scale = np.linalg.norm(ref) + 1e-9
+    for s, poly in fits.items():
+        assert not bool(poly.diagnostics.fallback_used), s
+        gap = np.linalg.norm(np.asarray(poly.coeffs, np.float64) - ref)
+        assert gap / scale < 5e-4, f"{s}: {gap / scale:.2e}"
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_engine_solver_grid_agrees(seed, degree):
+    """Every (engine, solver) combination plan_fit can produce agrees on
+    well-conditioned batched input (the kernels force monomial/f32)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 1, (3, 256)), jnp.float32)
+    yv = rng.normal(0, 1, (3, 256))
+    y = jnp.asarray(yv, jnp.float32)
+    ref = None
+    for eng in ("reference", "kernel_plain", "kernel_packed"):
+        for solver in ("gauss", "svd"):
+            poly = core.polyfit(x, y, degree, engine=eng, solver=solver)
+            c = np.asarray(poly.coeffs, np.float64)
+            if ref is None:
+                ref = c
+                scale = np.linalg.norm(ref) + 1e-9
+            else:
+                assert np.linalg.norm(c - ref) / scale < 1e-3, (eng, solver)
+
+
+@given(st.integers(0, 10_000), st.integers(1, 4))
+def test_irls_zero_contamination_matches_lse(seed, degree):
+    """With no outliers the IRLS weights settle at ≈1 and robust_polyfit
+    reproduces the plain LSE fit."""
+    x, y, _ = _clean_data(seed, degree, noise=0.0)
+    plain = core.polyfit(x, y, degree)
+    rfit = core.robust_polyfit(x, y, degree)
+    assert bool(rfit.converged)
+    ref = np.asarray(plain.coeffs, np.float64)
+    got = np.asarray(rfit.poly.coeffs, np.float64)
+    assert np.linalg.norm(got - ref) / (np.linalg.norm(ref) + 1e-9) < 1e-3
+
+
+@given(st.integers(0, 10_000), st.integers(2, 6))
+def test_condition_estimate_matches_numpy(seed, m):
+    rng = np.random.default_rng(seed)
+    a = rng.normal(0, 1, (m, m))
+    a = a @ a.T + 0.1 * np.eye(m)
+    got = float(core.condition_estimate(jnp.asarray(a)))
+    want = float(np.linalg.cond(a))
+    assert got == pytest.approx(want, rel=2e-2)
+
+
+# ----------------------------------------------------------- static table
+def test_select_solver_escalates_with_degree():
+    f32, f64 = jnp.float32, jnp.float64
+    order = {s: i for i, s in enumerate(core.SOLVERS)}
+    for dtype in (f32, f64):
+        for normalized in (False, True):
+            picks = [core.select_solver(d, dtype, normalized=normalized)
+                     for d in range(1, 12)]
+            ranks = [order[p] for p in picks]
+            assert ranks == sorted(ranks), (dtype, normalized, picks)
+    # the paper's regime stays paper-faithful
+    assert core.select_solver(3, f32) == "gauss"
+    # raw monomial high degree in f32 goes straight to the rank-revealer
+    assert core.select_solver(9, f32) == "svd"
+    # f64 buys more headroom
+    assert core.select_solver(9, f64, normalized=True) == "qr"
+
+
+def test_plan_resolves_auto_solver_and_autonorm():
+    plan = engine.plan_fit((256,), 3, dtype=jnp.float32)
+    assert plan.numerics.solver == "gauss"
+    assert not plan.numerics.normalize
+    plan9 = engine.plan_fit((256,), 9, dtype=jnp.float32)
+    assert plan9.numerics.normalize          # auto-escalated pre-Gram
+    assert plan9.numerics.solver != "gauss"
+    forced = engine.plan_fit((256,), 9, dtype=jnp.float32, solver="gauss")
+    assert forced.numerics.solver == "gauss"
+    assert not forced.numerics.normalize
+    with pytest.raises(ValueError, match="solver"):
+        engine.plan_fit((256,), 3, solver="lu")
+    with pytest.raises(ValueError, match="fallback"):
+        engine.plan_fit((256,), 3, fallback="auto")
+
+
+def test_lspia_workload_plan():
+    plan = engine.plan_fit((4, 512), 3, workload="lspia", backend="tpu")
+    assert plan.path == engine.REFERENCE
+    assert plan.numerics.solver == "lspia"
+    assert "Gram" in plan.reason
+
+
+# ------------------------------------------------- degenerate-input rescue
+def test_singular_gram_is_finite_and_flagged():
+    """The PR-3 fix: GE on a singular Gram returned inf/NaN with no signal;
+    now the rescue produces the finite minimum-norm solution and raises
+    diagnostics.fallback_used / a huge condition estimate."""
+    x = jnp.full(64, 2.0)                      # constant x: rank-1 Gram
+    y = jnp.asarray(np.random.default_rng(0).normal(0, 1, 64), jnp.float32)
+    # the raw failure mode, preserved when asked for
+    raw = core.polyfit(x, y, 2, solver="gauss", fallback=None)
+    assert not bool(jnp.all(jnp.isfinite(raw.coeffs)))
+    assert not bool(raw.diagnostics.fallback_used)
+    # the default: finite + flagged
+    poly = core.polyfit(x, y, 2)
+    assert bool(jnp.all(jnp.isfinite(poly.coeffs)))
+    assert bool(poly.diagnostics.fallback_used)
+    # κ reads +inf or huge-finite (f32 eigvalsh rounds the zero eigenvalue);
+    # either way it is far beyond the dtype's cap — the "flagged" signal
+    assert float(poly.diagnostics.condition) > core.cond_cap_for(jnp.float32)
+    # and the fit is the sensible one: mean(y) at the only x seen
+    assert float(poly(x)[0]) == pytest.approx(float(jnp.mean(y)), abs=1e-4)
+
+
+def test_zero_range_domain_normalize_is_finite():
+    """Domain.from_data on zero-range data degrades to identity scale; the
+    normalized fit must still come out finite and flagged."""
+    x = jnp.full(32, 7.0)
+    y = jnp.ones(32, jnp.float32)
+    poly = core.polyfit(x, y, 1, normalize=True)
+    assert bool(jnp.all(jnp.isfinite(poly.coeffs)))
+    assert bool(poly.diagnostics.fallback_used)
+    assert float(poly(jnp.asarray([7.0]))[0]) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_near_singular_two_point_cluster():
+    """Two distinct x values fitting a quadratic: rank 2 < 3 — finite,
+    flagged, and exact on the observed points."""
+    x = jnp.asarray([1.0, 1.0, 3.0, 3.0], jnp.float32)
+    y = jnp.asarray([2.0, 2.0, 4.0, 4.0], jnp.float32)
+    poly = core.polyfit(x, y, 2)
+    assert bool(jnp.all(jnp.isfinite(poly.coeffs)))
+    assert bool(poly.diagnostics.fallback_used)
+    got = np.asarray(poly(jnp.asarray([1.0, 3.0])), np.float64)
+    np.testing.assert_allclose(got, [2.0, 4.0], atol=1e-3)
+
+
+def test_streaming_degenerate_state_is_finite():
+    """A fresh stream solved before enough points arrive (ridge off) used
+    to NaN; the condition-aware solve returns finite + flagged instead."""
+    state = streaming.StreamState.create(3)
+    state = streaming.update(state, jnp.asarray([1.0, 1.0]),
+                             jnp.asarray([2.0, 2.0]))
+    poly = streaming.current_fit(state)        # no ridge: rank-1 Gram
+    assert bool(jnp.all(jnp.isfinite(poly.coeffs)))
+    assert bool(poly.diagnostics.fallback_used)
+    assert poly.diagnostics.solver == "gauss"
+
+
+def test_degenerate_flagged_even_when_primary_is_svd():
+    """At degrees where the plan's primary already is the rank-revealer
+    (solver == fallback), the condition breach must still be reported —
+    flagging is the guard's contract, the second solve just its remedy."""
+    x = jnp.full(64, 2.0, jnp.float32)     # pinned: weak 2.0 goes f64
+    y = jnp.ones(64, jnp.float32)          # under a global-x64 run
+    poly = core.polyfit(x, y, 9)           # f32 degree 9 → primary "svd"
+    assert poly.diagnostics.solver == "svd"
+    assert bool(jnp.all(jnp.isfinite(poly.coeffs)))
+    assert bool(poly.diagnostics.fallback_used)
+
+
+def test_robust_polyfit_all_zero_weight_series_is_finite():
+    """A fully-padded series (base weights all zero) in a batch must come
+    back finite + flagged, like plain polyfit does — not NaN-poisoned
+    through the MAD scale estimate."""
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.uniform(-1, 1, (2, 64)), jnp.float32)
+    y = jnp.asarray(np.stack([np.asarray(x[0]) * 2 + 1,
+                              rng.normal(0, 1, 64)]), jnp.float32)
+    w = jnp.asarray(np.stack([np.ones(64), np.zeros(64)]), jnp.float32)
+    rfit = core.robust_polyfit(x, y, 2, weights=w)
+    assert bool(jnp.all(jnp.isfinite(rfit.poly.coeffs)))
+    assert bool(rfit.poly.diagnostics.fallback_used[1])   # zero Gram slot
+    assert not bool(rfit.poly.diagnostics.fallback_used[0])
+    got = np.asarray(rfit.poly.coeffs[0], np.float64)
+    np.testing.assert_allclose(got, [1.0, 2.0, 0.0], atol=2e-3)
+
+
+def test_lspia_nonconvergence_is_flagged():
+    """An LSPIA run that cannot meet tol (first-order rate vs monomial
+    degree-9 κ) must say so through the same diagnostics channel the
+    explicit solvers use — never silent garbage."""
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.uniform(-2, 2, 512), jnp.float32)
+    y = jnp.asarray(rng.normal(0, 1, 512), jnp.float32)
+    lf = core.lspia_fit(x, y, 9, max_iter=50)   # hopeless on purpose
+    assert not bool(lf.converged)
+    assert bool(lf.poly.diagnostics.fallback_used)
+    # κ̂ from the observed rate is a lower bound; it must at least say
+    # "slow" (κ̂ ≫ the Chebyshev regime's ~10) while the flag carries the
+    # real no-silent-failure signal
+    assert float(lf.poly.diagnostics.condition) > 30.0
+    # and through the polyfit front door the flag survives
+    front = core.polyfit(x, y, 9, solver="lspia")
+    assert front.diagnostics is not None
+    # converged-or-flagged: either is a legitimate outcome here, but a
+    # non-converged run must carry the flag
+    lf_ref = core.lspia_fit(x, y, 9)
+    assert bool(lf_ref.converged) == (not bool(
+        lf_ref.poly.diagnostics.fallback_used))
+
+
+def test_fallback_reports_condition_on_healthy_solves_too():
+    x, y, _ = _clean_data(5, 2)
+    poly = core.polyfit(x, y, 2)
+    cond = float(poly.diagnostics.condition)
+    assert np.isfinite(cond) and 1.0 <= cond < float(core.cond_cap_for(
+        jnp.float32))
+    assert not bool(poly.diagnostics.fallback_used)
+
+
+def test_serve_surfaces_solver_diagnostics():
+    """The fit server's solve step reports per-request condition/fallback."""
+    from repro.serve import FitServeConfig, FitServeEngine
+    eng = FitServeEngine(FitServeConfig(degree=2, n_slots=2, buckets=(64,)))
+    rng = np.random.default_rng(2)
+    xs = rng.uniform(-1, 1, 40).astype(np.float32)
+    good = eng.submit(xs, (xs * 2 + 1).astype(np.float32))
+    degen = eng.submit(np.full(40, 3.0, np.float32),
+                       np.full(40, 5.0, np.float32))
+    eng.run()
+    assert good.done and degen.done
+    assert np.isfinite(good.condition) and not good.fallback_used
+    # ridge keeps the degenerate slot's solve finite; its condition estimate
+    # must still scream relative to the healthy request's
+    assert degen.condition > 1e3 * good.condition
+    assert np.all(np.isfinite(degen.coeffs))
