@@ -288,6 +288,63 @@ def bench_batched_fits(quick: bool):
     row("batched_fits", us, f"{b / (us / 1e6):.0f}fits/s")
 
 
+def bench_select(quick: bool):
+    """Single-pass model selection (repro.select).  ``select_sweep``:
+    the degree ladder from ONE degree-M accumulation vs the naive
+    refit-per-degree loop (M+1 accumulations) — derived = wall speedup +
+    the chosen degree.  ``select_cv``: the full k-fold moment-space CV
+    path end to end (eager entry point, fold accumulation included)."""
+    from repro import select as select_lib
+
+    max_deg = 8
+    n = 1 << 12 if SMOKE else 1 << 15 if quick else 1 << 18
+    rng = np.random.default_rng(21)
+    xs = rng.uniform(-1.0, 1.0, n)
+    true = np.array([0.5, -1.0, 0.3, 0.9])          # planted cubic
+    sig = np.polyval(true[::-1], xs)
+    ys = sig + (sig.std() / 10.0) * rng.normal(0, 1, n)   # SNR 10
+    x = jnp.asarray(xs, jnp.float32)
+    y = jnp.asarray(ys, jnp.float32)
+
+    sweep = jax.jit(lambda x, y: select_lib.sweep_from_moments(
+        core.gram_moments(x, y, max_deg)).scores.aicc)
+
+    def naive(x, y):
+        # the pre-select workflow: one full accumulation per degree
+        return tuple(core.gram_moments(x, y, d).gram for d in
+                     range(max_deg + 1))
+
+    naive_j = jax.jit(naive)
+    us_sweep = _time(sweep, x, y, iters=10)
+    us_naive = _time(naive_j, x, y, iters=10)
+    aicc = np.asarray(sweep(x, y))
+    best = int(np.argmin(aicc))
+    row("select_sweep", us_sweep,
+        f"best=deg{best};naive_refit_us={us_naive:.1f};"
+        f"speedup_vs_refit={us_naive / us_sweep:.1f}x")
+    if SMOKE:
+        assert best == 3, f"sweep missed the planted cubic: {best}"
+        assert np.all(np.isfinite(aicc)), "non-finite AICc in sweep"
+
+    def cv_path():
+        return select_lib.select_degree(x, y, max_degree=max_deg, folds=5)
+
+    for _ in range(2):
+        cv_path()                                     # compile both halves
+    t0 = time.perf_counter()
+    iters = 5
+    for _ in range(iters):
+        sel = cv_path()
+    us_cv = (time.perf_counter() - t0) / iters * 1e6
+    cv = np.asarray(sel.sweep.scores.cv)
+    row("select_cv", us_cv,
+        f"best=deg{sel.best_degree};folds=5;"
+        f"cv_min={float(np.min(cv)):.4g}")
+    if SMOKE:
+        assert sel.best_degree == 3, f"CV missed the planted cubic: {sel}"
+        assert np.all(np.isfinite(cv)), "non-finite CV scores"
+
+
 def bench_serve_fit(quick: bool):
     """Continuous-batching fit server on a ragged request trace (1k requests
     in the full run). derived = sustained fits/s and Mpts/s after warmup,
@@ -353,8 +410,9 @@ def bench_e2e_train(quick: bool):
 
 
 BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
-           bench_fused_report, bench_solver_stack, bench_streaming,
-           bench_batched_fits, bench_serve_fit, bench_e2e_train]
+           bench_fused_report, bench_solver_stack, bench_select,
+           bench_streaming, bench_batched_fits, bench_serve_fit,
+           bench_e2e_train]
 
 
 def _git_rev() -> str:
@@ -395,20 +453,22 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny shapes + finite-number assertions on every "
                          "row (CI kernel-regression tripwire)")
-    ap.add_argument("--no-json", action="store_true",
-                    help="skip writing benchmarks/BENCH_<rev>.json")
     args = ap.parse_args()
     SMOKE = args.smoke
     quick = args.quick or args.smoke
     print("name,us_per_call,derived")
-    for bench in BENCHES:
-        try:
-            bench(quick)
-        except Exception as e:  # noqa: BLE001
-            print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
-                  file=sys.stderr)
-            raise
-    if not args.no_json:
+    # BENCH_<rev>.json is ALWAYS emitted — even when a bench raises, the
+    # rows completed so far land on disk, so the perf trajectory and the
+    # CI artifact never come back empty-handed.
+    try:
+        for bench in BENCHES:
+            try:
+                bench(quick)
+            except Exception as e:  # noqa: BLE001
+                print(f"{bench.__name__},ERROR,{type(e).__name__}: {e}",
+                      file=sys.stderr)
+                raise
+    finally:
         print(f"wrote {_write_json(quick)}", file=sys.stderr)
 
 

@@ -1,0 +1,65 @@
+"""Single-pass automatic degree selection, offline and streaming.
+
+    PYTHONPATH=src python examples/select_degree.py
+
+A cubic is planted under noise; the selector sees the degree-8 candidate
+ladder.  Watch two things:
+
+* ONE moment accumulation carries the whole ladder (the instrumented
+  counter proves it) — no refit per candidate degree;
+* the raw SSE column keeps falling forever (more parameters always fit
+  the noise a little better) while AICc/BIC/CV all reject the overfit
+  and land on degree 3.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro import core, engine
+from repro.core import streaming
+
+MAX_DEGREE = 8
+rng = np.random.default_rng(0)
+n = 4096
+x = rng.uniform(-1.0, 1.0, n)
+true = np.array([1.0, -0.5, 0.3, 0.9])                 # planted cubic
+signal = np.polyval(true[::-1], x)
+y = signal + (np.std(signal) / 10.0) * rng.normal(0, 1, n)   # SNR 10
+xj = jnp.asarray(x, jnp.float32)
+yj = jnp.asarray(y, jnp.float32)
+
+print("=== One-pass selection over the degree ladder (folds=5) ===")
+engine.reset_moment_counter()
+sel = core.select_degree(xj, yj, max_degree=MAX_DEGREE, folds=5)
+counter = engine.moment_counter()
+print(f"moment-producing calls: {counter['calls']} "
+      f"(points touched: {counter['points']})")
+s = sel.sweep.scores
+print(f"{'deg':>3} {'SSE':>10} {'AICc':>10} {'BIC':>10} {'CV':>10}")
+for d in range(MAX_DEGREE + 1):
+    mark = "  <- chosen" if d == sel.best_degree else ""
+    print(f"{d:>3} {float(s.sse[d]):>10.3f} {float(s.aicc[d]):>10.1f} "
+          f"{float(s.bic[d]):>10.1f} {float(s.cv[d]):>10.3f}{mark}")
+print(f"chosen: degree {sel.best_degree} by {sel.criterion} "
+      f"(SSE alone would pick {int(np.argmin(np.asarray(s.sse)))} — "
+      "monotone, always the overfit)")
+print("coeffs:", np.asarray(sel.poly.coeffs))
+
+print("\n=== The same, via the fitting front door ===")
+poly = core.polyfit(xj, yj, "auto")
+print(f"polyfit(x, y, 'auto') -> degree {poly.degree}")
+
+print("\n=== Streaming: the running best degree as data arrives ===")
+state = streaming.StreamState.create(MAX_DEGREE, cv_folds=5)
+chunk = 128
+for i, lo in enumerate(range(0, n, chunk)):
+    state = streaming.update(state, xj[lo:lo + chunk], yj[lo:lo + chunk])
+    if i % 4 == 3:
+        cur = state.current_selection()
+        aicc_best = state.current_selection(criterion="aicc").best_degree
+        print(f"after {lo + chunk:>5} pts: cv picks {cur.best_degree}, "
+              f"aicc picks {aicc_best}, cv scores (deg 2..5): "
+              + " ".join(f"{float(cur.sweep.scores.cv[d]):.3f}"
+                         for d in range(2, 6)))
+final = state.current_selection()
+print(f"final streaming selection: degree {final.best_degree} "
+      f"(state is O(k·m²) — fold partials + running total, no history)")

@@ -17,9 +17,25 @@ from repro.core.fit import (Polynomial, FitReport, StreamedFitReport,
                             sse_from_moments, report_from_moments)
 from repro.core.robust import (robust_polyfit, RobustFit, HUBER, TUKEY)
 from repro.core.lspia import (lspia_fit, LSPIAFit)
-from repro.core.distributed import make_distributed_fit, local_moments, psum_moments
+from repro.core.distributed import (make_distributed_fit,
+                                    make_distributed_select,
+                                    local_moments, psum_moments)
 from repro.core.streaming import StreamState, update, current_fit, current_sse
 from repro.core.scaling_laws import PowerLaw, fit_power_law
+
+# single-pass automatic model selection: repro.select builds ON these core
+# modules, so its names are re-exported lazily (PEP 562) — an eager import
+# here would be circular whenever repro.select (or repro.serve, which uses
+# it) is imported before repro.core finishes initializing
+_SELECT_EXPORTS = ("select_degree", "DegreeSearch", "Selection",
+                   "SweepResult", "sweep_from_moments")
+
+
+def __getattr__(name):
+    if name in _SELECT_EXPORTS:
+        import repro.select as _select
+        return getattr(_select, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     "Domain", "vandermonde", "evaluate", "MONOMIAL", "CHEBYSHEV",
@@ -35,7 +51,10 @@ __all__ = [
     "sse_from_moments", "report_from_moments",
     "robust_polyfit", "RobustFit", "HUBER", "TUKEY",
     "lspia_fit", "LSPIAFit",
-    "make_distributed_fit", "local_moments", "psum_moments",
+    "make_distributed_fit", "make_distributed_select",
+    "local_moments", "psum_moments",
     "StreamState", "update", "current_fit", "current_sse",
     "PowerLaw", "fit_power_law",
+    "select_degree", "DegreeSearch", "Selection", "SweepResult",
+    "sweep_from_moments",
 ]

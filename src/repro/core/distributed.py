@@ -55,6 +55,21 @@ def psum_moments(m: moments_lib.Moments, axis_names) -> moments_lib.Moments:
     return jax.tree.map(lambda a: jax.lax.psum(a, axis_names), m)
 
 
+def _global_domain(x: jax.Array, w: jax.Array,
+                   data_axes) -> basis_lib.Domain:
+    """Global [-1, 1] domain over all shards (weighted min/max + pmin/pmax
+    — the second tiny collective of a normalized distributed fit).
+    Zero-weight entries are excluded; a degenerate zero range keeps the
+    identity scale."""
+    big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
+    lo = jax.lax.pmin(jnp.min(jnp.where(w > 0, x, big)), data_axes)
+    hi = jax.lax.pmax(jnp.max(jnp.where(w > 0, x, -big)), data_axes)
+    shift = (hi + lo) / 2.0
+    half = (hi - lo) / 2.0
+    scale = jnp.where(half > 0, 1.0 / jnp.where(half > 0, half, 1.0), 1.0)
+    return basis_lib.Domain(shift, scale)
+
+
 def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
                          data_axes: tuple[str, ...] = ("data",),
                          method: str | None = None,
@@ -107,16 +122,8 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
              in_specs=(spec_in, spec_in, spec_in),
              out_specs=(spec_rep, spec_rep), **_CHECK_KW)
     def _fit_shard(x, y, w):
-        if normalize:
-            big = jnp.asarray(jnp.finfo(x.dtype).max, x.dtype)
-            lo = jax.lax.pmin(jnp.min(jnp.where(w > 0, x, big)), data_axes)
-            hi = jax.lax.pmax(jnp.max(jnp.where(w > 0, x, -big)), data_axes)
-            shift = (hi + lo) / 2.0
-            half = (hi - lo) / 2.0
-            scale = jnp.where(half > 0, 1.0 / jnp.where(half > 0, half, 1.0), 1.0)
-            dom = basis_lib.Domain(shift, scale)
-        else:
-            dom = basis_lib.Domain.identity(x.dtype)
+        dom = (_global_domain(x, w, data_axes) if normalize
+               else basis_lib.Domain.identity(x.dtype))
         xt = dom.apply(x)
         m = local_moments(xt, y, degree, basis=basis, weights=w,
                           accum_dtype=accum_dtype, engine=engine)
@@ -134,6 +141,101 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
         return _fit_shard(x, y, weights)
 
     return jax.jit(fit)
+
+
+def make_distributed_select(mesh: jax.sharding.Mesh, max_degree: int, *,
+                            folds: int = 5,
+                            data_axes: tuple[str, ...] = ("data",),
+                            criterion: str | None = None,
+                            solver: str = "auto",
+                            fallback: str | None = "svd",
+                            cond_cap: float | None = None,
+                            basis: str = basis_lib.MONOMIAL,
+                            normalize: bool = False,
+                            accum_dtype=jnp.float32,
+                            engine: str = "auto"):
+    """Mesh-parallel single-pass degree selection: (x, y, weights) ->
+    (poly, sweep, best_degree), all fully replicated.
+
+    Each shard accumulates its local k-fold moment partials (round-robin
+    within the shard — fold membership is an arbitrary partition, so local
+    assignment is a valid global one) and ONE psum of the (k, m+1, m+1)
+    fold stack makes the folds global: selection's collective cost is
+    O(k·m²) floats, independent of n, the same additivity argument as the
+    distributed fit.  The ladder solve + scoring then run replicated on
+    every device, so the chosen degree is identical mesh-wide with no
+    extra synchronization.  ``folds < 2`` drops CV (one plain psum'd
+    state; AICc/BIC/GCV still select).
+
+    ``poly`` is the winning fit in the zero-padded (max_degree+1) layout
+    (the chosen degree is data-dependent, hence not a static shape) and —
+    like ``make_distributed_fit`` — carries its Domain, so evaluating it
+    on raw x is correct even when normalization (explicit or the plan's
+    auto-escalation at high max degrees) mapped the fit to [-1, 1];
+    ``sweep.coeffs`` live in that same fitted domain/basis.
+    """
+    from repro import engine as engine_lib
+    from repro import select as select_lib
+    from repro.select import crossval
+    if criterion is None:
+        criterion = "cv" if folds >= 2 else "aicc"
+    if criterion == "cv" and folds < 2:
+        raise ValueError("criterion='cv' needs folds >= 2")
+    # eager validation at the max candidate degree (per-shard n unknown;
+    # path choice re-made per shard, numerics resolved once — same pattern
+    # as make_distributed_fit)
+    plan = engine_lib.plan_fit(
+        (max(folds, 1), 1), max_degree, basis=basis, engine=engine,
+        dtype=accum_dtype or jnp.float32, accum_dtype=accum_dtype,
+        normalize=normalize, solver=solver, fallback=fallback,
+        cond_cap=cond_cap, mesh=mesh, data_axes=data_axes,
+        workload="select")
+    pol = plan.numerics
+    spec_in = P(data_axes)
+    spec_rep = P()
+
+    @partial(_shard_map, mesh=mesh,
+             in_specs=(spec_in, spec_in, spec_in),
+             out_specs=(spec_rep, spec_rep, spec_rep), **_CHECK_KW)
+    def _select_shard(x, y, w):
+        dom = (_global_domain(x, w, data_axes) if pol.normalize
+               else basis_lib.Domain.identity(x.dtype))
+        xt = dom.apply(x)
+        if folds >= 2:
+            fm = crossval.fold_moments(xt, y, folds, max_degree, weights=w,
+                                       basis=basis, engine=engine,
+                                       accum_dtype=accum_dtype)
+            fm = psum_moments(fm, data_axes)   # folds made global: O(k·m²)
+            total = crossval.sum_folds(fm)
+        else:
+            fm = None
+            total = psum_moments(
+                local_moments(xt, y, max_degree, basis=basis, weights=w,
+                              accum_dtype=accum_dtype, engine=engine),
+                data_axes)
+        sweep = select_lib.sweep_from_moments(
+            total, fold_moments=fm, solver=solver, fallback=fallback,
+            cond_cap=cond_cap, basis=basis, normalized=pol.normalize)
+        best = sweep.best(criterion)
+        # winning fit in the padded ladder layout (best is traced, so the
+        # static-shape slice of selection_from_sweep is unavailable) —
+        # crucially WITH its Domain, so raw-x evaluation is correct
+        diag = fit_lib.FitDiagnostics(
+            condition=jnp.take(sweep.condition, best, axis=-1),
+            fallback_used=jnp.take(sweep.fallback_used, best, axis=-1),
+            solver=solver, fallback=fallback or "none")
+        poly = fit_lib.Polynomial(
+            coeffs=jnp.take(sweep.coeffs, best, axis=-2),
+            domain_shift=dom.shift, domain_scale=dom.scale, basis=basis,
+            diagnostics=diag)
+        return poly, sweep, best
+
+    def sel(x: jax.Array, y: jax.Array, weights: jax.Array | None = None):
+        if weights is None:
+            weights = jnp.ones_like(x)
+        return _select_shard(x, y, weights)
+
+    return jax.jit(sel)
 
 
 def distributed_fit_input_specs(n_global: int, dtype=jnp.float32):

@@ -108,7 +108,7 @@ def fit_from_moments(m: moments_lib.Moments, *, method: str | None = None,
 @partial(jax.jit, static_argnames=("degree", "method", "basis", "normalize",
                                    "accum_dtype", "engine", "use_kernel",
                                    "solver", "fallback", "cond_cap"))
-def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
+def _polyfit_fixed(x: jax.Array, y: jax.Array, degree: int, *,
             weights: jax.Array | None = None,
             method: str | None = None, basis: str = basis_lib.MONOMIAL,
             normalize: bool = False, accum_dtype=None,
@@ -167,6 +167,50 @@ def polyfit(x: jax.Array, y: jax.Array, degree: int, *,
     return fit_from_moments(m, solver=pol.solver, fallback=pol.fallback,
                             cond_cap=pol.cond_cap, domain=dom, basis=basis,
                             normalized=pol.normalize)
+
+
+def polyfit(x: jax.Array, y: jax.Array, degree, *,
+            weights: jax.Array | None = None,
+            method: str | None = None, basis: str = basis_lib.MONOMIAL,
+            normalize: bool = False, accum_dtype=None,
+            engine: str = "auto",
+            solver: str = "auto",
+            fallback: str | None = "svd",
+            cond_cap: float | None = None,
+            use_kernel: bool | None = None) -> Polynomial:
+    """``_polyfit_fixed`` (the paper's pipeline, jitted) plus automatic
+    model selection: ``degree="auto"`` or ``degree=DegreeSearch(...)``
+    picks the degree analytically from the SAME single moment pass
+    (``repro.select`` — degree ladder + moment-space CV; see its docs).
+    The auto path is eager at the top (the winning degree is read back to
+    slice the coefficients); an integer ``degree`` is the unchanged jitted
+    fast path.  All other arguments keep their fixed-degree meaning —
+    ``normalize=False`` under ``degree="auto"`` still lets the numerics
+    policy escalate domain normalization at high max degrees, exactly as
+    the fixed-degree plan does."""
+    from repro import select as select_lib
+    if isinstance(degree, str):
+        if degree != "auto":
+            raise ValueError(f"degree={degree!r}; expected an int, 'auto', "
+                             "or a repro.select.DegreeSearch")
+        degree = select_lib.DegreeSearch()
+    if isinstance(degree, select_lib.DegreeSearch):
+        from repro import engine as engine_lib
+        sel = select_lib.select_degree(
+            x, y, degree.max_degree, folds=degree.folds,
+            criterion=degree.criterion, weights=weights, basis=basis,
+            normalize=normalize or None,
+            engine=engine_lib.resolve_engine(engine, use_kernel),
+            solver=(method if method is not None
+                    else solver if solver != "auto" else degree.solver),
+            fallback=degree.fallback, cond_cap=degree.cond_cap,
+            accum_dtype=accum_dtype)
+        return sel.poly
+    return _polyfit_fixed(x, y, degree, weights=weights, method=method,
+                          basis=basis, normalize=normalize,
+                          accum_dtype=accum_dtype, engine=engine,
+                          solver=solver, fallback=fallback,
+                          cond_cap=cond_cap, use_kernel=use_kernel)
 
 
 @partial(jax.jit, static_argnames=("degree",))
@@ -253,13 +297,34 @@ def fit_report_streamed(poly: Polynomial, x: jax.Array, y: jax.Array, *,
     return StreamedFitReport(coeffs=poly.coeffs, sse=s["sse"], r=r, count=n)
 
 
+def _broadcast_moments(m: moments_lib.Moments, coeffs: jax.Array):
+    """Expand moment leaves so ``coeffs`` may carry extra trailing batch
+    axes beyond the moments' batch shape — e.g. a whole degree *ladder*
+    (..., M+1, m+1) of zero-padded coefficient rows scored against one
+    (...,)-batched state (``repro.select``).  Lower-rank coeffs (one
+    shared polynomial scored against many states, the streaming-monitor
+    shape) need no expansion: einsum ellipsis broadcasting handles them."""
+    extra = coeffs.ndim - m.vty.ndim
+    gram, vty, yty, sw = m.gram, m.vty, m.yty, m.weight_sum
+    for _ in range(max(extra, 0)):
+        gram = gram[..., None, :, :]
+        vty = vty[..., None, :]
+        yty = yty[..., None]
+        sw = sw[..., None]
+    return gram, vty, yty, sw
+
+
 def sse_from_moments(m: moments_lib.Moments, coeffs: jax.Array) -> jax.Array:
     """Σe² without touching the data: yᵀy - 2aᵀB + aᵀA a.
 
-    Enables streaming quality tracking (monitors) with O(1) state."""
-    quad = jnp.einsum("...j,...jk,...k->...", coeffs, m.gram, coeffs)
-    cross = jnp.einsum("...j,...j->...", coeffs, m.vty)
-    return m.yty - 2.0 * cross + quad
+    Enables streaming quality tracking (monitors) with O(1) state.
+    ``coeffs`` may carry extra trailing batch axes over the moments' batch
+    (a zero-padded degree ladder (..., M+1, m+1) scores every degree at
+    once: padded coefficients contribute nothing to either form)."""
+    gram, vty, yty, _ = _broadcast_moments(m, coeffs)
+    quad = jnp.einsum("...j,...jk,...k->...", coeffs, gram, coeffs)
+    cross = jnp.einsum("...j,...j->...", coeffs, vty)
+    return yty - 2.0 * cross + quad
 
 
 def report_from_moments(m: moments_lib.Moments,
@@ -269,13 +334,13 @@ def report_from_moments(m: moments_lib.Moments,
     Every sum ``fit_report`` needs is a linear/quadratic form in the
     moments: Σwf = aᵀ·G[0,:], Σwf² = aᵀG a, Σwyf = aᵀB, Σwy = B[0],
     Σwy² = yᵀy, Σw = weight_sum — so the fit-serving engine reports
-    quality without ever re-reading the data."""
-    sw = m.weight_sum
-    sf = jnp.einsum("...j,...j->...", coeffs, m.gram[..., 0, :])
-    sff = jnp.einsum("...j,...jk,...k->...", coeffs, m.gram, coeffs)
-    syf = jnp.einsum("...j,...j->...", coeffs, m.vty)
-    sy = m.vty[..., 0]
-    syy = m.yty
+    quality without ever re-reading the data.  Like ``sse_from_moments``,
+    ``coeffs`` may carry a trailing degree-ladder axis."""
+    gram, vty, syy, sw = _broadcast_moments(m, coeffs)
+    sf = jnp.einsum("...j,...j->...", coeffs, gram[..., 0, :])
+    sff = jnp.einsum("...j,...jk,...k->...", coeffs, gram, coeffs)
+    syf = jnp.einsum("...j,...j->...", coeffs, vty)
+    sy = vty[..., 0]
     sse = syy - 2.0 * syf + sff
     cov = syf - sy * sf / sw
     var_y = syy - sy * sy / sw

@@ -73,6 +73,21 @@ class Moments:
         eye = jnp.eye(self.degree + 1, dtype=self.gram.dtype)
         return dataclasses.replace(self, gram=self.gram + ridge * eye)
 
+    def truncate(self, degree: int) -> "Moments":
+        """The degree-``degree`` sufficient statistics nested inside this
+        state: leading (degree+1)×(degree+1) Gram submatrix, leading
+        (degree+1) slice of Vᵀy; yty/count/weight_sum are degree-free and
+        shared.  Exact for the monomial and Chebyshev bases (column k of V
+        depends only on k), which is what makes a single degree-M
+        accumulation carry the *whole* ladder d = 0..M — the basis of
+        ``repro.select``'s one-pass model selection."""
+        if not 0 <= degree <= self.degree:
+            raise ValueError(f"cannot truncate degree-{self.degree} moments "
+                             f"to degree {degree}")
+        m1 = degree + 1
+        return dataclasses.replace(self, gram=self.gram[..., :m1, :m1],
+                                   vty=self.vty[..., :m1])
+
     @staticmethod
     def zeros(degree: int, batch: tuple[int, ...] = (), dtype=jnp.float32) -> "Moments":
         m1 = degree + 1

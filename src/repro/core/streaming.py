@@ -25,14 +25,55 @@ from repro.core import moments as moments_lib
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class StreamState:
+    """Running moments (+ optional k-fold partials for online selection).
+
+    ``cv_folds > 0`` at creation adds per-fold partial moments (leading
+    fold axis) maintained for free: each incoming chunk's moments are
+    computed once and folded into BOTH the total and one fold, assigned
+    round-robin per chunk (``fold_index``).  That is what lets
+    ``current_selection()`` run moment-space k-fold CV over the whole
+    degree ladder at any time with zero re-reads of the stream."""
+
     moments: moments_lib.Moments
     decay: jax.Array  # scalar in (0, 1]; 1.0 = plain accumulation
+    fold_moments: moments_lib.Moments | None = None  # (k, ...batch) partials
+    fold_index: jax.Array | None = None              # next fold, round-robin
 
     @staticmethod
     def create(degree: int, batch: tuple[int, ...] = (), *, decay: float = 1.0,
-               dtype=jnp.float32) -> "StreamState":
+               dtype=jnp.float32, cv_folds: int = 0) -> "StreamState":
+        folds = (moments_lib.Moments.zeros(degree, (cv_folds,) + batch, dtype)
+                 if cv_folds >= 2 else None)
+        idx = jnp.zeros((), jnp.int32) if cv_folds >= 2 else None
         return StreamState(moments_lib.Moments.zeros(degree, batch, dtype),
-                           jnp.asarray(decay, dtype))
+                           jnp.asarray(decay, dtype), folds, idx)
+
+    def current_selection(self, *, criterion: str | None = None,
+                          ridge: float = 0.0, solver: str = "auto",
+                          fallback: str | None = "svd",
+                          basis: str = basis_lib.MONOMIAL):
+        """The running best degree (and the whole scored ladder) so far.
+
+        Solves the degree ladder 0..degree on the accumulated O(m²) state
+        — AIC/AICc/BIC/GCV always, k-fold CV when the state was created
+        with ``cv_folds`` — and returns a ``repro.select.Selection``.
+        ``criterion`` defaults to "cv" when folds exist, else "aicc".
+        O(m²)-state work only: cost independent of how much data has
+        streamed past."""
+        from repro import select as select_lib
+        m = self.moments.regularized(ridge) if ridge else self.moments
+        if criterion is None:
+            criterion = "cv" if self.fold_moments is not None else "aicc"
+        if criterion == "cv" and self.fold_moments is None:
+            raise ValueError("criterion='cv' needs StreamState.create(..., "
+                             "cv_folds=k)")
+        sweep = select_lib.sweep_from_moments(
+            m, fold_moments=self.fold_moments,
+            score_moments=self.moments if ridge else None, solver=solver,
+            fallback=fallback, basis=basis)
+        return select_lib.selection_from_sweep(sweep, criterion, basis=basis,
+                                               solver=solver,
+                                               fallback=fallback)
 
 
 @partial(jax.jit, static_argnames=("basis", "engine", "use_kernel"))
@@ -75,7 +116,19 @@ def update(state: StreamState, x: jax.Array, y: jax.Array, *,
     m = state.moments
     old = dataclasses.replace(
         jax.tree.map(lambda a: a * g, m), count=m.count)
-    return StreamState(old + new, state.decay)
+    if state.fold_moments is None:
+        return StreamState(old + new, state.decay)
+    # the chunk's moments are already in hand — fold them into one fold
+    # partial as well (round-robin per chunk): the k-fold CV state costs
+    # zero extra passes.  Decay applies to fold partials exactly as to the
+    # total (count exempt, as above).
+    k = state.fold_moments.gram.shape[0]
+    folds_old = dataclasses.replace(
+        jax.tree.map(lambda a: a * g, state.fold_moments),
+        count=state.fold_moments.count)
+    idx = state.fold_index % k
+    folds = jax.tree.map(lambda f, a: f.at[idx].add(a), folds_old, new)
+    return StreamState(old + new, state.decay, folds, state.fold_index + 1)
 
 
 def _decay_weights(state: StreamState, x: jax.Array,

@@ -9,6 +9,7 @@ fitting entry point (``core.polyfit``, ``core.fit_report_streamed``,
 from repro.engine.plan import (FitPlan, NumericsPolicy, plan_fit,
                                compute_moments, compute_report_sums,
                                resolve_engine, resolve_numerics,
+                               reset_moment_counter, moment_counter,
                                REFERENCE, KERNEL_PLAIN, KERNEL_PACKED,
                                PATHS, ENGINES, SOLVERS,
                                PACKED_MIN_BATCH, KERNEL_MIN_POINTS,
@@ -18,7 +19,7 @@ from repro.engine.plan import (FitPlan, NumericsPolicy, plan_fit,
 __all__ = [
     "FitPlan", "NumericsPolicy", "plan_fit",
     "compute_moments", "compute_report_sums", "resolve_engine",
-    "resolve_numerics",
+    "resolve_numerics", "reset_moment_counter", "moment_counter",
     "REFERENCE", "KERNEL_PLAIN", "KERNEL_PACKED", "PATHS", "ENGINES",
     "SOLVERS", "PACKED_MIN_BATCH", "KERNEL_MIN_POINTS",
     "AUTO_NORMALIZE_DEGREE_F32", "AUTO_NORMALIZE_DEGREE_F64",

@@ -39,6 +39,7 @@ chebyshev basis on the kernel route.
 from __future__ import annotations
 
 import dataclasses
+import math
 import warnings
 from typing import Any
 
@@ -243,16 +244,21 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
     caller).  ``mesh``/``data_axes``: the active mesh — ``shape`` is then the
     per-shard shape and the plan is marked distributed.  ``backend``
     overrides ``jax.default_backend()`` (tests / what-if planning).
-    ``workload``: "moments" (Gram accumulation), "report" (fused
-    evaluate/residual pass — no packed variant, and it is the only one-pass
-    option so monomial fits take it on every backend), or "lspia" (the
-    matrix-free iterative fit: no Gram at all, always the reference basis
-    ops).  ``solver``/``fallback``/``cond_cap`` resolve the normal-equation
-    solve policy (see ``resolve_numerics``) and ride in ``plan.numerics``.
+    ``workload``: "moments" (Gram accumulation), "select" (the degree-sweep
+    accumulation of ``repro.select`` — identical path logic to "moments":
+    the fold/candidate axis is an ordinary series batch, so the packed
+    Pallas kernel picks it up on TPU; the numerics policy is resolved at
+    the MAX candidate degree, where conditioning is worst), "report"
+    (fused evaluate/residual pass — no packed variant, and it is the only
+    one-pass option so monomial fits take it on every backend), or "lspia"
+    (the matrix-free iterative fit: no Gram at all, always the reference
+    basis ops).  ``solver``/``fallback``/``cond_cap`` resolve the
+    normal-equation solve policy (see ``resolve_numerics``) and ride in
+    ``plan.numerics``.
     """
     if engine not in ENGINES:
         raise ValueError(f"engine={engine!r}; expected one of {ENGINES}")
-    if workload not in ("moments", "report", "lspia"):
+    if workload not in ("moments", "select", "report", "lspia"):
         raise ValueError(f"workload={workload!r}")
     if not shape:
         raise ValueError("x/y must have at least one (series) axis")
@@ -352,12 +358,33 @@ def plan_fit(shape: tuple[int, ...], degree: int, *,
                    **common)
 
 
+# instrumented counter on moment-producing calls — the "exactly one data
+# pass" contract of repro.select is asserted against it.  Counts every
+# compute_moments invocation and the points it touches; under jit the
+# increment happens at trace time, i.e. it counts moment-producing
+# *computations in the traced program* — one accumulation in the compiled
+# graph is one tick, which is precisely the pass count that matters.
+_MOMENT_COUNTER = {"calls": 0, "points": 0}
+
+
+def reset_moment_counter() -> None:
+    _MOMENT_COUNTER["calls"] = 0
+    _MOMENT_COUNTER["points"] = 0
+
+
+def moment_counter() -> dict:
+    """Snapshot of the moment-pass counter: {"calls": int, "points": int}."""
+    return dict(_MOMENT_COUNTER)
+
+
 def compute_moments(plan: FitPlan, x: jax.Array, y: jax.Array,
                     weights: jax.Array | None = None):
     """Execute a plan's moment accumulation.  Returns ``core.Moments``.
 
     ``x``/``y`` must already be domain-mapped if ``plan.numerics.normalize``
     (the Domain lives with the caller, next to the solve)."""
+    _MOMENT_COUNTER["calls"] += 1
+    _MOMENT_COUNTER["points"] += math.prod(x.shape)
     if plan.uses_kernel:
         from repro.kernels import ops as kernel_ops
         return kernel_ops.moments(

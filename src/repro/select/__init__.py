@@ -1,0 +1,32 @@
+"""Automatic model selection from a single data pass (``repro.select``).
+
+The paper matricizes one fit into additive O(m²) sufficient statistics;
+this subsystem matricizes *model selection*: because the degree-M state
+nests every lower degree (``Moments.truncate``), one accumulation carries
+the whole ladder d = 0..M — per-degree condition-aware solves, moment-space
+information criteria, and k-fold cross-validation by fold subtraction —
+with no refits and no extra passes over the data.
+
+Entry points:
+
+* ``select_degree(x, y, max_degree=...)``  — one-pass search over raw data;
+* ``core.polyfit(..., degree="auto" | DegreeSearch(...))`` — same, inline;
+* ``sweep_from_moments`` / ``solve_ladder`` — from an existing state
+  (streaming ``current_selection``, the fit server's auto-degree requests,
+  ``core.make_distributed_select`` on a mesh).
+"""
+from repro.select.criteria import (ScoreTable, score_table, best_degree,
+                                   CRITERIA, MOMENT_CRITERIA)
+from repro.select.sweep import (SweepResult, DegreeSearch, Selection,
+                                solve_ladder, sweep_from_moments,
+                                selection_from_sweep, select_degree)
+from repro.select.crossval import (fold_moments, sum_folds,
+                                   complement_moments, cv_scores)
+
+__all__ = [
+    "ScoreTable", "score_table", "best_degree", "CRITERIA",
+    "MOMENT_CRITERIA",
+    "SweepResult", "DegreeSearch", "Selection", "solve_ladder",
+    "sweep_from_moments", "selection_from_sweep", "select_degree",
+    "fold_moments", "sum_folds", "complement_moments", "cv_scores",
+]

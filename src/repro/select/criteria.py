@@ -1,0 +1,151 @@
+"""Model-selection criteria computed purely from moment-space quantities.
+
+Every criterion here is a function of (SSE_d, n, k_d) — the per-degree
+residual sum of squares, the number of contributing points, and the
+parameter count k_d = d + 1 — plus the degree-free total sum of squares
+for R².  All of those come from the O(m²) sufficient statistics alone
+(``core.fit.sse_from_moments`` over the zero-padded coefficient ladder),
+so scoring the whole ladder costs O(M·m²) with **zero** passes over the
+data: exactly the paper's "matricize so it scales" move applied to model
+selection instead of to a single fit.
+
+Criteria (classic definitions, Gaussian-likelihood form):
+
+* ``sse``   raw Σe² — monotone non-increasing in degree, never selects;
+* ``r2``    1 − SSE/SST — monotone too, reported for the tables;
+* ``aic``   n·ln(SSE/n) + 2k;
+* ``aicc``  AIC + 2k(k+1)/(n−k−1) — the small-sample correction, +inf
+            once n ≤ k + 1 (an honest "not enough data for this degree");
+* ``bic``   n·ln(SSE/n) + k·ln(n) — consistent: picks the true degree
+            with probability → 1 as n grows;
+* ``gcv``   (SSE/n) / (1 − k/n)² — leave-one-out CV's rotation-invariant
+            approximation, no folds needed;
+* ``cv``    k-fold held-out SSE (PRESS), accumulated in moment space by
+            ``repro.select.crossval`` — the only entry that needs fold
+            partials, and still zero extra data passes.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# criteria that SELECT a degree (argmin).  "sse"/"r2" are reported but
+# monotone in degree; "cv" additionally needs fold moments.
+CRITERIA = ("aic", "aicc", "bic", "gcv", "cv")
+MOMENT_CRITERIA = ("aic", "aicc", "bic", "gcv")   # no folds required
+REPORTED = ("sse", "r2") + CRITERIA
+
+# "cv" parsimony rule: degrees whose paired held-out deficit vs the CV
+# minimum is below CV_TCRIT × its paired standard error count as TIES and
+# the smallest wins.  This is the ESL one-SE rule sized as a paired
+# t-test: with the usual small fold counts (k−1 ≈ 4 dof) a ~98%
+# one-sided threshold sits near t = 3, and the measured selection table
+# (EXPERIMENTS.md §Degree selection) shows t = 1 still overfits on flat
+# CV curves while t = 3 recovers the planted degree without underfitting
+# well-posed signals.
+CV_TCRIT = 3.0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ScoreTable:
+    """Per-degree scores, ladder axis last: every field is (..., M+1).
+
+    ``cv`` is the k-fold held-out SSE when fold moments were available,
+    else +inf (so ``best_degree(..., "cv")`` on a fold-less sweep is a
+    loud degenerate answer — degree 0 everywhere — rather than a wrong
+    quiet one; callers validate the criterion up front).  ``cv_se`` is
+    the across-fold standard error of ``cv``, which drives the
+    one-standard-error selection rule."""
+
+    sse: jax.Array
+    r2: jax.Array
+    aic: jax.Array
+    aicc: jax.Array
+    bic: jax.Array
+    gcv: jax.Array
+    cv: jax.Array
+    cv_se: jax.Array
+
+    @property
+    def max_degree(self) -> int:
+        return self.sse.shape[-1] - 1
+
+    def by_name(self, criterion: str) -> jax.Array:
+        if criterion not in REPORTED:
+            raise ValueError(f"criterion={criterion!r}; expected one of "
+                             f"{REPORTED}")
+        return getattr(self, criterion)
+
+
+def _safe_log_mean_sse(sse: jax.Array, n: jax.Array) -> jax.Array:
+    """ln(SSE/n) with exact-interpolation states clamped to the dtype
+    floor instead of -inf (a noiseless planted polynomial hits SSE == 0
+    at the true degree; the penalty terms must still order the ladder)."""
+    tiny = jnp.asarray(jnp.finfo(sse.dtype).tiny, sse.dtype)
+    return jnp.log(jnp.maximum(sse, tiny) / jnp.maximum(n, 1.0))
+
+
+def score_table(sse: jax.Array, n: jax.Array, sst: jax.Array,
+                cv: jax.Array | None = None,
+                cv_se: jax.Array | None = None) -> ScoreTable:
+    """Assemble every criterion for a ladder of SSEs.
+
+    ``sse``: (..., M+1) per-degree residual sums; ``n``: (...,) contributing
+    points; ``sst``: (...,) centered total sum of squares (Σw(y−ȳ)², from
+    moments: yty − (Σwy)²/Σw); ``cv``: optional (..., M+1) held-out SSE.
+    Degrees whose parameter count exhausts the data (n ≤ k, or n ≤ k+1 for
+    AICc's correction) score +inf — underdetermined fits never win.
+    """
+    m1 = sse.shape[-1]
+    k = jnp.arange(1, m1 + 1, dtype=sse.dtype)        # params at degree d
+    n = jnp.asarray(n, sse.dtype)[..., None]
+    inf = jnp.asarray(jnp.inf, sse.dtype)
+    log_ms = _safe_log_mean_sse(sse, n)
+    aic = n * log_ms + 2.0 * k
+    dof = n - k - 1.0
+    aicc = jnp.where(dof > 0, aic + 2.0 * k * (k + 1.0)
+                     / jnp.where(dof > 0, dof, 1.0), inf)
+    bic = n * log_ms + k * jnp.log(jnp.maximum(n, 1.0))
+    shrink = 1.0 - k / jnp.maximum(n, 1.0)
+    gcv = jnp.where(shrink > 0,
+                    (sse / jnp.maximum(n, 1.0))
+                    / jnp.where(shrink > 0, shrink, 1.0) ** 2, inf)
+    underdet = n <= k
+    aic = jnp.where(underdet, inf, aic)
+    bic = jnp.where(underdet, inf, bic)
+    sst_pos = jnp.maximum(jnp.asarray(sst, sse.dtype)[..., None],
+                          jnp.finfo(sse.dtype).tiny)
+    r2 = 1.0 - sse / sst_pos
+    if cv is None:
+        cv = jnp.full_like(sse, jnp.inf)
+    if cv_se is None:
+        cv_se = jnp.zeros_like(sse)
+    return ScoreTable(sse=sse, r2=r2, aic=aic, aicc=aicc, bic=bic,
+                      gcv=gcv, cv=cv, cv_se=cv_se)
+
+
+def best_degree(scores: ScoreTable, criterion: str = "aicc") -> jax.Array:
+    """The selected degree under a criterion, over the ladder axis: int32.
+
+    Information criteria take the plain argmin (ties break toward the
+    LOWER degree — jnp's first-hit rule, the parsimony direction).  "cv"
+    takes the SMALLEST degree whose paired held-out deficit vs the CV
+    minimum is statistically insignificant (< ``CV_TCRIT`` × paired SE) —
+    past the true degree the held-out curve is flat and pure argmin
+    follows fold noise into overfitting (ESL §7.10's one-SE rule, sized
+    as a paired t-test for small fold counts)."""
+    if criterion not in CRITERIA:
+        raise ValueError(
+            f"criterion={criterion!r} cannot select a degree; pick one of "
+            f"{CRITERIA} ('sse'/'r2' are monotone in degree)")
+    vals = scores.by_name(criterion)
+    if criterion == "cv":
+        # vals − vmin is exactly the mean paired difference (sum scale),
+        # cv_se its per-degree paired standard error
+        vmin = jnp.min(vals, axis=-1, keepdims=True)
+        within = vals <= vmin + CV_TCRIT * scores.cv_se
+        return jnp.argmax(within, axis=-1).astype(jnp.int32)
+    return jnp.argmin(vals, axis=-1).astype(jnp.int32)

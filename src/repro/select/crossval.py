@@ -1,0 +1,121 @@
+"""k-fold cross-validation entirely in moment space — zero extra data passes.
+
+The additive-moments property does all the work: partition the points into
+K folds (round-robin), accumulate each fold's own ``Moments`` partial sum —
+ONE batched accumulation call over a (K, n/K) layout, every point touched
+exactly once — and then
+
+* the training state of fold j is a *subtraction*: ``total − fold_j``
+  (O(m²) arithmetic, no refit over data);
+* the held-out score of fold j is ``sse_from_moments(fold_j, coeffs)`` —
+  the fold's own (gram, vty, yty) is a complete scorer for any coefficient
+  vector.
+
+So K-fold CV over the whole degree ladder costs O(K·m²) state and
+O(K·M⁴) tiny solves, independent of n.  Distributed, the fold partials
+just psum like any other moments (``core.distributed``): fold identity is
+preserved across shards because addition is, making CV mesh-parallel with
+one O(K·m²) collective.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import basis as basis_lib
+from repro.core import fit as fit_lib
+from repro.core import moments as moments_lib
+
+
+def fold_moments(x: jax.Array, y: jax.Array, k: int, degree: int, *,
+                 weights: jax.Array | None = None,
+                 basis: str = basis_lib.MONOMIAL,
+                 engine: str = "auto",
+                 accum_dtype=None,
+                 plan=None) -> moments_lib.Moments:
+    """Per-fold moment partials with a leading fold axis (k, ..., m+1, m+1).
+
+    Point i goes to fold ``i % k`` (round-robin keeps every fold's x-range
+    representative even for sorted input — the failure mode of contiguous
+    blocks).  The tail is zero-weight padded; the fold axis rides as a
+    leading batch axis through ONE ``compute_moments`` call, so the packed
+    Pallas kernel accumulates all folds in the same pass it would have
+    spent on a plain fit.  ``x`` must already be domain-mapped (the Domain
+    lives with the caller, as everywhere in the engine layer)."""
+    from repro import engine as engine_lib
+    if k < 2:
+        raise ValueError(f"k-fold CV needs k >= 2, got {k}")
+    n = x.shape[-1]
+    nper = -(-n // k)
+    pad = nper * k - n
+    spec = [(0, 0)] * (x.ndim - 1) + [(0, pad)]
+    w = jnp.ones_like(x) if weights is None else weights
+    xp = jnp.pad(x, spec)
+    yp = jnp.pad(y, spec)
+    wp = jnp.pad(w, spec)          # padding carries weight 0: contributes 0
+    # (..., nper*k) -> (..., nper, k) -> fold axis to the front
+    fold_shape = x.shape[:-1] + (nper, k)
+    to_folds = lambda a: jnp.moveaxis(a.reshape(fold_shape), -1, 0)
+    if plan is None:
+        plan = engine_lib.plan_fit(
+            (k,) + x.shape[:-1] + (nper,), degree, basis=basis,
+            dtype=x.dtype, weighted=True, engine=engine,
+            accum_dtype=accum_dtype, workload="select")
+    return engine_lib.compute_moments(plan, to_folds(xp), to_folds(yp),
+                                      to_folds(wp))
+
+
+def sum_folds(folds: moments_lib.Moments) -> moments_lib.Moments:
+    """Collapse the leading fold axis: the total-state the sweep solves."""
+    return jax.tree.map(lambda a: jnp.sum(a, axis=0), folds)
+
+
+def complement_moments(folds: moments_lib.Moments,
+                       total: moments_lib.Moments | None = None
+                       ) -> moments_lib.Moments:
+    """Training state of every fold at once: ``total − fold_j``, batched
+    over the fold axis.  The subtraction IS the refit-avoidance — the
+    K training sets' sufficient statistics for free."""
+    if total is None:
+        total = sum_folds(folds)
+    return jax.tree.map(lambda t, f: t - f, total, folds)
+
+
+def cv_scores(folds: moments_lib.Moments, *,
+              solver: str = "auto",
+              fallback: str | None = "svd",
+              cond_cap: float | None = None,
+              basis: str = basis_lib.MONOMIAL,
+              normalized: bool = False):
+    """k-fold held-out SSE (PRESS) + its standard error, per ladder rung.
+
+    For each fold: solve the ladder on ``total − fold`` (condition-aware,
+    batched over the fold axis), score the held-out SSE from the fold's
+    own (gram, vty, yty), sum over folds.  Matches explicit held-out
+    refits to fp tolerance — asserted by ``tests/test_select.py``.
+
+    Returns ``(press, se)``, both (..., M+1): ``se[d]`` is the standard
+    error (Bessel-corrected, √k·std_{ddof=1} on the sum scale) of the
+    PAIRED per-fold difference ``h_j[d] − h_j[argmin]`` — the statistic
+    behind the parsimony rule in ``criteria.best_degree``.  Pairing by
+    fold cancels the fold-content variance that inflates an unpaired SE:
+    past the true degree the held-out curve is flat and pure argmin
+    follows fold noise into overfitting, while degrees genuinely worse
+    than the minimum show a systematic paired deficit in every fold (the
+    one-SE-rule idea of ESL §7.10, sized as a paired t-test because k is
+    small — see ``criteria.CV_TCRIT``)."""
+    from repro.select import sweep as sweep_lib
+    train = complement_moments(folds)
+    coeffs, _, _ = sweep_lib.solve_ladder(train, solver=solver,
+                                          fallback=fallback,
+                                          cond_cap=cond_cap, basis=basis,
+                                          normalized=normalized)
+    held = fit_lib.sse_from_moments(folds, coeffs)   # (k, ..., M+1)
+    k = held.shape[0]
+    press = jnp.sum(held, axis=0)
+    imin = jnp.argmin(press, axis=-1)
+    hmin = jnp.take_along_axis(held, imin[None, ..., None], axis=-1)
+    diff = held - hmin
+    se = jnp.std(diff, axis=0, ddof=1) * jnp.sqrt(
+        jnp.asarray(float(k), held.dtype))
+    return press, se

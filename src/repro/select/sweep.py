@@ -1,0 +1,280 @@
+"""Single-pass degree sweep: the whole ladder d = 0..M from ONE accumulation.
+
+The degree-M Gram/moment state *contains* every lower-degree state as a
+leading submatrix/prefix (``Moments.truncate``), because column k of the
+Vandermonde depends only on k for the monomial and Chebyshev bases.  So the
+paper's one heavy step — the O(n·m²) moment accumulation — is paid once at
+the maximum candidate degree, and the entire model-selection problem is then
+solved on the O(M²) sufficient statistics:
+
+* ``solve_ladder``       one condition-aware ``solve_with_fallback`` per
+                         rung (solver picked per degree when "auto" —
+                         low rungs take GE, high rungs escalate exactly as
+                         ``core.solve.select_solver`` prescribes), results
+                         zero-padded into a (M+1, M+1) coefficient ladder;
+* ``sweep_from_moments`` scores every rung with SSE/R²/AIC/AICc/BIC/GCV
+                         (and k-fold CV when fold partials are supplied)
+                         computed purely from moments;
+* ``select_degree``      the top-level one-pass entry point over raw data;
+* ``DegreeSearch``       the hashable spec ``core.polyfit`` accepts as
+                         ``degree=`` for automatic selection.
+
+Cost: one data pass + O(M·m²) state + an O(M⁴) stack of tiny solves —
+versus M+1 full refits (M+1 data passes) for the naive sweep.  The bench
+row ``select_sweep`` measures the gap.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import basis as basis_lib
+from repro.core import fit as fit_lib
+from repro.core import moments as moments_lib
+from repro.core import solve as solve_lib
+from repro.select import criteria
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SweepResult:
+    """Every degree's fit + score from one moment state.
+
+    ``coeffs[..., d, :]`` is the degree-d solution zero-padded to M+1
+    entries (padding contributes nothing when evaluated or scored, so the
+    ladder is directly usable in batched expressions); ``condition`` /
+    ``fallback_used`` are the per-rung solve diagnostics on the TRUNCATED
+    Gram — the honest per-degree κ, not the max-degree one."""
+
+    coeffs: jax.Array           # (..., M+1, M+1) zero-padded ladder
+    condition: jax.Array        # (..., M+1) κ(truncated Gram) per degree
+    fallback_used: jax.Array    # (..., M+1) bool, rescue engaged per degree
+    scores: criteria.ScoreTable
+
+    @property
+    def max_degree(self) -> int:
+        return self.coeffs.shape[-1] - 1
+
+    def best(self, criterion: str = "aicc") -> jax.Array:
+        return criteria.best_degree(self.scores, criterion)
+
+
+@dataclasses.dataclass(frozen=True)
+class DegreeSearch:
+    """Hashable spec for ``polyfit(..., degree=DegreeSearch(...))``.
+
+    ``degree="auto"`` is shorthand for ``DegreeSearch()``.  ``criterion``
+    None resolves to "cv" when ``folds >= 2``, else "aicc"."""
+
+    max_degree: int = 8
+    folds: int = 5
+    criterion: str | None = None
+    solver: str = "auto"
+    fallback: str | None = "svd"
+    cond_cap: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    """Host-side result of a degree search (not a pytree).
+
+    ``poly`` is the winning fit ready to evaluate: for unbatched input its
+    coefficient vector is sliced to the chosen degree; for batched input
+    (per-series winners may differ) it keeps the zero-padded M+1 layout,
+    which evaluates identically."""
+
+    sweep: SweepResult
+    best_degree: int | np.ndarray
+    criterion: str
+    poly: fit_lib.Polynomial
+
+
+def solve_ladder(m: moments_lib.Moments, *, solver: str = "auto",
+                 fallback: str | None = "svd",
+                 cond_cap: float | None = None,
+                 basis: str = basis_lib.MONOMIAL,
+                 normalized: bool = False):
+    """Solve all nested normal-equation systems d = 0..m.degree.
+
+    Returns ``(coeffs, condition, fallback_used)`` with a ladder axis at
+    -2 / -1.  Each rung is a ``solve_with_fallback`` on the truncated Gram
+    — condition-aware per degree, vectorized over any batch axes of ``m``
+    (fold axes, slot pools, series batches).  ``solver="auto"`` re-picks
+    the static rung per degree via ``core.solve.select_solver``."""
+    max_degree = m.degree
+    coeffs, conds, used = [], [], []
+    for d in range(max_degree + 1):
+        mt = m.truncate(d)
+        rung = (solve_lib.select_solver(d, m.gram.dtype, basis=basis,
+                                        normalized=normalized)
+                if solver == "auto" else solver)
+        c, cond, fb = solve_lib.solve_with_fallback(
+            mt.gram, mt.vty, method=rung, fallback=fallback,
+            cond_cap=cond_cap)
+        pad = [(0, 0)] * (c.ndim - 1) + [(0, max_degree - d)]
+        coeffs.append(jnp.pad(c, pad))
+        conds.append(cond)
+        used.append(fb)
+    return (jnp.stack(coeffs, axis=-2), jnp.stack(conds, axis=-1),
+            jnp.stack(used, axis=-1))
+
+
+def sweep_from_moments(m: moments_lib.Moments, *,
+                       fold_moments: moments_lib.Moments | None = None,
+                       score_moments: moments_lib.Moments | None = None,
+                       solver: str = "auto",
+                       fallback: str | None = "svd",
+                       cond_cap: float | None = None,
+                       basis: str = basis_lib.MONOMIAL,
+                       normalized: bool = False) -> SweepResult:
+    """The full degree sweep from one degree-M moment state.
+
+    ``fold_moments`` (leading fold axis, summing to ``m`` up to any
+    regularization applied to ``m``) enables the "cv" column: k-fold
+    held-out SSE computed entirely in moment space
+    (``repro.select.crossval``).  ``score_moments`` splits the solve from
+    the scoring: ridge-stabilized callers (streaming, the fit server's
+    pooled slots) solve the ladder on the regularized ``m`` but must
+    score on the RAW state, else every SSE — and the criteria built on it
+    — is inflated by λ‖a‖² and disagrees with the fixed-degree report
+    path.  Everything is O(M·m²) on sufficient statistics — zero passes
+    over data."""
+    coeffs, cond, fb = solve_ladder(m, solver=solver, fallback=fallback,
+                                    cond_cap=cond_cap, basis=basis,
+                                    normalized=normalized)
+    ms = score_moments if score_moments is not None else m
+    sse = fit_lib.sse_from_moments(ms, coeffs)
+    sw = jnp.maximum(ms.weight_sum, jnp.finfo(ms.gram.dtype).tiny)
+    sst = ms.yty - ms.vty[..., 0] ** 2 / sw
+    cv = cv_se = None
+    if fold_moments is not None:
+        from repro.select import crossval
+        cv, cv_se = crossval.cv_scores(fold_moments, solver=solver,
+                                       fallback=fallback, cond_cap=cond_cap,
+                                       basis=basis, normalized=normalized)
+    scores = criteria.score_table(sse, ms.count, sst, cv, cv_se)
+    return SweepResult(coeffs=coeffs, condition=cond, fallback_used=fb,
+                       scores=scores)
+
+
+_JIT_SWEEP = partial(jax.jit, static_argnames=(
+    "solver", "fallback", "cond_cap", "basis", "normalized"))(
+        lambda m, fold_moments, solver, fallback, cond_cap, basis,
+        normalized: sweep_from_moments(
+            m, fold_moments=fold_moments, solver=solver, fallback=fallback,
+            cond_cap=cond_cap, basis=basis, normalized=normalized))
+
+
+def selection_from_sweep(sweep: SweepResult, criterion: str, *,
+                         domain: basis_lib.Domain | None = None,
+                         basis: str = basis_lib.MONOMIAL,
+                         solver: str = "auto",
+                         fallback: str | None = "svd") -> Selection:
+    """Pick the winner out of a sweep and package it as a ``Polynomial``.
+
+    Host-side (reads the argmin back): the eager tail of the selection
+    entry points.  Batched sweeps keep the zero-padded coefficient layout
+    with per-series winners gathered along the ladder axis."""
+    best = sweep.best(criterion)
+    dom = domain or basis_lib.Domain.identity(sweep.coeffs.dtype)
+    if best.ndim == 0:
+        b = int(best)
+        coeffs = sweep.coeffs[..., b, :b + 1]
+        cond = sweep.condition[..., b]
+        fb = sweep.fallback_used[..., b]
+        best_out: int | np.ndarray = b
+    else:
+        coeffs = jnp.take_along_axis(
+            sweep.coeffs, best[..., None, None], axis=-2)[..., 0, :]
+        cond = jnp.take_along_axis(sweep.condition, best[..., None],
+                                   axis=-1)[..., 0]
+        fb = jnp.take_along_axis(sweep.fallback_used, best[..., None],
+                                 axis=-1)[..., 0]
+        best_out = np.asarray(best)
+    diag = fit_lib.FitDiagnostics(condition=cond, fallback_used=fb,
+                                  solver=solver, fallback=fallback or "none")
+    poly = fit_lib.Polynomial(coeffs=coeffs, domain_shift=dom.shift,
+                              domain_scale=dom.scale, basis=basis,
+                              diagnostics=diag)
+    return Selection(sweep=sweep, best_degree=best_out, criterion=criterion,
+                     poly=poly)
+
+
+def select_degree(x: jax.Array, y: jax.Array, max_degree: int = 8, *,
+                  folds: int = 5,
+                  criterion: str | None = None,
+                  weights: jax.Array | None = None,
+                  basis: str = basis_lib.MONOMIAL,
+                  normalize: bool | None = None,
+                  engine: str = "auto",
+                  solver: str = "auto",
+                  fallback: str | None = "svd",
+                  cond_cap: float | None = None,
+                  accum_dtype: Any = None) -> Selection:
+    """Pick the polynomial degree analytically from ONE pass over the data.
+
+    One degree-``max_degree`` moment accumulation (k-fold partials when
+    ``folds >= 2``, assigned round-robin so every point is touched exactly
+    once) feeds the whole ladder: per-degree condition-aware solves,
+    SSE/R²/AIC/AICc/BIC/GCV, and moment-space k-fold CV.  The plan layer
+    (``workload="select"``) routes the accumulation exactly like a fit —
+    the packed Pallas kernel picks up the fold axis as a series batch on
+    TPU.
+
+    ``criterion`` defaults to "cv" (with folds) / "aicc" (without);
+    ``normalize=None`` lets the numerics policy auto-normalize at the
+    degrees where a raw-domain Gram is unsalvageable (the decision is made
+    once, at ``max_degree`` — the rung where conditioning is worst).
+
+    Eager by design (the winning degree is read back to slice the
+    coefficients): the moment pass and the ladder solve are jitted
+    internally; only the tiny argmin crosses to the host.
+    """
+    from repro import engine as engine_lib
+    from repro.select import crossval
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    folds = int(folds)
+    if criterion is None:
+        criterion = "cv" if folds >= 2 else "aicc"
+    if criterion == "cv" and folds < 2:
+        raise ValueError("criterion='cv' needs folds >= 2")
+    if criterion not in criteria.CRITERIA:
+        raise ValueError(f"criterion={criterion!r}; expected one of "
+                         f"{criteria.CRITERIA}")
+
+    batch = x.shape[:-1]
+    if folds >= 2:
+        plan_shape = (folds,) + batch + (-(-x.shape[-1] // folds),)
+    else:
+        plan_shape = x.shape
+    plan = engine_lib.plan_fit(
+        plan_shape, max_degree, basis=basis, dtype=x.dtype,
+        weighted=folds >= 2 or weights is not None, engine=engine,
+        accum_dtype=accum_dtype, normalize=bool(normalize or False),
+        solver=solver if solver != "auto" else "auto", fallback=fallback,
+        cond_cap=cond_cap, workload="select")
+    pol = plan.numerics
+    do_norm = pol.normalize if normalize is None else bool(normalize)
+    dom = (basis_lib.Domain.from_data(x) if do_norm
+           else basis_lib.Domain.identity(x.dtype))
+    xt = dom.apply(x)
+
+    if folds >= 2:
+        fold_m = crossval.fold_moments(xt, y, folds, max_degree,
+                                       weights=weights, basis=basis,
+                                       plan=plan)
+        total = crossval.sum_folds(fold_m)
+    else:
+        fold_m = None
+        total = engine_lib.compute_moments(plan, xt, y, weights)
+
+    sweep = _JIT_SWEEP(total, fold_m, solver, fallback, cond_cap, basis,
+                       do_norm)
+    return selection_from_sweep(sweep, criterion, domain=dom, basis=basis,
+                                solver=solver, fallback=fallback)

@@ -36,6 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import select as select_lib
 from repro.core import fit as fit_lib
 from repro.core import moments as moments_lib
 from repro.core import streaming
@@ -43,17 +44,28 @@ from repro.core import streaming
 
 @dataclasses.dataclass
 class FitRequest:
-    """One fit job: a ragged series in, a polynomial + quality report out."""
+    """One fit job: a ragged series in, a polynomial + quality report out.
+
+    ``auto=True`` requests (``submit(..., degree="auto")``) come back with
+    the *chosen* degree plus the whole scored ladder: ``degree`` is the
+    winner under the engine's ``select_criterion``, ``scores`` maps each
+    criterion name to its per-degree row (0..cfg.degree), and
+    ``condition_ladder`` carries κ(truncated Gram) per candidate degree —
+    the response diagnostics of single-pass model selection."""
 
     uid: int
     x: np.ndarray                      # (n,) host-side series
     y: np.ndarray
+    auto: bool = False                 # automatic degree selection requested
     coeffs: np.ndarray | None = None   # (degree+1,) when done
     sse: float | None = None
     r: float | None = None
     count: float | None = None         # points the fit actually used
     condition: float | None = None     # estimated κ(Gram) at solve time
     fallback_used: bool | None = None  # rescue solver produced the coeffs
+    degree: int | None = None          # chosen degree (auto requests)
+    scores: dict | None = None         # per-degree criterion rows (auto)
+    condition_ladder: np.ndarray | None = None   # per-degree κ (auto)
     done: bool = False
 
     @property
@@ -63,7 +75,8 @@ class FitRequest:
 
 @dataclasses.dataclass(frozen=True)
 class FitServeConfig:
-    degree: int = 3
+    degree: int = 3                     # fixed fit degree AND the auto-
+    # degree ladder's maximum candidate (slots accumulate at this degree)
     n_slots: int = 8                    # concurrent series per bucket
     buckets: tuple[int, ...] = (256, 2048)   # chunk widths, ascending
     solver: str = "auto"                # condition-aware solve (core.solve)
@@ -75,6 +88,9 @@ class FitServeConfig:
     decay: float = 1.0                  # exponential forgetting (γ=1: off);
     # γ<1 assumes full chunks (ages are counted inside each ingest chunk)
     engine: str = "auto"                # repro.engine path selection
+    select_criterion: str = "aicc"      # auto-degree criterion (moment-
+    # space only: the slot pool keeps one running state per series, no
+    # fold partials — AIC/AICc/BIC/GCV; "cv" would need fold slots)
     dtype: Any = jnp.float32
 
 
@@ -113,6 +129,12 @@ class FitServeEngine:
         self.cfg = cfg = cfg or FitServeConfig()
         if tuple(sorted(cfg.buckets)) != tuple(cfg.buckets):
             raise ValueError(f"buckets must ascend: {cfg.buckets}")
+        if cfg.select_criterion not in select_lib.MOMENT_CRITERIA:
+            raise ValueError(
+                f"select_criterion={cfg.select_criterion!r}; the slot pool "
+                f"keeps no fold partials, so only moment-space criteria "
+                f"{select_lib.MOMENT_CRITERIA} can serve auto-degree "
+                "requests")
         self.buckets = [_Bucket(w, cfg.n_slots, cfg) for w in cfg.buckets]
         self._uid = 0
         self.fits_done = 0
@@ -131,21 +153,53 @@ class FitServeEngine:
 
         self._solve = solve
 
+        @jax.jit
+        def sweep(state):
+            # the auto-degree solve: whole ladder 0..cfg.degree from the
+            # slot pool's running moments (same ridge stabilizer — idle
+            # slots must stay solvable at every rung — but scored on the
+            # RAW moments so sse/criteria agree with the fixed-degree
+            # path), plus the per-degree R of the padded coefficient
+            # ladder for the response report.  One compiled executable
+            # for ALL buckets (state shapes match).
+            m = state.moments.regularized(cfg.ridge)
+            sw = select_lib.sweep_from_moments(
+                m, score_moments=state.moments,
+                solver=cfg.method or cfg.solver, fallback=cfg.fallback)
+            rep = fit_lib.report_from_moments(state.moments, sw.coeffs)
+            return sw, rep.r, state.moments.count
+
+        self._sweep = sweep
+
     # ------------------------------------------------------------- plumbing
-    def submit(self, x, y) -> FitRequest:
+    def submit(self, x, y, *, degree: int | str | None = None) -> FitRequest:
         """Queue one ragged series; routed to the smallest bucket that holds
-        it in one chunk, else the largest (multi-chunk streaming ingest)."""
+        it in one chunk, else the largest (multi-chunk streaming ingest).
+
+        ``degree="auto"`` requests automatic degree selection over the
+        ladder 0..cfg.degree: the response carries the chosen degree, the
+        per-degree criterion scores, and the per-degree condition — same
+        single accumulation, one extra O(m²) ladder solve at completion.
+        Any other ``degree`` must equal ``cfg.degree`` (the slot pools
+        accumulate at one static degree)."""
+        auto = degree == "auto"
+        if degree is not None and not auto and int(degree) != self.cfg.degree:
+            raise ValueError(
+                f"degree={degree!r}: slot pools accumulate at the static "
+                f"cfg.degree={self.cfg.degree}; pass degree='auto' for "
+                "selection over the ladder 0..cfg.degree")
         x = np.asarray(x, np.float32)
         y = np.asarray(y, np.float32)
         if x.ndim != 1 or x.shape != y.shape or x.shape[0] == 0:
             raise ValueError(f"expected equal non-empty 1-D x/y, got "
                              f"{x.shape} vs {y.shape}")
-        if x.shape[0] < self.cfg.degree + 1:
+        if not auto and x.shape[0] < self.cfg.degree + 1:
             raise ValueError(
                 f"series of {x.shape[0]} points cannot determine a "
                 f"degree-{self.cfg.degree} fit (need >= "
-                f"{self.cfg.degree + 1})")
-        req = FitRequest(self._uid, x, y)
+                f"{self.cfg.degree + 1}); degree='auto' accepts short "
+                "series (underdetermined rungs score +inf)")
+        req = FitRequest(self._uid, x, y, auto=auto)
         self._uid += 1
         for b in self.buckets[:-1]:
             if req.n <= b.width:
@@ -156,23 +210,26 @@ class FitServeEngine:
 
     def warmup(self) -> int:
         """Compile every executable up front — one full-width synthetic
-        request per bucket, drained immediately — so steady-state serving
-        provably never recompiles.  Returns ``compiled_executables()``
-        (the baseline the no-recompile invariant is asserted against).
-        Deterministic: does not depend on the live traffic's lengths."""
+        fixed-degree request AND one auto-degree request per bucket,
+        drained immediately — so steady-state serving provably never
+        recompiles whatever mix of request kinds arrives.  Returns
+        ``compiled_executables()`` (the baseline the no-recompile
+        invariant is asserted against).  Deterministic: does not depend on
+        the live traffic's lengths."""
         if self.pending:
             raise RuntimeError("warmup() requires an idle engine")
         for b in self.buckets:
             n = max(b.width, self.cfg.degree + 1)
             x = np.linspace(-1.0, 1.0, n, dtype=np.float32)
             self.submit(x, x)
+            self.submit(x, x, degree="auto")
         self.run()
         return self.compiled_executables()
 
     def compiled_executables(self) -> int:
         """Total compiled executables across the engine's jitted steps —
         constant after warmup is the no-recompile serving invariant."""
-        return (self._solve._cache_size()
+        return (self._solve._cache_size() + self._sweep._cache_size()
                 + sum(b.ingest._cache_size() for b in self.buckets))
 
     @property
@@ -215,19 +272,48 @@ class FitServeEngine:
         ready = [s for s in active if b.slot_pos[s] >= b.slot_req[s].n]
         if not ready:
             return
-        coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
-                                           self._solve(b.state))
-        for s in ready:
-            req = b.slot_req[s]
-            req.coeffs = coeffs[s].copy()
-            req.sse = float(sse[s])
-            req.r = float(r[s])
-            req.count = float(count[s])
-            req.condition = float(cond[s])
-            req.fallback_used = bool(fb[s])
-            req.done = True
-            b.slot_req[s] = None
-            self.fits_done += 1
+        fixed = [s for s in ready if not b.slot_req[s].auto]
+        autos = [s for s in ready if b.slot_req[s].auto]
+        if fixed:
+            coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
+                                               self._solve(b.state))
+            for s in fixed:
+                req = b.slot_req[s]
+                req.coeffs = coeffs[s].copy()
+                req.sse = float(sse[s])
+                req.r = float(r[s])
+                req.count = float(count[s])
+                req.condition = float(cond[s])
+                req.fallback_used = bool(fb[s])
+                req.degree = self.cfg.degree
+                req.done = True
+                b.slot_req[s] = None
+                self.fits_done += 1
+        if autos:
+            sw, r_ladder, count = self._sweep(b.state)
+            scores = {name: np.asarray(sw.scores.by_name(name))
+                      for name in select_lib.MOMENT_CRITERIA + ("sse", "r2")}
+            ladder = np.asarray(sw.coeffs)
+            cond = np.asarray(sw.condition)
+            fb = np.asarray(sw.fallback_used)
+            r_ladder = np.asarray(r_ladder)
+            count = np.asarray(count)
+            crit = self.cfg.select_criterion
+            for s in autos:
+                req = b.slot_req[s]
+                d = int(np.argmin(scores[crit][s]))
+                req.degree = d
+                req.coeffs = ladder[s, d, :d + 1].copy()
+                req.sse = float(scores["sse"][s, d])
+                req.r = float(r_ladder[s, d])
+                req.count = float(count[s])
+                req.condition = float(cond[s, d])
+                req.fallback_used = bool(fb[s, d])
+                req.scores = {k: v[s].copy() for k, v in scores.items()}
+                req.condition_ladder = cond[s].copy()
+                req.done = True
+                b.slot_req[s] = None
+                self.fits_done += 1
 
     def step(self) -> None:
         """One engine iteration: admit + one compiled ingest per non-empty

@@ -106,6 +106,44 @@ def test_use_kernel_alias_warns():
         core.polyfit(x, y, 2, use_kernel=False)
 
 
+def test_use_kernel_alias_maps_to_engine():
+    """The deprecation contract, pinned: the alias warns AND resolves to
+    exactly the engine= spelling it documents."""
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        assert engine.resolve_engine("auto", True) == "kernel"
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        assert engine.resolve_engine("auto", False) == "reference"
+    assert engine.resolve_engine("auto", None) == "auto"
+
+    # polyfit: use_kernel=True/False produce the same moments/coeffs as
+    # the engine= spelling they map to (fresh shapes force a trace, so
+    # the warning fires inside the jitted wrapper too)
+    x, y = _data(11, (3, 259))
+    want_k = core.polyfit(x, y, 2, engine="kernel").coeffs
+    want_r = core.polyfit(x, y, 2, engine="reference").coeffs
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        got_k = core.polyfit(x, y, 2, use_kernel=True).coeffs
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        got_r = core.polyfit(x, y, 2, use_kernel=False).coeffs
+    np.testing.assert_array_equal(np.asarray(want_k), np.asarray(got_k))
+    np.testing.assert_array_equal(np.asarray(want_r), np.asarray(got_r))
+
+
+def test_streaming_update_use_kernel_alias_warns_and_maps():
+    x, y = _data(12, (2, 263))
+    st = streaming.StreamState.create(2, (2,))
+    want_k = streaming.update(st, x, y, engine="kernel")
+    want_r = streaming.update(st, x, y, engine="reference")
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        got_k = streaming.update(st, x, y, use_kernel=True)
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        got_r = streaming.update(st, x, y, use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(want_k.moments.gram),
+                                  np.asarray(got_k.moments.gram))
+    np.testing.assert_array_equal(np.asarray(want_r.moments.gram),
+                                  np.asarray(got_r.moments.gram))
+
+
 def test_plan_execution_matches_direct_kernel_call():
     """compute_moments on a packed plan == calling ops.moments directly."""
     x, y = _data(3, (10, 300))
@@ -175,6 +213,23 @@ def test_decayed_stream_count_does_not_decay():
     want = float(np.sum(0.9 ** np.arange(96)))
     np.testing.assert_allclose(np.asarray(st.moments.weight_sum), want,
                                rtol=1e-5)
+
+
+def test_sse_from_moments_shared_coeffs_against_batched_states():
+    """One reference polynomial scored against many series' states (the
+    streaming-monitor shape): coeffs rank BELOW the moments batch rank
+    must keep broadcasting."""
+    x, y = _data(13, (4, 200))
+    m = core.gram_moments(x, y, 2)                 # batch (4,)
+    ref = core.polyfit(x[0], y[0], 2)              # shared (3,) coeffs
+    got = np.asarray(core.sse_from_moments(m, ref.coeffs))
+    assert got.shape == (4,)
+    want = np.asarray(core.fit_report(ref, x, y).sse)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-2)
+    rep = core.report_from_moments(m, ref.coeffs)
+    assert np.asarray(rep.sse).shape == (4,)
+    np.testing.assert_allclose(np.asarray(rep.sse), want, rtol=1e-3,
+                               atol=1e-2)
 
 
 def test_report_from_moments_matches_fit_report():

@@ -54,14 +54,18 @@ def test_zero_recompiles_across_request_churn():
     eng = FitServeEngine(FitServeConfig(degree=3, n_slots=3,
                                         buckets=(64, 256), ridge=1e-9))
     warm = eng.warmup()
-    assert warm == len(eng.buckets) + 1       # one ingest/bucket + one solve
+    # one ingest/bucket + one fixed solve + one auto-degree sweep
+    assert warm == len(eng.buckets) + 2
     for x, y in _trace(2, 8, 5, 500):
         eng.submit(x, y)
     eng.run()
     assert eng.compiled_executables() == warm
     reqs = [eng.submit(x, y) for x, y in _trace(3, 30, 5, 500)]
+    autos = [eng.submit(x, y, degree="auto")
+             for x, y in _trace(4, 6, 5, 500)]
     eng.run()
     assert eng.compiled_executables() == warm
+    assert all(r.done and r.degree is not None for r in autos)
     _assert_matches_polyfit(reqs, 3)
 
 
