@@ -66,7 +66,7 @@ def bench_accuracy(quick: bool):
     for order in (1, 2, 3):
         us = _time(lambda: core.polyfit(x, y, order))
         gauss = core.polyfit(x, y, order)
-        qr = core.polyfit_qr(x, y, order)
+        qr = core.polyfit(x, y, order, solver="qr_vandermonde")
         sse = float(core.fit_report(gauss, x, y).sse)
         gap = float(jnp.max(jnp.abs(gauss.coeffs - qr.coeffs)))
         row(f"table2-4_order{order}_fit", us,
@@ -345,6 +345,38 @@ def bench_select(quick: bool):
         assert np.all(np.isfinite(cv)), "non-finite CV scores"
 
 
+def bench_api_dispatch(quick: bool):
+    """The declarative-API tax: spec-based ``api.fit()`` vs the direct
+    jitted ``_polyfit_fixed`` on the same n=1e6 fit.  The spec is the jit
+    static arg, so both paths run ONE compiled executable — the measured
+    gap is pure host-side dispatch (spec hash, cache lookup, FitResult
+    wrap).  derived = overhead %; --smoke asserts it stays under 5%."""
+    from repro import api
+    from repro.core import fit as fit_lib
+
+    n = 1_000_000
+    x, y, _ = curve_dataset(n, degree=3, seed=7)
+    spec = api.FitSpec(degree=3)
+
+    def spec_fit():
+        return api.fit(x, y, spec).poly.coeffs
+
+    def direct():
+        return fit_lib._polyfit_fixed(x, y, 3).coeffs
+
+    iters = 10 if SMOKE or quick else 30
+    us_direct = _time(direct, iters=iters, warmup=3)
+    us_spec = _time(spec_fit, iters=iters, warmup=3)
+    ratio = us_spec / us_direct
+    row("api_dispatch", us_spec,
+        f"direct_us={us_direct:.1f};overhead={(ratio - 1) * 100:+.2f}%;"
+        f"n={n}")
+    if SMOKE:
+        assert ratio < 1.05, (
+            f"spec dispatch overhead {ratio:.3f}x exceeds the 5% budget "
+            f"({us_spec:.1f}us vs {us_direct:.1f}us)")
+
+
 def bench_serve_fit(quick: bool):
     """Continuous-batching fit server on a ragged request trace (1k requests
     in the full run). derived = sustained fits/s and Mpts/s after warmup,
@@ -411,8 +443,8 @@ def bench_e2e_train(quick: bool):
 
 BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
            bench_fused_report, bench_solver_stack, bench_select,
-           bench_streaming, bench_batched_fits, bench_serve_fit,
-           bench_e2e_train]
+           bench_streaming, bench_batched_fits, bench_api_dispatch,
+           bench_serve_fit, bench_e2e_train]
 
 
 def _git_rev() -> str:

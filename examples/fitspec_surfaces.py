@@ -1,0 +1,67 @@
+"""One declarative FitSpec, four execution surfaces.
+
+    PYTHONPATH=src python examples/fitspec_surfaces.py
+
+The same spec — robust (Tukey IRLS) cubic fitting under 15% gross
+contamination — runs eagerly, over a chunked stream, on a (fake 8-device)
+mesh, and through the continuous-batching fit server, and every surface
+returns the same coefficients.  Swap one field (method="lse"/"lspia",
+degree=DegreeSearch(...), basis="chebyshev", a NumericsPolicy) and all
+four surfaces follow: method choice is orthogonal to execution strategy.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+import sys
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.core import streaming
+
+rng = np.random.default_rng(0)
+n = 8192
+xs = rng.uniform(-2.0, 2.0, n)
+true = np.array([1.0, -0.5, 0.0, 0.3])
+ys = np.polyval(true[::-1], xs) + rng.normal(0, 0.05, n)
+bad = rng.choice(n, n * 15 // 100, replace=False)
+ys[bad] += rng.choice([-1.0, 1.0], bad.size) * 50.0      # gross outliers
+x = jnp.asarray(xs, jnp.float32)
+y = jnp.asarray(ys, jnp.float32)
+
+spec = api.FitSpec(degree=3, method="irls",
+                   irls=api.IRLSOptions(loss="tukey"))
+print(f"spec: {spec}\ntrue coeffs: {true}\n")
+
+# 1 — eager/jit (the spec is the jit static arg)
+res = api.fit(x, y, spec)
+print("eager       :", np.asarray(res.coeffs),
+      f"({int(res.iterations)} IRLS sweeps)")
+
+# 2 — streaming: chunk updates reweight against the running fit
+state = spec.streaming()
+for lo in range(0, n, 1024):
+    state = streaming.update(state, x[lo:lo + 1024], y[lo:lo + 1024])
+print("streaming   :", np.asarray(api.stream_result(state).coeffs))
+
+# 3 — distributed: one O(m²) collective per IRLS sweep
+if len(jax.devices()) >= 8:
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_host_mesh(data=8, model=1)
+    out = spec.distributed(mesh)(x, y)
+    print("distributed :", np.asarray(out.coeffs))
+
+# 4 — the fit server: per-request spec, compiled once, zero recompiles
+from repro.serve import FitServeConfig, FitServeEngine
+engine = FitServeEngine(FitServeConfig(degree=3, n_slots=4,
+                                       buckets=(2048,)))
+engine.warmup()
+req = engine.submit(xs.astype(np.float32), ys.astype(np.float32), spec=spec)
+engine.run()
+print("serve       :", req.coeffs, f"(R={req.r:.4f})")
+
+# plain LSE for contrast: the outliers drag every surface identically
+plain = api.fit(x, y, api.FitSpec(degree=3))
+print("\nplain LSE    :", np.asarray(plain.coeffs), "<- dragged by outliers")

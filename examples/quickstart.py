@@ -14,7 +14,8 @@ y = jnp.asarray([751.912, 567.121, 403.746, 221.738, 18.8418, 1.88672])
 print("=== Matricized LSE fit (paper-faithful: Gram + Gaussian elim) ===")
 for order in (1, 2, 3):
     poly = core.polyfit(x, y, order)                 # the paper's path
-    qr = core.polyfit_qr(x, y, order)                # MATLAB-polyfit baseline
+    qr = core.polyfit(x, y, order,                   # MATLAB-polyfit baseline
+                  solver="qr_vandermonde")
     rep = core.fit_report(poly, x, y)
     print(f"order {order}: coeffs     = {poly.coeffs}")
     print(f"         polyfit(QR) = {qr.coeffs}")

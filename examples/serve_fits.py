@@ -49,3 +49,22 @@ for r in reqs[:4]:
     print(f"  req {r.uid}: n={r.n:>5} R={r.r:.4f} "
           f"coeffs={np.round(r.coeffs, 3)}")
 assert worst < 1e-3
+
+# per-request FitSpec: the solve policy rides with the request — a tighter
+# condition cap, a nested lower degree, or a different method each compile
+# once (the spec is the jit static arg) and then coexist, zero recompiles
+from repro import api
+
+before = engine.compiled_executables()
+x, y = reqs[0].x, reqs[0].y
+tight = engine.submit(x, y, spec=api.FitSpec(
+    degree=3, numerics=api.NumericsPolicy(solver="gauss", fallback="svd",
+                                          cond_cap=10.0)))
+line = engine.submit(x, y, spec=api.FitSpec(degree=1))
+engine.run()
+print(f"\nper-request specs (+{engine.compiled_executables() - before} "
+      f"one-time compiles):")
+print(f"  cond_cap=10 : fallback_used={tight.fallback_used} "
+      f"coeffs={np.round(tight.coeffs, 3)}")
+print(f"  degree=1    : coeffs={np.round(line.coeffs, 3)} "
+      "(nested, from the same degree-3 slot state)")

@@ -1,0 +1,27 @@
+"""``repro.api`` — one declarative FitSpec, four execution surfaces.
+
+>>> from repro import api
+>>> spec = api.FitSpec(degree=3, method="irls")
+>>> api.fit(x, y, spec).poly                  # eager/jit
+>>> st = spec.streaming(); ...                # O(1)-state streaming
+>>> run = spec.distributed(mesh); run(x, y)   # shard_map on a mesh
+>>> serve_engine.submit(x, y, spec=spec)      # the fit server
+
+See ``repro.api.spec`` for the spec's fields and ``repro.api.executors``
+for the execution surfaces.
+"""
+from repro.api.spec import (FitSpec, FitResult, IRLSOptions, LSPIAOptions,
+                            METHODS, RAW_DATA_SOLVERS)
+from repro.api.executors import (fit, spec_from_legacy, stream_state,
+                                 stream_result, make_distributed)
+# the spec's composable vocabulary, re-exported so one import serves
+from repro.engine.plan import NumericsPolicy
+from repro.select.sweep import DegreeSearch
+
+__all__ = [
+    "FitSpec", "FitResult", "IRLSOptions", "LSPIAOptions",
+    "METHODS", "RAW_DATA_SOLVERS",
+    "fit", "spec_from_legacy", "stream_state", "stream_result",
+    "make_distributed",
+    "NumericsPolicy", "DegreeSearch",
+]

@@ -1,0 +1,301 @@
+"""FitSpec — one declarative description of a fit, four execution surfaces.
+
+Every capability this framework grew since PR 1 (weights, ``engine=``,
+solver/fallback ``NumericsPolicy``, IRLS/LSPIA, ``degree="auto"``, CV
+folds, decay) was plumbed kwarg-by-kwarg through ``polyfit``,
+``StreamState``, ``make_distributed_*``, and the fit server — and the
+surfaces diverged.  ``FitSpec`` is the fix: a frozen, hashable dataclass
+holding the WHOLE fitting question (what degree/basis/domain, which
+method, which numerics policy, how to weight time), validated once at
+construction, consumed unchanged by all four executors:
+
+* ``api.fit(x, y, spec)``          eager/jit (spec is the jit static arg,
+                                   so the compile cache keys on spec
+                                   identity — the serve no-recompile
+                                   invariant extended to the whole API);
+* ``spec.streaming()``             an O(1)-state ``StreamState`` wired to
+                                   the spec (chunk updates + result);
+* ``spec.distributed(mesh)``       a jitted shard_map executor;
+* ``serve.submit(x, y, spec=...)`` per-request policy on the fit server.
+
+Method choice is orthogonal to execution strategy (the asynchronous-LSPIA
+argument, arXiv:2211.06556) and numerics policy is an explicit first-class
+field rather than a buried default (Skala, arXiv:1802.07591).  Internally
+every executor lowers the spec through ``repro.engine.plan_fit``, so plan
+selection stays in one place.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+from repro.core import basis as basis_lib
+from repro.engine import plan as plan_lib
+from repro.select.sweep import DegreeSearch, Selection
+
+METHODS = ("lse", "irls", "lspia")
+_LOSSES = ("huber", "tukey")
+
+# solver spellings that need the raw data (no moment-space equivalent):
+# valid in a FitSpec consumed by the eager executor only.
+RAW_DATA_SOLVERS = ("qr_vandermonde",)
+
+
+@dataclasses.dataclass(frozen=True)
+class IRLSOptions:
+    """Per-method options for ``method="irls"`` (bounded-influence IRLS).
+
+    ``loss``/``c`` pick the M-estimator (``core.robust``); ``max_iter`` /
+    ``tol`` bound the eager reweighting loop.  Streaming/serve surfaces
+    run a single-pass approximation instead: each incoming chunk is
+    ψ-weighted against the running fit, then — because the chunk is still
+    in hand — re-accumulated ``stream_sweeps``-wise against (running
+    state + chunk), so a stream is robust from its very first chunk at
+    the cost of ``stream_sweeps`` accumulations of each chunk (the O(1)
+    state and the zero-re-read property are untouched)."""
+
+    loss: str = "huber"
+    c: float | None = None
+    max_iter: int = 30
+    tol: float = 1e-6
+    stream_sweeps: int = 3
+
+    def __post_init__(self):
+        if self.loss not in _LOSSES:
+            raise ValueError(f"loss={self.loss!r}; expected one of {_LOSSES}")
+        if self.max_iter < 1:
+            raise ValueError(f"max_iter must be >= 1, got {self.max_iter}")
+        if self.stream_sweeps < 1:
+            raise ValueError("stream_sweeps must be >= 1, got "
+                             f"{self.stream_sweeps}")
+
+
+@dataclasses.dataclass(frozen=True)
+class LSPIAOptions:
+    """Per-method options for ``method="lspia"``.
+
+    The eager executor runs the matrix-free V/Vᵀ iteration
+    (``core.lspia.lspia_fit``); moment-only surfaces (streaming,
+    distributed, serve) run the same fixed point as Richardson iteration
+    directly on the accumulated O(m²) normal equations
+    (``core.lspia.lspia_solve_moments``)."""
+
+    tol: float = 1e-8
+    max_iter: int = 5000
+    power_iters: int = 12
+    step: float | None = None
+
+    def __post_init__(self):
+        if self.max_iter < 1:
+            raise ValueError(f"max_iter must be >= 1, got {self.max_iter}")
+        if self.power_iters < 1:
+            raise ValueError("power_iters must be >= 1, got "
+                             f"{self.power_iters}")
+
+
+def _as_domain_tuple(domain) -> tuple[float, float] | None:
+    """Normalize a Domain / (shift, scale) pair to a hashable float tuple."""
+    if domain is None:
+        return None
+    if isinstance(domain, basis_lib.Domain):
+        return (float(domain.shift), float(domain.scale))
+    shift, scale = domain
+    return (float(shift), float(scale))
+
+
+@dataclasses.dataclass(frozen=True)
+class FitSpec:
+    """The whole fitting question, validated once, hashable, executor-free.
+
+    Fields
+    ------
+    degree:   an int (fixed-degree fit) or a ``repro.select.DegreeSearch``
+              (single-pass automatic selection over the ladder
+              0..max_degree).
+    basis:    "monomial" | "chebyshev".
+    method:   "lse" (the paper's matricized normal equations), "irls"
+              (bounded-influence robust fitting, options in ``irls``) or
+              "lspia" (progressive-iterative approximation, options in
+              ``lspia``).
+    domain:   None (the numerics policy decides: identity, or a
+              data-derived [-1, 1] map when ``numerics.normalize`` /
+              auto-escalation says so) or an explicit pinned
+              ``(shift, scale)`` affine map — required wherever the data
+              range is not known up front (streaming/serve with
+              normalization).  ``basis_lib.Domain`` instances are
+              accepted and stored as the float pair.
+    numerics: the explicit numerics policy (Skala 1802.07591): solver
+              rung ("auto" resolves per degree/dtype/basis), fallback
+              rescue, condition cap, accumulation dtype, Kahan
+              compensation, domain normalization.
+    decay:    exponential forgetting γ ∈ (0, 1] for time-weighted fits
+              (γ = 1: plain accumulation).  Eager ``fit`` applies the
+              same γ-ladder weights a chunked stream would.
+    ridge:    λI Tikhonov stabilizer added to the Gram at solve time.
+    engine:   moment-accumulation path ("auto" | "reference" | "kernel" |
+              "kernel_plain" | "kernel_packed"), resolved by
+              ``engine.plan_fit``.
+    """
+
+    degree: int | DegreeSearch = 3
+    basis: str = basis_lib.MONOMIAL
+    method: str = "lse"
+    irls: IRLSOptions = IRLSOptions()
+    lspia: LSPIAOptions = LSPIAOptions()
+    domain: tuple[float, float] | None = None
+    numerics: plan_lib.NumericsPolicy = plan_lib.NumericsPolicy(solver="auto")
+    decay: float = 1.0
+    ridge: float = 0.0
+    engine: str = "auto"
+
+    # ------------------------------------------------------------ validation
+    def __post_init__(self):
+        if self.method not in METHODS:
+            raise ValueError(f"method={self.method!r}; expected one of "
+                             f"{METHODS}")
+        if self.basis not in (basis_lib.MONOMIAL, basis_lib.CHEBYSHEV):
+            raise ValueError(f"basis={self.basis!r}; expected "
+                             f"{(basis_lib.MONOMIAL, basis_lib.CHEBYSHEV)}")
+        if self.engine not in plan_lib.ENGINES:
+            raise ValueError(f"engine={self.engine!r}; expected one of "
+                             f"{plan_lib.ENGINES}")
+        object.__setattr__(self, "domain", _as_domain_tuple(self.domain))
+        if isinstance(self.degree, DegreeSearch):
+            if self.degree.max_degree < 0:
+                raise ValueError("DegreeSearch.max_degree must be >= 0")
+            if self.method == "lspia":
+                raise ValueError(
+                    "method='lspia' cannot run a DegreeSearch: the degree "
+                    "ladder lives in the moment state and LSPIA's selling "
+                    "point is not forming it; fit per degree explicitly or "
+                    "use method='lse'/'irls'")
+            if self.numerics.solver in RAW_DATA_SOLVERS:
+                raise ValueError(
+                    f"solver={self.numerics.solver!r} has no moment-space "
+                    "ladder and cannot drive a DegreeSearch")
+        else:
+            degree = int(self.degree)
+            if degree < 0:
+                raise ValueError(f"degree must be >= 0, got {degree}")
+            object.__setattr__(self, "degree", degree)
+        sol = self.numerics.solver
+        if sol == "lspia":
+            raise ValueError("spell the iterative method as "
+                             "FitSpec(method='lspia'), not as a solver")
+        valid = plan_lib.SOLVERS + RAW_DATA_SOLVERS
+        if sol not in valid:
+            raise ValueError(f"solver={sol!r}; expected one of {valid}")
+        if sol in RAW_DATA_SOLVERS and self.method != "lse":
+            raise ValueError(f"solver={sol!r} is an LSE direct solve; "
+                             f"method={self.method!r} cannot use it")
+        if sol in RAW_DATA_SOLVERS and self.ridge:
+            raise ValueError(
+                f"solver={sol!r} factors the raw rows and has no λI to "
+                "add — ridge regularization is a normal-equation concept; "
+                "drop ridge= or use a moment-path solver")
+        if not 0.0 < self.decay <= 1.0:
+            raise ValueError(f"decay must be in (0, 1], got {self.decay}")
+        if self.ridge < 0.0:
+            raise ValueError(f"ridge must be >= 0, got {self.ridge}")
+        # kernel engines only build monomial rows — fail at construction,
+        # not at first execution (same message plan_fit would give)
+        if (self.engine in ("kernel", "kernel_plain", "kernel_packed")
+                and self.basis != basis_lib.MONOMIAL):
+            raise ValueError(
+                f"engine={self.engine!r} supports the monomial basis only "
+                f"(the Pallas kernels build monomial power rows); use "
+                f"engine='reference' or 'auto' for basis={self.basis!r}")
+
+    # ------------------------------------------------------------ derived
+    @property
+    def is_search(self) -> bool:
+        return isinstance(self.degree, DegreeSearch)
+
+    @property
+    def max_degree(self) -> int:
+        """The accumulation degree: the fixed degree, or the search's max."""
+        return (self.degree.max_degree if self.is_search
+                else int(self.degree))
+
+    @property
+    def folds(self) -> int:
+        return self.degree.folds if self.is_search else 0
+
+    def domain_or(self, default: basis_lib.Domain | None = None,
+                  dtype=None):
+        """The pinned Domain as arrays, or ``default`` when unpinned."""
+        if self.domain is None:
+            return default
+        import jax.numpy as jnp
+        dtype = dtype or jnp.float32
+        shift, scale = self.domain
+        return basis_lib.Domain(jnp.asarray(shift, dtype),
+                                jnp.asarray(scale, dtype))
+
+    def plan(self, shape: tuple[int, ...], dtype: Any, *,
+             weighted: bool = False, workload: str = "moments",
+             mesh=None, data_axes: tuple[str, ...] = ()):
+        """Lower this spec through ``engine.plan_fit`` — the ONE place plan
+        selection happens for every executor."""
+        pol = self.numerics
+        solver = pol.solver
+        if solver in RAW_DATA_SOLVERS:
+            # the plan layer only plans moment solves; the raw-data direct
+            # solve is dispatched by the eager executor — plan the moment
+            # half as if unsolved so path validation still runs centrally
+            solver = "auto"
+        return plan_lib.plan_fit(
+            shape, self.max_degree, basis=self.basis, dtype=dtype,
+            weighted=weighted or self.decay < 1.0, engine=self.engine,
+            accum_dtype=pol.accum_dtype, normalize=pol.normalize,
+            compensated=pol.compensated, solver=solver,
+            fallback=pol.fallback, cond_cap=pol.cond_cap,
+            mesh=mesh, data_axes=data_axes, workload=workload)
+
+    # ------------------------------------------------------------ executors
+    def streaming(self, batch: tuple[int, ...] = (), *, dtype=None):
+        """An O(1)-state ``StreamState`` wired to this spec (executor 2).
+
+        Chunk data in with ``streaming.update(state, x, y)`` (the spec's
+        engine/basis/domain/decay — and, for ``method="irls"``, per-chunk
+        robust reweighting against the running fit — are applied
+        automatically); read the spec's answer back with
+        ``api.stream_result(state)``."""
+        from repro.api import executors
+        return executors.stream_state(self, batch, dtype=dtype)
+
+    def distributed(self, mesh, *, data_axes: tuple[str, ...] = ("data",)):
+        """A jitted mesh executor for this spec (executor 3):
+        ``fn(x, y, weights=None) -> FitResult``, inputs sharded over
+        ``data_axes``, result replicated."""
+        from repro.api import executors
+        return executors.make_distributed(self, mesh, data_axes=data_axes)
+
+
+@dataclasses.dataclass(frozen=True)
+class FitResult:
+    """What every executor hands back, whatever the method or surface.
+
+    ``poly`` is always present (ready to evaluate, carrying its basis and
+    Domain); ``report`` the moment-space quality report (SSE/R/count) when
+    the surface holds the moments to compute it for free; ``selection``
+    the full scored ladder for DegreeSearch specs; ``iterations`` /
+    ``converged`` the loop record for the iterative methods."""
+
+    poly: Any
+    report: Any = None
+    selection: Selection | None = None
+    iterations: Any = None
+    converged: Any = None
+
+    @property
+    def coeffs(self):
+        return self.poly.coeffs
+
+    @property
+    def diagnostics(self):
+        return self.poly.diagnostics
+
+    @property
+    def best_degree(self):
+        return None if self.selection is None else self.selection.best_degree

@@ -7,6 +7,15 @@ local data shard, a single ``psum`` of O(m²) floats combines them across all
 data axes (including the cross-pod ``"pod"`` axis — DCN traffic is ~(m+1)²
 floats TOTAL, independent of n), and the tiny (m+1) solve runs replicated.
 
+``make_spec_executor`` is the one factory: it consumes a ``repro.api``
+``FitSpec`` and builds the jitted shard_map program for ANY method ×
+degree question — plain LSE, IRLS (the reweighting loop runs the psum
+inside ``while_loop``; every sweep is one O(m²) collective), moment-space
+LSPIA (Richardson on the psum'd normal equations), and single-pass degree
+search (one O(k·m²) fold-stack psum) — with weights/decay/NumericsPolicy
+riding in from the spec.  ``make_distributed_fit`` / ``make_distributed_-
+select`` are the legacy-signature shims that construct the spec.
+
 This module is mesh-agnostic: pass the axis names that partition the data.
 """
 from __future__ import annotations
@@ -20,6 +29,7 @@ from jax.sharding import PartitionSpec as P
 from repro.core import basis as basis_lib
 from repro.core import fit as fit_lib
 from repro.core import moments as moments_lib
+from repro.core import solve as solve_lib
 
 try:  # jax >= 0.4.38 top-level export with the renamed replication check
     _shard_map = jax.shard_map
@@ -70,6 +80,269 @@ def _global_domain(x: jax.Array, w: jax.Array,
     return basis_lib.Domain(shift, scale)
 
 
+# --------------------------------------------------------------------------
+# the spec executor: every method × degree question, one shard_map factory
+# --------------------------------------------------------------------------
+def make_spec_executor(spec, mesh: jax.sharding.Mesh, *,
+                       data_axes: tuple[str, ...] = ("data",)):
+    """Build the jitted mesh program for a ``FitSpec``.
+
+    Returns ``(runner, kind)``: ``runner(x, y, weights)`` takes globally
+    sharded inputs and returns fully replicated outputs whose shape
+    ``kind`` names —
+
+    * ``"fixed"``:  ``(poly, moments)``                (method="lse")
+    * ``"iter"``:   ``(poly, moments, iters, conv)``   (irls / lspia)
+    * ``"search"``: ``(poly, sweep, best_degree)``     (DegreeSearch)
+
+    ``repro.api.make_distributed`` wraps the tuple into a ``FitResult``;
+    the legacy ``make_distributed_fit``/``_select`` shims return it raw.
+    """
+    from repro import select as select_lib
+    from repro.core import robust as robust_lib
+    from repro.select import crossval
+
+    from repro.api import spec as spec_lib
+    if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
+        raise ValueError(
+            f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
+            "rows and cannot run on the distributed moment surface; use "
+            "the eager api.fit executor")
+    search = spec.is_search
+    md = spec.max_degree
+    folds = spec.folds if search else 0
+    accum = spec.numerics.accum_dtype
+    # eager validation + numerics resolution (per-shard n is unknown, so
+    # plan with a placeholder length: the path choice is re-made per shard
+    # inside local_moments; the numerics policy IS resolved here, once)
+    plan = spec.plan((max(folds, 1), 1) if search else (1,),
+                     accum or jnp.float32, weighted=True,
+                     workload="select" if search else "moments",
+                     mesh=mesh, data_axes=data_axes)
+    pol = plan.numerics
+    normalized = pol.normalize or spec.domain is not None
+    if search:
+        ds = spec.degree
+        criterion = ds.criterion
+        if criterion is None:
+            criterion = "cv" if folds >= 2 else "aicc"
+        if criterion == "cv" and folds < 2:
+            raise ValueError("criterion='cv' needs folds >= 2")
+        ladder_solver = (spec.numerics.solver
+                         if spec.numerics.solver != "auto" else ds.solver)
+        ladder_fb, ladder_cap = ds.fallback, ds.cond_cap
+    spec_in = P(data_axes)
+    spec_rep = P()
+
+    def shard_domain(x, w):
+        pinned = spec.domain_or(None, dtype=x.dtype)
+        if pinned is not None:
+            return pinned
+        if pol.normalize:
+            return _global_domain(x, w, data_axes)
+        return basis_lib.Domain.identity(x.dtype)
+
+    devices_total = 1
+    for ax in data_axes:
+        devices_total *= mesh.shape[ax]
+
+    def apply_decay(x, w):
+        """spec.decay as the GLOBAL age ladder: each shard reconstructs
+        its points' global positions from its mesh coordinates (shards of
+        a P(data_axes)-sharded array are laid out row-major over the data
+        axes), so the γ-weighting is identical to the eager surface's
+        ``decay_ladder`` over the unsharded series."""
+        if spec.decay == 1.0:
+            return w
+        pos = 0
+        for ax in data_axes:
+            pos = pos * mesh.shape[ax] + jax.lax.axis_index(ax)
+        n_local = x.shape[-1]
+        n_global = n_local * devices_total
+        age = (n_global - 1
+               - (pos * n_local + jnp.arange(n_local)).astype(x.dtype))
+        return w * jnp.asarray(spec.decay, x.dtype) ** age
+
+    def gmoments(xt, y, w):
+        """One global accumulation: local shard moments + the psum."""
+        return psum_moments(
+            local_moments(xt, y, md, basis=spec.basis, weights=w,
+                          accum_dtype=accum, engine=spec.engine),
+            data_axes)
+
+    def solve(m):
+        ms = m.regularized(spec.ridge) if spec.ridge else m
+        return solve_lib.solve_with_fallback(
+            ms.gram, ms.vty, method=pol.solver, fallback=pol.fallback,
+            cond_cap=pol.cond_cap)
+
+    def mk_poly(coeffs, dom, diag):
+        return fit_lib.Polynomial(coeffs=coeffs, domain_shift=dom.shift,
+                                  domain_scale=dom.scale, basis=spec.basis,
+                                  diagnostics=diag)
+
+    def irls_weights_loop(xt, y, w):
+        """The IRLS loop, mesh-wide: every sweep is one O(m²) psum; the
+        convergence test runs on the replicated coefficients, so every
+        device takes the same trip count.  The robust scale is the
+        contributing-shard mean of per-shard MADs (an exact global median
+        would need its own iterative collective; on shuffled shards the
+        shard MADs agree to O(1/√n_shard))."""
+        opts = spec.irls
+        cval = robust_lib.resolve_tuning(opts.loss, opts.c)
+        tol = max(float(opts.tol),
+                  500.0 * float(jnp.finfo(xt.dtype).eps))
+
+        def sigma_of(coeffs):
+            r = y - basis_lib.evaluate(coeffs, xt, basis=spec.basis)
+            sig = robust_lib.chunk_scale(r, w, y)[..., 0]
+            has = jnp.any(w > 0).astype(xt.dtype)
+            num = jax.lax.psum(sig * has, data_axes)
+            den = jnp.maximum(jax.lax.psum(has, data_axes), 1.0)
+            return r, (num / den)[..., None]
+
+        def reweight(coeffs):
+            r, sigma = sigma_of(coeffs)
+            return robust_lib.robust_weights(r / sigma, opts.loss, cval) * w
+
+        m0 = gmoments(xt, y, w)
+        coeffs0, cond0, used0 = solve(m0)
+        big = jnp.asarray(jnp.inf, xt.dtype)
+
+        def cond_fn(carry):
+            _, _, _, _, delta, it = carry
+            return (it < opts.max_iter) & jnp.any(delta > tol)
+
+        def body_fn(carry):
+            coeffs, _, _, _, _, it = carry
+            m = gmoments(xt, y, reweight(coeffs))
+            new, cond, used = solve(m)
+            scale = jnp.maximum(jnp.max(jnp.abs(new), axis=-1), 1.0)
+            delta = jnp.max(jnp.abs(new - coeffs), axis=-1) / scale
+            return new, cond, used, m, delta, it + 1
+
+        init = (coeffs0, cond0, used0, m0,
+                jnp.full(xt.shape[:-1], big), jnp.zeros((), jnp.int32))
+        coeffs, cond, used, m, delta, it = jax.lax.while_loop(
+            cond_fn, body_fn, init)
+        return coeffs, cond, used, m, reweight(coeffs), delta <= tol, it
+
+    # ------------------------------------------------------------ programs
+    if search:
+        @partial(_shard_map, mesh=mesh,
+                 in_specs=(spec_in, spec_in, spec_in),
+                 out_specs=(spec_rep, spec_rep, spec_rep), **_CHECK_KW)
+        def _run(x, y, w):
+            w = apply_decay(x, w)
+            dom = shard_domain(x, w)
+            xt = dom.apply(x)
+            if spec.method == "irls":
+                # robust weights established mesh-wide at max_degree, then
+                # the usual single-pass weighted ladder on top of them
+                _, _, _, _, w_eff, _, _ = irls_weights_loop(xt, y, w)
+            else:
+                w_eff = w
+            if folds >= 2:
+                fm = crossval.fold_moments(xt, y, folds, md, weights=w_eff,
+                                           basis=spec.basis,
+                                           engine=spec.engine,
+                                           accum_dtype=accum)
+                fm = psum_moments(fm, data_axes)  # folds global: O(k·m²)
+                total = crossval.sum_folds(fm)
+            else:
+                fm = None
+                total = gmoments(xt, y, w_eff)
+            mr = total.regularized(spec.ridge) if spec.ridge else total
+            sweep = select_lib.sweep_from_moments(
+                mr, fold_moments=fm,
+                score_moments=total if spec.ridge else None,
+                solver=ladder_solver,
+                fallback=ladder_fb, cond_cap=ladder_cap, basis=spec.basis,
+                normalized=normalized)
+            best = sweep.best(criterion)
+            # winning fit in the padded ladder layout (best is traced, so
+            # the static-shape slice of selection_from_sweep is
+            # unavailable) — crucially WITH its Domain, so raw-x
+            # evaluation is correct
+            diag = fit_lib.FitDiagnostics(
+                condition=jnp.take(sweep.condition, best, axis=-1),
+                fallback_used=jnp.take(sweep.fallback_used, best, axis=-1),
+                solver=ladder_solver, fallback=ladder_fb or "none")
+            poly = mk_poly(jnp.take(sweep.coeffs, best, axis=-2), dom, diag)
+            return poly, sweep, best
+
+    elif spec.method == "irls":
+        @partial(_shard_map, mesh=mesh,
+                 in_specs=(spec_in, spec_in, spec_in),
+                 out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
+                 **_CHECK_KW)
+        def _run(x, y, w):
+            w = apply_decay(x, w)
+            dom = shard_domain(x, w)
+            xt = dom.apply(x)
+            coeffs, cond, used, m, _, conv, it = irls_weights_loop(xt, y, w)
+            diag = fit_lib.FitDiagnostics(
+                condition=cond, fallback_used=used, solver=pol.solver,
+                fallback=pol.fallback or "none")
+            return mk_poly(coeffs, dom, diag), m, it, conv
+
+    elif spec.method == "lspia":
+        from repro.core import lspia as lspia_lib
+
+        @partial(_shard_map, mesh=mesh,
+                 in_specs=(spec_in, spec_in, spec_in),
+                 out_specs=(spec_rep, spec_rep, spec_rep, spec_rep),
+                 **_CHECK_KW)
+        def _run(x, y, w):
+            # the distributed surface already pays the O(m²) psum, so the
+            # fixed point is reached by Richardson on the psum'd normal
+            # equations (the moment-space LSPIA) — matrix-free sweeps
+            # would cost one collective per iteration instead of one total
+            w = apply_decay(x, w)
+            dom = shard_domain(x, w)
+            xt = dom.apply(x)
+            m = gmoments(xt, y, w)
+            ms = m.regularized(spec.ridge) if spec.ridge else m
+            opts = spec.lspia
+            coeffs, cond, conv, it = lspia_lib.lspia_solve_moments(
+                ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
+                power_iters=opts.power_iters, step=opts.step)
+            diag = fit_lib.FitDiagnostics(condition=cond,
+                                          fallback_used=~conv,
+                                          solver="lspia", fallback="none")
+            return mk_poly(coeffs, dom, diag), m, it, conv
+
+    else:
+        # plain matricized LSE — the paper's algorithm, pod-scale
+        @partial(_shard_map, mesh=mesh,
+                 in_specs=(spec_in, spec_in, spec_in),
+                 out_specs=(spec_rep, spec_rep), **_CHECK_KW)
+        def _run(x, y, w):
+            w = apply_decay(x, w)
+            dom = shard_domain(x, w)
+            xt = dom.apply(x)
+            m = gmoments(xt, y, w)
+            ms = m.regularized(spec.ridge) if spec.ridge else m
+            poly = fit_lib.fit_from_moments(ms, solver=pol.solver,
+                                            fallback=pol.fallback,
+                                            cond_cap=pol.cond_cap,
+                                            domain=dom, basis=spec.basis,
+                                            normalized=normalized)
+            return poly, m
+
+    def entry(x: jax.Array, y: jax.Array, weights: jax.Array | None = None):
+        if weights is None:
+            weights = jnp.ones_like(x)
+        return _run(x, y, weights)
+
+    kind = ("search" if search
+            else "iter" if spec.method in ("irls", "lspia") else "fixed")
+    return jax.jit(entry), kind
+
+
+# --------------------------------------------------------------------------
+# legacy-signature shims — construct a FitSpec, run the spec executor
+# --------------------------------------------------------------------------
 def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
                          data_axes: tuple[str, ...] = ("data",),
                          method: str | None = None,
@@ -80,67 +353,30 @@ def make_distributed_fit(mesh: jax.sharding.Mesh, degree: int, *,
                          accum_dtype=jnp.float32,
                          engine: str = "auto",
                          use_kernel: bool | None = None):
-    """Build a jitted distributed fit: (x, y, weights) -> Polynomial.
+    """Build a jitted distributed fit: (x, y, weights) -> (Polynomial,
+    Moments).  Thin shim over ``make_spec_executor`` — the kwargs
+    assemble a ``FitSpec(method="lse")``.
 
     x, y, weights are globally sharded over ``data_axes``; weights masks
     padding (ragged global datasets). Polynomial comes out fully replicated.
-
     normalize=True computes the global min/max first (second tiny collective)
-    and fits in the normalized domain — the hardened beyond-paper mode.
-
-    ``engine`` selects each shard's local accumulation path through
-    ``repro.engine.plan_fit`` (validated up front, before any tracing);
-    ``use_kernel`` is a deprecated alias.  ``solver``/``fallback`` pick the
-    replicated normal-equation solve the same way ``core.polyfit`` does
-    (condition-aware GE → Cholesky → QR → SVD; the psum'd Gram feeds the
-    runtime κ estimate, so the fallback decision is identical on every
-    device — no divergence).  ``method=`` is the legacy spelling of
-    ``solver=``.
+    and fits in the normalized domain.  ``use_kernel`` is a deprecated
+    alias of ``engine=``; ``method=`` the legacy spelling of ``solver=``.
     """
     from repro import engine as engine_lib
+    from repro.api import spec as spec_lib
+    from repro.engine import plan as plan_lib
     engine = engine_lib.resolve_engine(engine, use_kernel)
     if method is not None:
         solver = method
-    # eager validation + a describable plan for logs: per-shard n is not
-    # known yet, so plan with a placeholder length (path choice is re-made
-    # per shard inside local_moments with the real shard shape).  The
-    # numerics policy (solver rung, auto-normalization escalation) IS
-    # resolved here, once, from the static facts.
-    plan = engine_lib.plan_fit((1,), degree, basis=basis, engine=engine,
-                               dtype=accum_dtype or jnp.float32,
-                               accum_dtype=accum_dtype, normalize=normalize,
-                               solver=solver, fallback=fallback,
-                               mesh=mesh, data_axes=data_axes)
-    pol = plan.numerics
-    normalize = pol.normalize
-    spec_in = P(data_axes)
-    spec_rep = P()
-
-    # check_vma/check_rep=False: pallas_call out_shapes don't carry
-    # replication annotations
-    @partial(_shard_map, mesh=mesh,
-             in_specs=(spec_in, spec_in, spec_in),
-             out_specs=(spec_rep, spec_rep), **_CHECK_KW)
-    def _fit_shard(x, y, w):
-        dom = (_global_domain(x, w, data_axes) if normalize
-               else basis_lib.Domain.identity(x.dtype))
-        xt = dom.apply(x)
-        m = local_moments(xt, y, degree, basis=basis, weights=w,
-                          accum_dtype=accum_dtype, engine=engine)
-        m = psum_moments(m, data_axes)
-        poly = fit_lib.fit_from_moments(m, solver=pol.solver,
-                                        fallback=pol.fallback,
-                                        cond_cap=pol.cond_cap, domain=dom,
-                                        basis=basis,
-                                        normalized=pol.normalize)
-        return poly, m
-
-    def fit(x: jax.Array, y: jax.Array, weights: jax.Array | None = None):
-        if weights is None:
-            weights = jnp.ones_like(x)
-        return _fit_shard(x, y, weights)
-
-    return jax.jit(fit)
+    spec = spec_lib.FitSpec(
+        degree=int(degree), basis=basis, method="lse",
+        numerics=plan_lib.NumericsPolicy(accum_dtype=accum_dtype,
+                                         normalize=normalize, solver=solver,
+                                         fallback=fallback),
+        engine=engine)
+    runner, _ = make_spec_executor(spec, mesh, data_axes=data_axes)
+    return runner
 
 
 def make_distributed_select(mesh: jax.sharding.Mesh, max_degree: int, *,
@@ -155,87 +391,42 @@ def make_distributed_select(mesh: jax.sharding.Mesh, max_degree: int, *,
                             accum_dtype=jnp.float32,
                             engine: str = "auto"):
     """Mesh-parallel single-pass degree selection: (x, y, weights) ->
-    (poly, sweep, best_degree), all fully replicated.
+    (poly, sweep, best_degree), all fully replicated.  Thin shim over
+    ``make_spec_executor`` — the kwargs assemble a
+    ``FitSpec(degree=DegreeSearch(...))``.
 
     Each shard accumulates its local k-fold moment partials (round-robin
     within the shard — fold membership is an arbitrary partition, so local
     assignment is a valid global one) and ONE psum of the (k, m+1, m+1)
     fold stack makes the folds global: selection's collective cost is
-    O(k·m²) floats, independent of n, the same additivity argument as the
-    distributed fit.  The ladder solve + scoring then run replicated on
-    every device, so the chosen degree is identical mesh-wide with no
-    extra synchronization.  ``folds < 2`` drops CV (one plain psum'd
-    state; AICc/BIC/GCV still select).
+    O(k·m²) floats, independent of n.  The ladder solve + scoring then run
+    replicated on every device, so the chosen degree is identical
+    mesh-wide with no extra synchronization.  ``folds < 2`` drops CV (one
+    plain psum'd state; AICc/BIC/GCV still select).
 
     ``poly`` is the winning fit in the zero-padded (max_degree+1) layout
-    (the chosen degree is data-dependent, hence not a static shape) and —
-    like ``make_distributed_fit`` — carries its Domain, so evaluating it
-    on raw x is correct even when normalization (explicit or the plan's
-    auto-escalation at high max degrees) mapped the fit to [-1, 1];
-    ``sweep.coeffs`` live in that same fitted domain/basis.
+    (the chosen degree is data-dependent, hence not a static shape) and
+    carries its Domain, so evaluating it on raw x is correct even when
+    normalization mapped the fit to [-1, 1]; ``sweep.coeffs`` live in that
+    same fitted domain/basis.
     """
-    from repro import engine as engine_lib
     from repro import select as select_lib
-    from repro.select import crossval
-    if criterion is None:
-        criterion = "cv" if folds >= 2 else "aicc"
-    if criterion == "cv" and folds < 2:
-        raise ValueError("criterion='cv' needs folds >= 2")
-    # eager validation at the max candidate degree (per-shard n unknown;
-    # path choice re-made per shard, numerics resolved once — same pattern
-    # as make_distributed_fit)
-    plan = engine_lib.plan_fit(
-        (max(folds, 1), 1), max_degree, basis=basis, engine=engine,
-        dtype=accum_dtype or jnp.float32, accum_dtype=accum_dtype,
-        normalize=normalize, solver=solver, fallback=fallback,
-        cond_cap=cond_cap, mesh=mesh, data_axes=data_axes,
-        workload="select")
-    pol = plan.numerics
-    spec_in = P(data_axes)
-    spec_rep = P()
-
-    @partial(_shard_map, mesh=mesh,
-             in_specs=(spec_in, spec_in, spec_in),
-             out_specs=(spec_rep, spec_rep, spec_rep), **_CHECK_KW)
-    def _select_shard(x, y, w):
-        dom = (_global_domain(x, w, data_axes) if pol.normalize
-               else basis_lib.Domain.identity(x.dtype))
-        xt = dom.apply(x)
-        if folds >= 2:
-            fm = crossval.fold_moments(xt, y, folds, max_degree, weights=w,
-                                       basis=basis, engine=engine,
-                                       accum_dtype=accum_dtype)
-            fm = psum_moments(fm, data_axes)   # folds made global: O(k·m²)
-            total = crossval.sum_folds(fm)
-        else:
-            fm = None
-            total = psum_moments(
-                local_moments(xt, y, max_degree, basis=basis, weights=w,
-                              accum_dtype=accum_dtype, engine=engine),
-                data_axes)
-        sweep = select_lib.sweep_from_moments(
-            total, fold_moments=fm, solver=solver, fallback=fallback,
-            cond_cap=cond_cap, basis=basis, normalized=pol.normalize)
-        best = sweep.best(criterion)
-        # winning fit in the padded ladder layout (best is traced, so the
-        # static-shape slice of selection_from_sweep is unavailable) —
-        # crucially WITH its Domain, so raw-x evaluation is correct
-        diag = fit_lib.FitDiagnostics(
-            condition=jnp.take(sweep.condition, best, axis=-1),
-            fallback_used=jnp.take(sweep.fallback_used, best, axis=-1),
-            solver=solver, fallback=fallback or "none")
-        poly = fit_lib.Polynomial(
-            coeffs=jnp.take(sweep.coeffs, best, axis=-2),
-            domain_shift=dom.shift, domain_scale=dom.scale, basis=basis,
-            diagnostics=diag)
-        return poly, sweep, best
-
-    def sel(x: jax.Array, y: jax.Array, weights: jax.Array | None = None):
-        if weights is None:
-            weights = jnp.ones_like(x)
-        return _select_shard(x, y, weights)
-
-    return jax.jit(sel)
+    from repro.api import spec as spec_lib
+    from repro.engine import plan as plan_lib
+    spec = spec_lib.FitSpec(
+        degree=select_lib.DegreeSearch(max_degree=int(max_degree),
+                                       folds=int(folds),
+                                       criterion=criterion, solver=solver,
+                                       fallback=fallback,
+                                       cond_cap=cond_cap),
+        basis=basis, method="lse",
+        numerics=plan_lib.NumericsPolicy(accum_dtype=accum_dtype,
+                                         normalize=normalize,
+                                         solver="auto", fallback=fallback,
+                                         cond_cap=cond_cap),
+        engine=engine)
+    runner, _ = make_spec_executor(spec, mesh, data_axes=data_axes)
+    return runner
 
 
 def distributed_fit_input_specs(n_global: int, dtype=jnp.float32):

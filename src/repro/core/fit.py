@@ -93,6 +93,11 @@ def fit_from_moments(m: moments_lib.Moments, *, method: str | None = None,
             "solver='lspia' needs the raw data (matrix-free V/Vᵀ sweeps) "
             "and cannot run from moments; use core.polyfit(..., "
             "solver='lspia') or core.lspia.lspia_fit")
+    if solver == "qr_vandermonde":
+        raise ValueError(
+            "solver='qr_vandermonde' factors the raw Vandermonde rows and "
+            "cannot run from moments; use core.polyfit(..., "
+            "solver='qr_vandermonde') (the eager surface holds the data)")
     if solver == "auto":
         solver = solve_lib.select_solver(m.degree, m.gram.dtype, basis=basis,
                                          normalized=normalized)
@@ -178,49 +183,43 @@ def polyfit(x: jax.Array, y: jax.Array, degree, *,
             fallback: str | None = "svd",
             cond_cap: float | None = None,
             use_kernel: bool | None = None) -> Polynomial:
-    """``_polyfit_fixed`` (the paper's pipeline, jitted) plus automatic
-    model selection: ``degree="auto"`` or ``degree=DegreeSearch(...)``
-    picks the degree analytically from the SAME single moment pass
-    (``repro.select`` — degree ladder + moment-space CV; see its docs).
-    The auto path is eager at the top (the winning degree is read back to
-    slice the coefficients); an integer ``degree`` is the unchanged jitted
-    fast path.  All other arguments keep their fixed-degree meaning —
-    ``normalize=False`` under ``degree="auto"`` still lets the numerics
-    policy escalate domain normalization at high max degrees, exactly as
-    the fixed-degree plan does."""
-    from repro import select as select_lib
-    if isinstance(degree, str):
-        if degree != "auto":
-            raise ValueError(f"degree={degree!r}; expected an int, 'auto', "
-                             "or a repro.select.DegreeSearch")
-        degree = select_lib.DegreeSearch()
-    if isinstance(degree, select_lib.DegreeSearch):
-        from repro import engine as engine_lib
-        sel = select_lib.select_degree(
-            x, y, degree.max_degree, folds=degree.folds,
-            criterion=degree.criterion, weights=weights, basis=basis,
-            normalize=normalize or None,
-            engine=engine_lib.resolve_engine(engine, use_kernel),
-            solver=(method if method is not None
-                    else solver if solver != "auto" else degree.solver),
-            fallback=degree.fallback, cond_cap=degree.cond_cap,
-            accum_dtype=accum_dtype)
-        return sel.poly
-    return _polyfit_fixed(x, y, degree, weights=weights, method=method,
-                          basis=basis, normalize=normalize,
-                          accum_dtype=accum_dtype, engine=engine,
-                          solver=solver, fallback=fallback,
-                          cond_cap=cond_cap, use_kernel=use_kernel)
+    """The paper's pipeline (jitted) plus automatic model selection:
+    ``degree="auto"`` or ``degree=DegreeSearch(...)`` picks the degree
+    analytically from the SAME single moment pass (``repro.select`` —
+    degree ladder + moment-space CV; see its docs).
+
+    Thin shim over the declarative API: the kwargs assemble a
+    ``repro.api.FitSpec`` and ``api.fit`` executes it (the compile cache
+    keys on the spec, so this is the same jitted fast path).  The auto
+    path is eager at the top (the winning degree is read back to slice
+    the coefficients).  ``normalize=False`` under ``degree="auto"`` still
+    lets the numerics policy escalate domain normalization at high max
+    degrees, exactly as the fixed-degree plan does.  ``use_kernel`` is a
+    deprecated alias of ``engine=``; ``method=`` the legacy spelling of
+    ``solver=``."""
+    from repro import api
+    from repro import engine as engine_lib
+    spec = api.spec_from_legacy(
+        degree, method=method, basis=basis,
+        normalize=normalize, accum_dtype=accum_dtype,
+        engine=engine_lib.resolve_engine(engine, use_kernel),
+        solver=solver, fallback=fallback, cond_cap=cond_cap)
+    return api.fit(x, y, spec, weights=weights).poly
 
 
-@partial(jax.jit, static_argnames=("degree",))
 def polyfit_qr(x: jax.Array, y: jax.Array, degree: int) -> Polynomial:
-    """The paper's comparison baseline: MATLAB polyfit's QR-on-Vandermonde."""
-    v = basis_lib.vandermonde(x, degree)
-    coeffs = solve_lib.qr_solve_vandermonde(v, y)
-    return Polynomial(coeffs=coeffs,
-                      domain_shift=jnp.zeros((), x.dtype),
-                      domain_scale=jnp.ones((), x.dtype))
+    """Deprecated: the paper's comparison baseline (MATLAB polyfit's
+    QR-on-Vandermonde) as a standalone function.  The spec spelling is
+    ``FitSpec(method="lse", numerics=NumericsPolicy(solver=
+    "qr_vandermonde"))`` — or ``polyfit(x, y, degree,
+    solver="qr_vandermonde")`` — which this shim now constructs."""
+    import warnings
+    warnings.warn(
+        "polyfit_qr is deprecated; pass solver='qr_vandermonde' to polyfit "
+        "(or FitSpec(numerics=NumericsPolicy(solver='qr_vandermonde')))",
+        DeprecationWarning, stacklevel=2)
+    return polyfit(x, y, int(degree), solver="qr_vandermonde",
+                   fallback=None)
 
 
 @jax.tree_util.register_dataclass

@@ -121,27 +121,72 @@ def _condition_from_rate(rho: jax.Array, lam_mu: jax.Array) -> jax.Array:
                      inf)
 
 
-@partial(jax.jit, static_argnames=("degree", "basis", "normalize", "tol",
-                                   "max_iter", "power_iters", "step",
-                                   "engine"))
-def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
-              weights: jax.Array | None = None,
-              basis: str = basis_lib.MONOMIAL,
-              normalize: bool = True,
-              tol: float = 1e-8,
-              max_iter: int = 5000,
-              power_iters: int = 12,
-              step: float | None = None,
-              init: jax.Array | None = None,
-              engine: str = "auto") -> LSPIAFit:
-    """Gram-free iterative LSE fit with tolerance/max-iter control.
+@partial(jax.jit, static_argnames=("tol", "max_iter", "power_iters", "step"))
+def lspia_solve_moments(gram: jax.Array, vty: jax.Array, *,
+                        tol: float = 1e-8,
+                        max_iter: int = 5000,
+                        power_iters: int = 12,
+                        step: float | None = None):
+    """LSPIA's fixed point computed from the O(m²) moment state alone.
+
+    The matrix-free iteration ``c ← c + μ Vᵀ W (y − V c)`` is Richardson
+    iteration on the normal equations, so on a surface that already HOLDS
+    the accumulated Gram (streams, slot pools, psum'd shards — where the
+    data is gone but A = VᵀWV and B = VᵀWy remain) the same fixed point is
+    reachable without the data: ``c ← c + μ (B − A c)``.  This is what
+    lets ``FitSpec(method="lspia")`` run on every execution surface —
+    method choice orthogonal to execution strategy (arXiv:2211.06556) —
+    at the cost of the property the eager path keeps (never forming A).
+
+    Batched over leading axes of ``gram``/``vty``.  Returns
+    ``(coeffs, condition, converged, iterations)``: ``condition`` is the
+    contraction-rate κ̂ estimate (same convention as ``lspia_fit``),
+    ``converged`` whether ‖B − Ac‖ ≤ tol·‖B‖ before ``max_iter``.  An
+    all-zero state (idle serve slot) converges immediately to c = 0."""
+    dtype = gram.dtype
+    mv = lambda c: jnp.einsum("...jk,...k->...j", gram, c)
+    lam = _power_iter(mv, vty.shape, dtype, power_iters)
+    if step is None:
+        mu = 1.0 / jnp.maximum(lam, jnp.finfo(dtype).tiny)
+    else:
+        mu = jnp.full(vty.shape[:-1], step, dtype)
+    gref = jnp.maximum(jnp.linalg.norm(vty, axis=-1), jnp.finfo(dtype).tiny)
+    tol = max(float(tol), 25.0 * float(jnp.finfo(dtype).eps))
+    c0 = jnp.zeros_like(vty)
+    g0 = jnp.linalg.norm(vty - mv(c0), axis=-1)
+
+    def cond_fn(carry):
+        _, gnorm, _, it = carry
+        return (it < max_iter) & jnp.any(gnorm > tol * gref)
+
+    def body_fn(carry):
+        c, gprev, _, it = carry
+        g = vty - mv(c)
+        c = c + mu[..., None] * g
+        return c, jnp.linalg.norm(g, axis=-1), gprev, it + 1
+
+    init = (c0, g0, jnp.full(vty.shape[:-1], jnp.inf, dtype),
+            jnp.zeros((), jnp.int32))
+    c, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init)
+    converged = gnorm <= tol * gref
+    rho = jnp.where(jnp.isfinite(gprev) & (gprev > 0),
+                    gnorm / jnp.where(gprev > 0, gprev, 1.0), 0.0)
+    cond = _condition_from_rate(rho, lam * mu)
+    return c, cond, converged, it
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def lspia_fit_spec(x: jax.Array, y: jax.Array,
+                   weights: jax.Array | None, init: jax.Array | None,
+                   spec) -> LSPIAFit:
+    """The matrix-free LSPIA engine, keyed on a ``FitSpec`` (method=
+    "lspia").  ``lspia_fit`` is the legacy-signature shim over this; the
+    eager ``api.fit`` executor calls it directly.
 
     Converges to the (weighted) least-squares polynomial without ever
     forming VᵀV — the path for degrees/precisions where the explicit
     normal equations are hopeless, and for data too large to want an
-    O(m²)-state accumulation pass per solve.  ``normalize=True`` (default:
-    unlike ``polyfit``, LSPIA *needs* a bounded domain for its first-order
-    convergence rate) maps the sample range to [-1, 1].
+    O(m²)-state accumulation pass per solve.
 
     Stops when ‖Vᵀ W (y − Vc)‖ ≤ tol·‖Vᵀ W y‖ (relative normal-equation
     residual — exactly the LSE optimality condition) or at ``max_iter``.
@@ -149,17 +194,28 @@ def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
     pass an explicit μ to skip those passes.  Batched over leading axes;
     the loop runs until every series converges.
     """
-    from repro import engine as engine_lib
-    plan = engine_lib.plan_fit(
-        x.shape, degree, basis=basis, dtype=x.dtype,
-        weighted=weights is not None, engine=engine, normalize=normalize,
-        workload="lspia")
-    dom = (basis_lib.Domain.from_data(x) if plan.numerics.normalize
-           else basis_lib.Domain.identity(x.dtype))
+    degree = int(spec.degree)
+    basis = spec.basis
+    opts = spec.lspia
+    tol, max_iter, power_iters = opts.tol, opts.max_iter, opts.power_iters
+    step = opts.step
+    plan = spec.plan(x.shape, x.dtype, weighted=weights is not None,
+                     workload="lspia")
+    dom = spec.domain_or(
+        basis_lib.Domain.from_data(x) if plan.numerics.normalize
+        else basis_lib.Domain.identity(x.dtype), dtype=x.dtype)
     xt = dom.apply(x)
     w = jnp.ones_like(x) if weights is None else weights
+    if spec.decay < 1.0:
+        from repro.core import moments as moments_lib
+        w = w * moments_lib.decay_ladder(x.shape[-1], spec.decay, x.dtype)
+    # spec.ridge shifts the fixed point to the Tikhonov solution, exactly
+    # as the moment-space surfaces regularize the Gram: the iteration runs
+    # on A + λI matrix-free (an extra −λc term), so one spec converges to
+    # the same answer eagerly and from accumulated moments
+    ridge = jnp.asarray(spec.ridge, x.dtype)
 
-    lam = _lambda_max(xt, w, degree, basis, power_iters)
+    lam = _lambda_max(xt, w, degree, basis, power_iters) + ridge
     if step is None:
         mu = 1.0 / jnp.maximum(lam, jnp.finfo(x.dtype).tiny)
     else:
@@ -181,7 +237,7 @@ def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
     def body_fn(carry):
         c, gprev, _, it = carry
         f = basis_lib.evaluate(c, xt, basis=basis)
-        g = vt_apply(xt, w * (y - f), degree, basis=basis)
+        g = vt_apply(xt, w * (y - f), degree, basis=basis) - ridge * c
         c = c + mu[..., None] * g
         return c, jnp.linalg.norm(g, axis=-1), gprev, it + 1
 
@@ -208,3 +264,34 @@ def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
                               diagnostics=diag)
     return LSPIAFit(poly=poly, iterations=it, converged=converged,
                     grad_norm=gnorm, step=mu)
+
+
+def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
+              weights: jax.Array | None = None,
+              basis: str = basis_lib.MONOMIAL,
+              normalize: bool = True,
+              tol: float = 1e-8,
+              max_iter: int = 5000,
+              power_iters: int = 12,
+              step: float | None = None,
+              init: jax.Array | None = None,
+              engine: str = "auto") -> LSPIAFit:
+    """Gram-free iterative LSE fit with tolerance/max-iter control.
+
+    Thin shim over the spec path: constructs ``FitSpec(method="lspia",
+    lspia=LSPIAOptions(...))`` and runs ``lspia_fit_spec``.
+    ``normalize=True`` (default: unlike ``polyfit``, LSPIA *needs* a
+    bounded domain for its first-order convergence rate) maps the sample
+    range to [-1, 1]."""
+    from repro.api import spec as spec_lib
+    from repro.engine import plan as plan_lib
+    spec = spec_lib.FitSpec(
+        degree=int(degree), basis=basis, method="lspia",
+        lspia=spec_lib.LSPIAOptions(tol=float(tol), max_iter=int(max_iter),
+                                    power_iters=int(power_iters),
+                                    step=None if step is None
+                                    else float(step)),
+        numerics=plan_lib.NumericsPolicy(normalize=normalize,
+                                         solver="auto"),
+        engine=engine)
+    return lspia_fit_spec(x, y, weights, init, spec)

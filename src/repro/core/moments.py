@@ -100,6 +100,16 @@ class Moments:
         )
 
 
+def decay_ladder(n: int, decay, dtype) -> jax.Array:
+    """The exponential-forgetting age ladder for one n-point chunk:
+    ``decay ** [n-1, ..., 1, 0]`` — newest point gets γ⁰.  The ONE home of
+    that convention: every surface (eager fit, streaming update, serve
+    ingest, IRLS base weights, distributed shards) multiplies this in, so
+    a γ-weighted fit means the same thing everywhere."""
+    return jnp.asarray(decay, dtype) ** jnp.arange(n - 1, -1, -1,
+                                                   dtype=dtype)
+
+
 @partial(jax.jit, static_argnames=("degree",))
 def power_sums(x: jax.Array, degree: int, *, weights: jax.Array | None = None) -> jax.Array:
     """Paper-literal power sums S_0..S_{2m} (shape (2*degree+1,)).

@@ -22,6 +22,13 @@ Weight functions (ψ(u)/u form, u = r/σ̂, σ̂ = 1.4826·MAD):
 
 With zero contamination the weights converge to ~1 and IRLS reproduces the
 plain LSE fit (a property the conformance suite pins down).
+
+The IRLS engine itself (``irls_fit``) is keyed on a ``repro.api.FitSpec``
+— the one description every execution surface consumes; ``robust_polyfit``
+is the legacy-signature shim that constructs the spec.  The chunk-level
+pieces (``robust_weights``, ``chunk_scale``) are shared with the streaming
+and serving surfaces, whose single-pass IRLS reweights each incoming chunk
+against the running fit.
 """
 from __future__ import annotations
 
@@ -39,6 +46,9 @@ HUBER = "huber"
 TUKEY = "tukey"
 # 95% asymptotic Gaussian efficiency tunings (Huber 1981; Beaton-Tukey)
 DEFAULT_TUNING = {HUBER: 1.345, TUKEY: 4.685}
+# runtime dispatch ids for surfaces that select the loss per slot/request
+# from a traced array (the fit server's single compiled ingest step)
+LOSS_IDS = {HUBER: 0, TUKEY: 1}
 
 
 @jax.tree_util.register_dataclass
@@ -52,7 +62,16 @@ class RobustFit:
     scale: jax.Array           # (...,) final robust σ̂ (1.4826·MAD)
 
 
-def _robust_weights(u: jax.Array, loss: str, c: float) -> jax.Array:
+def resolve_tuning(loss: str, c: float | None) -> float:
+    """The ψ tuning constant: the 95%-efficiency default unless forced."""
+    if loss not in DEFAULT_TUNING:
+        raise ValueError(f"unknown loss {loss!r}; expected {HUBER!r} or "
+                         f"{TUKEY!r}")
+    return float(DEFAULT_TUNING[loss] if c is None else c)
+
+
+def robust_weights(u: jax.Array, loss: str, c: float) -> jax.Array:
+    """ψ(u)/u weights of standardized residuals u for a static loss name."""
     if loss == HUBER:
         au = jnp.abs(u)
         return jnp.where(au <= c, 1.0, c / jnp.maximum(au, c))
@@ -62,9 +81,120 @@ def _robust_weights(u: jax.Array, loss: str, c: float) -> jax.Array:
     raise ValueError(f"unknown loss {loss!r}; expected {HUBER!r} or {TUKEY!r}")
 
 
-@partial(jax.jit, static_argnames=("degree", "loss", "c", "max_iter", "tol",
-                                   "basis", "normalize", "accum_dtype",
-                                   "engine", "solver", "fallback"))
+_robust_weights = robust_weights   # back-compat private alias
+
+
+def robust_weights_by_id(u: jax.Array, loss_id: jax.Array,
+                         c: jax.Array) -> jax.Array:
+    """``robust_weights`` with the loss selected by a TRACED per-series id
+    (``LOSS_IDS``) and per-series tuning ``c`` — both forms are computed
+    and selected, so one compiled program serves any loss mix (the fit
+    server's per-request robustness without recompiles)."""
+    au = jnp.abs(u)
+    huber = jnp.where(au <= c, 1.0, c / jnp.maximum(au, c))
+    t = (u / jnp.maximum(c, jnp.finfo(u.dtype).tiny)) ** 2
+    tukey = jnp.where(t < 1.0, (1.0 - t) ** 2, 0.0)
+    return jnp.where(loss_id == LOSS_IDS[TUKEY], tukey, huber)
+
+
+def chunk_scale(r: jax.Array, base_w: jax.Array,
+                y: jax.Array) -> jax.Array:
+    """Robust σ̂ (1.4826·MAD, floored) of one chunk of residuals.
+
+    Shared by the streaming/serving single-pass IRLS surfaces: zero-weight
+    points are excluded, all-masked series pin σ̂ to the floor (their
+    moments are all-zero anyway), and the floor keeps u = r/σ̂ finite on
+    near-exact fits — the same guards the eager IRLS loop applies."""
+    eps = jnp.finfo(r.dtype).eps
+    has_pts = jnp.any(base_w > 0, axis=-1, keepdims=True)
+    y_mask = jnp.where(base_w > 0, jnp.abs(y), jnp.nan)
+    y_med = jnp.nanmedian(y_mask, axis=-1, keepdims=True)
+    floor = eps * (1.0 + jnp.where(has_pts, y_med, 0.0))
+    ar = jnp.where(base_w > 0, jnp.abs(r), jnp.nan)
+    mad = jnp.nanmedian(ar, axis=-1, keepdims=True)
+    mad = jnp.where(has_pts, mad, 0.0)
+    return jnp.maximum(1.4826 * mad, floor)
+
+
+@partial(jax.jit, static_argnames=("spec",))
+def irls_fit(x: jax.Array, y: jax.Array, weights: jax.Array | None,
+             spec) -> tuple[RobustFit, jax.Array]:
+    """The IRLS engine, keyed on a ``FitSpec`` (method="irls").
+
+    Returns ``(RobustFit, final_weights)`` — the converged per-point
+    robustness weights (robust ψ-weights × base weights) are what a
+    DegreeSearch under robust loss feeds back into the weighted moment
+    ladder.  Every sweep reuses the weighted moment path (same engine
+    plan as any weighted LSE fit) and the condition-aware solver stack.
+    """
+    from repro import engine as engine_lib
+    opts = spec.irls
+    loss = opts.loss
+    cval = resolve_tuning(loss, opts.c)
+    degree = int(spec.degree)
+    plan = spec.plan(x.shape, x.dtype, weighted=True)
+    pol = plan.numerics
+    dom = spec.domain_or(
+        basis_lib.Domain.from_data(x) if pol.normalize
+        else basis_lib.Domain.identity(x.dtype), dtype=x.dtype)
+    xt = dom.apply(x)
+    base_w = jnp.ones_like(x) if weights is None else weights
+    if spec.decay < 1.0:
+        from repro.core import moments as moments_lib
+        base_w = base_w * moments_lib.decay_ladder(x.shape[-1], spec.decay,
+                                                   x.dtype)
+
+    def fit_with(w):
+        m = engine_lib.compute_moments(plan, xt, y, w)
+        if spec.ridge:
+            m = m.regularized(spec.ridge)
+        return solve_lib.solve_with_fallback(
+            m.gram, m.vty, method=pol.solver, fallback=pol.fallback,
+            cond_cap=pol.cond_cap)
+
+    coeffs0, cond0, used0 = fit_with(base_w)
+    eps = jnp.finfo(x.dtype).eps
+    # near-exact fits leave residuals at roundoff scale, where the weights
+    # flip between iterations on noise alone and the coefficients jitter at
+    # ~100s of ulps forever — clamp tol above that floor or clean data
+    # spins to max_iter
+    tol = max(float(opts.tol), 500.0 * float(eps))
+
+    def sigma_of(coeffs):
+        r = y - basis_lib.evaluate(coeffs, xt, basis=spec.basis)
+        return r, chunk_scale(r, base_w, y)
+
+    big = jnp.asarray(jnp.inf, x.dtype)
+
+    def cond_fn(carry):
+        _, _, _, delta, it = carry
+        return (it < opts.max_iter) & jnp.any(delta > tol)
+
+    def body_fn(carry):
+        coeffs, _, _, _, it = carry
+        r, sigma = sigma_of(coeffs)
+        w = robust_weights(r / sigma, loss, cval) * base_w
+        new, cond, used = fit_with(w)
+        scale = jnp.maximum(jnp.max(jnp.abs(new), axis=-1), 1.0)
+        delta = jnp.max(jnp.abs(new - coeffs), axis=-1) / scale
+        return new, cond, used, delta, it + 1
+
+    init = (coeffs0, cond0, used0,
+            jnp.full(x.shape[:-1], big), jnp.zeros((), jnp.int32))
+    coeffs, cond, used, delta, it = jax.lax.while_loop(cond_fn, body_fn, init)
+    r, sigma = sigma_of(coeffs)
+    final_w = robust_weights(r / sigma, loss, cval) * base_w
+    diag = fit_lib.FitDiagnostics(condition=cond, fallback_used=used,
+                                  solver=pol.solver,
+                                  fallback=pol.fallback or "none")
+    poly = fit_lib.Polynomial(coeffs=coeffs, domain_shift=dom.shift,
+                              domain_scale=dom.scale, basis=spec.basis,
+                              diagnostics=diag)
+    rfit = RobustFit(poly=poly, iterations=it, converged=delta <= tol,
+                     scale=sigma[..., 0])
+    return rfit, final_w
+
+
 def robust_polyfit(x: jax.Array, y: jax.Array, degree: int, *,
                    weights: jax.Array | None = None,
                    loss: str = HUBER,
@@ -79,86 +209,26 @@ def robust_polyfit(x: jax.Array, y: jax.Array, degree: int, *,
                    fallback: str | None = "svd") -> RobustFit:
     """IRLS M-estimator fit; drop-in robust sibling of ``core.polyfit``.
 
-    Every IRLS step reuses the weighted moment path (``weights=`` ride the
-    same engine plan — kernel or reference — as any weighted LSE fit) and
-    the condition-aware solver stack, so the robustness loop inherits both
-    the performance and the numerical guards of the plain fit.  Batched:
-    x, y may carry leading batch axes; the loop runs until every series in
-    the batch converges (or ``max_iter``).
+    Thin shim over the spec path: constructs
+    ``FitSpec(method="irls", irls=IRLSOptions(...))`` and runs the same
+    ``irls_fit`` engine every other surface uses.  Batched: x, y may carry
+    leading batch axes; the loop runs until every series in the batch
+    converges (or ``max_iter``).
 
     ``weights`` are *base* weights (padding masks, confidence): they
     multiply the robustness weights each iteration and zero-weight points
     are excluded from the MAD scale estimate.
     """
-    from repro import engine as engine_lib
-    cval = float(DEFAULT_TUNING[loss] if c is None else c)
-    _robust_weights(jnp.zeros(()), loss, cval)   # validate loss eagerly
-    plan = engine_lib.plan_fit(
-        x.shape, degree, basis=basis, dtype=x.dtype, weighted=True,
-        engine=engine, accum_dtype=accum_dtype, normalize=normalize,
-        solver=solver, fallback=fallback)
-    pol = plan.numerics
-    dom = (basis_lib.Domain.from_data(x) if pol.normalize
-           else basis_lib.Domain.identity(x.dtype))
-    xt = dom.apply(x)
-    base_w = jnp.ones_like(x) if weights is None else weights
-
-    def fit_with(w):
-        m = engine_lib.compute_moments(plan, xt, y, w)
-        return solve_lib.solve_with_fallback(
-            m.gram, m.vty, method=pol.solver, fallback=pol.fallback,
-            cond_cap=pol.cond_cap)
-
-    coeffs0, cond0, used0 = fit_with(base_w)
-    eps = jnp.finfo(x.dtype).eps
-    # near-exact fits leave residuals at roundoff scale, where the weights
-    # flip between iterations on noise alone and the coefficients jitter at
-    # ~100s of ulps forever — clamp tol above that floor or clean data
-    # spins to max_iter
-    tol = max(float(tol), 500.0 * float(eps))
-    # scale floor: exact fits drive MAD → 0; keep σ̂ away from 0 so u = r/σ̂
-    # stays finite (the weights then go ≈ indicator, which is harmless on
-    # residuals at roundoff level).  Series whose base weights are ALL zero
-    # (fully padded slots) have no residuals to take a median of — nanmedian
-    # would return NaN and poison every later sweep, so pin their σ̂ to the
-    # floor instead; their moments are all-zero anyway and the solve's
-    # rescue returns the flagged finite minimum-norm fit.
-    has_pts = jnp.any(base_w > 0, axis=-1, keepdims=True)
-    y_mask = jnp.where(base_w > 0, jnp.abs(y), jnp.nan)
-    y_med = jnp.nanmedian(y_mask, axis=-1, keepdims=True)
-    floor = eps * (1.0 + jnp.where(has_pts, y_med, 0.0))
-
-    def sigma_of(coeffs):
-        r = y - basis_lib.evaluate(coeffs, xt, basis=basis)
-        ar = jnp.where(base_w > 0, jnp.abs(r), jnp.nan)
-        mad = jnp.nanmedian(ar, axis=-1, keepdims=True)
-        mad = jnp.where(has_pts, mad, 0.0)
-        return r, jnp.maximum(1.4826 * mad, floor)
-
-    big = jnp.asarray(jnp.inf, x.dtype)
-
-    def cond_fn(carry):
-        _, _, _, delta, it = carry
-        return (it < max_iter) & jnp.any(delta > tol)
-
-    def body_fn(carry):
-        coeffs, _, _, _, it = carry
-        r, sigma = sigma_of(coeffs)
-        w = _robust_weights(r / sigma, loss, cval) * base_w
-        new, cond, used = fit_with(w)
-        scale = jnp.maximum(jnp.max(jnp.abs(new), axis=-1), 1.0)
-        delta = jnp.max(jnp.abs(new - coeffs), axis=-1) / scale
-        return new, cond, used, delta, it + 1
-
-    init = (coeffs0, cond0, used0,
-            jnp.full(x.shape[:-1], big), jnp.zeros((), jnp.int32))
-    coeffs, cond, used, delta, it = jax.lax.while_loop(cond_fn, body_fn, init)
-    _, sigma = sigma_of(coeffs)
-    diag = fit_lib.FitDiagnostics(condition=cond, fallback_used=used,
-                                  solver=pol.solver,
-                                  fallback=pol.fallback or "none")
-    poly = fit_lib.Polynomial(coeffs=coeffs, domain_shift=dom.shift,
-                              domain_scale=dom.scale, basis=basis,
-                              diagnostics=diag)
-    return RobustFit(poly=poly, iterations=it, converged=delta <= tol,
-                     scale=sigma[..., 0])
+    from repro.api import spec as spec_lib
+    from repro.engine import plan as plan_lib
+    resolve_tuning(loss, c)        # validate loss/c eagerly
+    spec = spec_lib.FitSpec(
+        degree=int(degree), basis=basis, method="irls",
+        irls=spec_lib.IRLSOptions(loss=loss, c=c, max_iter=int(max_iter),
+                                  tol=float(tol)),
+        numerics=plan_lib.NumericsPolicy(accum_dtype=accum_dtype,
+                                         normalize=normalize, solver=solver,
+                                         fallback=fallback),
+        engine=engine)
+    rfit, _ = irls_fit(x, y, weights, spec)
+    return rfit

@@ -8,6 +8,12 @@ service would keep per series.
 
 Includes an exponential-forgetting variant (decay γ) so monitors track the
 *recent* trend — the fit solves the γ-weighted least-squares problem exactly.
+
+A ``StreamState`` may carry a ``repro.api.FitSpec`` (create it with
+``spec.streaming()``): ``update`` then applies the spec's engine, basis,
+pinned domain and — for ``method="irls"`` — per-chunk robust reweighting
+against the running fit, and ``api.stream_result`` reads the spec's answer
+(fixed fit, degree search, or moment-space LSPIA) back out of the state.
 """
 from __future__ import annotations
 
@@ -20,6 +26,7 @@ import jax.numpy as jnp
 from repro.core import basis as basis_lib
 from repro.core import fit as fit_lib
 from repro.core import moments as moments_lib
+from repro.core import solve as solve_lib
 
 
 @jax.tree_util.register_dataclass
@@ -32,21 +39,28 @@ class StreamState:
     computed once and folded into BOTH the total and one fold, assigned
     round-robin per chunk (``fold_index``).  That is what lets
     ``current_selection()`` run moment-space k-fold CV over the whole
-    degree ladder at any time with zero re-reads of the stream."""
+    degree ladder at any time with zero re-reads of the stream.
+
+    ``spec`` (static, hashable) is the optional ``FitSpec`` the state was
+    created for — it rides along so every ``update`` and result readout
+    agrees on engine/basis/domain/method without re-threading kwargs."""
 
     moments: moments_lib.Moments
     decay: jax.Array  # scalar in (0, 1]; 1.0 = plain accumulation
     fold_moments: moments_lib.Moments | None = None  # (k, ...batch) partials
     fold_index: jax.Array | None = None              # next fold, round-robin
+    spec: object = dataclasses.field(metadata=dict(static=True),
+                                     default=None)
 
     @staticmethod
     def create(degree: int, batch: tuple[int, ...] = (), *, decay: float = 1.0,
-               dtype=jnp.float32, cv_folds: int = 0) -> "StreamState":
+               dtype=jnp.float32, cv_folds: int = 0,
+               spec=None) -> "StreamState":
         folds = (moments_lib.Moments.zeros(degree, (cv_folds,) + batch, dtype)
                  if cv_folds >= 2 else None)
         idx = jnp.zeros((), jnp.int32) if cv_folds >= 2 else None
         return StreamState(moments_lib.Moments.zeros(degree, batch, dtype),
-                           jnp.asarray(decay, dtype), folds, idx)
+                           jnp.asarray(decay, dtype), folds, idx, spec)
 
     def current_selection(self, *, criterion: str | None = None,
                           ridge: float = 0.0, solver: str = "auto",
@@ -76,6 +90,66 @@ class StreamState:
                                                fallback=fallback)
 
 
+def _spec_solver(spec, degree: int, dtype) -> tuple[str, str | None]:
+    """Statically resolve the spec's (solver, fallback) for a moment solve."""
+    pol = spec.numerics
+    solver = pol.solver
+    if solver == "auto":
+        solver = solve_lib.select_solver(degree, dtype, basis=spec.basis,
+                                         normalized=spec.domain is not None
+                                         or pol.normalize)
+    return solver, pol.fallback
+
+
+def _streaming_irls_weights(state: StreamState, xt: jax.Array,
+                            y: jax.Array,
+                            base_w: jax.Array | None) -> jax.Array:
+    """Single-pass streaming IRLS: robust ψ-weights for the incoming chunk.
+
+    Sweep 0 weights the chunk's residuals against the RUNNING fit (where
+    determined — count > degree); the remaining ``stream_sweeps − 1``
+    sweeps re-accumulate the in-hand chunk against (decayed running state
+    + chunk) and reweight, so even the very first chunk of a contaminated
+    stream gets a genuinely robust fit.  Only the chunk is ever touched —
+    the stream is never re-read and the state stays O(m²)."""
+    from repro import engine as engine_lib
+    from repro.core import robust as robust_lib
+    spec = state.spec
+    opts = spec.irls
+    degree = state.moments.degree
+    cval = robust_lib.resolve_tuning(opts.loss, opts.c)
+    solver, fallback = _spec_solver(spec, degree, state.moments.gram.dtype)
+    w0 = jnp.ones_like(xt) if base_w is None else base_w
+
+    def solve(m):
+        if spec.ridge:
+            m = m.regularized(spec.ridge)
+        c, _, _ = solve_lib.solve_with_fallback(
+            m.gram, m.vty, method=solver, fallback=fallback,
+            cond_cap=spec.numerics.cond_cap)
+        return c
+
+    def reweight(coeffs):
+        r = y - basis_lib.evaluate(coeffs, xt, basis=spec.basis)
+        sigma = robust_lib.chunk_scale(r, w0, y)
+        return robust_lib.robust_weights(r / sigma, opts.loss, cval)
+
+    determined = (state.moments.count > degree)[..., None]
+    wr = jnp.where(determined, reweight(solve(state.moments)), 1.0)
+    if opts.stream_sweeps > 1:
+        g = state.decay ** jnp.asarray(xt.shape[-1], state.decay.dtype)
+        old = jax.tree.map(lambda a: a * g, state.moments)
+        dec = _decay_weights(state, xt, None)
+        plan = engine_lib.plan_fit(
+            xt.shape, degree, basis=spec.basis, dtype=xt.dtype,
+            weighted=True, engine=spec.engine,
+            accum_dtype=state.moments.gram.dtype)
+        for _ in range(opts.stream_sweeps - 1):
+            new = engine_lib.compute_moments(plan, xt, y, dec * w0 * wr)
+            wr = reweight(solve(old + new))
+    return wr
+
+
 @partial(jax.jit, static_argnames=("basis", "engine", "use_kernel"))
 def update(state: StreamState, x: jax.Array, y: jax.Array, *,
            weights: jax.Array | None = None,
@@ -92,15 +166,30 @@ def update(state: StreamState, x: jax.Array, y: jax.Array, *,
 
     ``engine`` picks the accumulation path via ``repro.engine.plan_fit``
     ("auto" = reference off-TPU, packed Pallas kernel for batched streams on
-    TPU); ``use_kernel`` is a deprecated alias."""
+    TPU); ``use_kernel`` is a deprecated alias.  When the state carries a
+    ``FitSpec``, the spec's basis/engine/domain win over the defaults and
+    ``method="irls"`` reweights the chunk against the running fit before
+    accumulating (single-pass streaming IRLS)."""
     from repro import engine as engine_lib
+    spec = state.spec
     degree = state.moments.degree
-    w = _decay_weights(state, x, weights)
+    if spec is not None:
+        basis = spec.basis
+        if engine == "auto":
+            engine = spec.engine
+    xt = x
+    if spec is not None and spec.domain is not None:
+        xt = spec.domain_or(dtype=x.dtype).apply(x)
+    user_w = weights
+    if spec is not None and spec.method == "irls":
+        wr = _streaming_irls_weights(state, xt, y, weights)
+        user_w = wr if weights is None else weights * wr
+    w = _decay_weights(state, x, user_w)
     plan = engine_lib.plan_fit(
         x.shape, degree, basis=basis, dtype=x.dtype, weighted=True,
         engine=engine_lib.resolve_engine(engine, use_kernel),
         accum_dtype=state.moments.gram.dtype)
-    new = engine_lib.compute_moments(plan, x, y, w)
+    new = engine_lib.compute_moments(plan, xt, y, w)
     new = jax.tree.map(lambda a, ref: a.astype(ref.dtype),
                        new, state.moments)
     # count from the USER weights only: γ^age underflows to exactly 0 in
@@ -117,7 +206,7 @@ def update(state: StreamState, x: jax.Array, y: jax.Array, *,
     old = dataclasses.replace(
         jax.tree.map(lambda a: a * g, m), count=m.count)
     if state.fold_moments is None:
-        return StreamState(old + new, state.decay)
+        return dataclasses.replace(state, moments=old + new)
     # the chunk's moments are already in hand — fold them into one fold
     # partial as well (round-robin per chunk): the k-fold CV state costs
     # zero extra passes.  Decay applies to fold partials exactly as to the
@@ -128,15 +217,16 @@ def update(state: StreamState, x: jax.Array, y: jax.Array, *,
         count=state.fold_moments.count)
     idx = state.fold_index % k
     folds = jax.tree.map(lambda f, a: f.at[idx].add(a), folds_old, new)
-    return StreamState(old + new, state.decay, folds, state.fold_index + 1)
+    return dataclasses.replace(state, moments=old + new, fold_moments=folds,
+                               fold_index=state.fold_index + 1)
 
 
 def _decay_weights(state: StreamState, x: jax.Array,
                    weights: jax.Array | None) -> jax.Array | None:
-    n = x.shape[-1]
     # newest point gets γ⁰, oldest in chunk γ^{n-1} (γ=1 → all ones)
-    w = state.decay ** jnp.arange(n - 1, -1, -1, dtype=x.dtype)
-    w = jnp.broadcast_to(w, x.shape)
+    w = jnp.broadcast_to(
+        moments_lib.decay_ladder(x.shape[-1], state.decay, x.dtype),
+        x.shape)
     return w if weights is None else w * weights
 
 
@@ -151,12 +241,34 @@ def current_fit(state: StreamState, *, method: str | None = None,
     (``core.fit.fit_from_moments``): the returned ``Polynomial.diagnostics``
     carries the running state's κ(Gram) and whether the rank-revealing
     rescue fired — the monitor-friendly health signal for a stream going
-    degenerate.  ``method=`` is the legacy spelling of ``solver=``."""
+    degenerate.  ``method=`` is the legacy spelling of ``solver=``.
+
+    On a spec-carrying state the spec supplies the defaults: its numerics
+    policy (when ``solver`` was left "auto"), its ridge (when ``ridge``
+    was left 0), and its basis/pinned domain always ride on the returned
+    ``Polynomial``."""
+    spec = state.spec
+    basis = basis_lib.MONOMIAL
+    dom = None
+    normalized = False
+    cond_cap = None
+    if spec is not None:
+        basis = spec.basis
+        dom = spec.domain_or(dtype=state.moments.gram.dtype)
+        normalized = spec.domain is not None
+        cond_cap = spec.numerics.cond_cap
+        if method is None and solver == "auto":
+            solver, fallback = _spec_solver(spec, state.moments.degree,
+                                            state.moments.gram.dtype)
+        if not ridge:
+            ridge = spec.ridge
     m = state.moments
     if ridge:
         m = m.regularized(ridge)
     return fit_lib.fit_from_moments(m, method=method, solver=solver,
-                                    fallback=fallback)
+                                    fallback=fallback, cond_cap=cond_cap,
+                                    domain=dom, basis=basis,
+                                    normalized=normalized)
 
 
 def current_sse(state: StreamState, poly: fit_lib.Polynomial) -> jax.Array:

@@ -194,6 +194,16 @@ def resolve_numerics(degree: int, *, basis: str = "monomial",
        past ``cond_cap`` or on non-finite output.
     """
     from repro.core import solve as solve_lib
+    if solver == "qr_vandermonde":
+        # same boundary as lspia below: QR on the raw Vandermonde rows
+        # never forms the Gram, so no moment-based surface can run it —
+        # the eager executor (api.fit / polyfit) dispatches it before
+        # planning
+        raise ValueError(
+            "solver='qr_vandermonde' factors the raw Vandermonde rows and "
+            "cannot run from moments; use core.polyfit(..., "
+            "solver='qr_vandermonde') or api.FitSpec(numerics="
+            "NumericsPolicy(solver='qr_vandermonde')) with api.fit")
     if solver not in SOLVERS:
         raise ValueError(f"solver={solver!r}; expected one of {SOLVERS}")
     if solver == "lspia":

@@ -11,6 +11,10 @@ Entry points:
 
 * ``select_degree(x, y, max_degree=...)``  — one-pass search over raw data;
 * ``core.polyfit(..., degree="auto" | DegreeSearch(...))`` — same, inline;
+* ``api.FitSpec(degree=DegreeSearch(...))`` — the declarative spelling:
+  the same search runs on every execution surface (eager, streaming,
+  distributed, serve), composed with any method — including IRLS, where
+  the ladder rides on the converged robust weights;
 * ``sweep_from_moments`` / ``solve_ladder`` — from an existing state
   (streaming ``current_selection``, the fit server's auto-degree requests,
   ``core.make_distributed_select`` on a mesh).

@@ -164,9 +164,10 @@ def sweep_from_moments(m: moments_lib.Moments, *,
 
 _JIT_SWEEP = partial(jax.jit, static_argnames=(
     "solver", "fallback", "cond_cap", "basis", "normalized"))(
-        lambda m, fold_moments, solver, fallback, cond_cap, basis,
-        normalized: sweep_from_moments(
-            m, fold_moments=fold_moments, solver=solver, fallback=fallback,
+        lambda m, fold_moments, score_moments, solver, fallback, cond_cap,
+        basis, normalized: sweep_from_moments(
+            m, fold_moments=fold_moments, score_moments=score_moments,
+            solver=solver, fallback=fallback,
             cond_cap=cond_cap, basis=basis, normalized=normalized))
 
 
@@ -215,7 +216,8 @@ def select_degree(x: jax.Array, y: jax.Array, max_degree: int = 8, *,
                   solver: str = "auto",
                   fallback: str | None = "svd",
                   cond_cap: float | None = None,
-                  accum_dtype: Any = None) -> Selection:
+                  accum_dtype: Any = None,
+                  ridge: float = 0.0) -> Selection:
     """Pick the polynomial degree analytically from ONE pass over the data.
 
     One degree-``max_degree`` moment accumulation (k-fold partials when
@@ -230,6 +232,10 @@ def select_degree(x: jax.Array, y: jax.Array, max_degree: int = 8, *,
     ``normalize=None`` lets the numerics policy auto-normalize at the
     degrees where a raw-domain Gram is unsalvageable (the decision is made
     once, at ``max_degree`` — the rung where conditioning is worst).
+    ``ridge`` adds λI to the ladder SOLVES while the scores stay on the
+    raw state (the streaming/serve convention — see
+    ``sweep_from_moments``'s ``score_moments``), so a ridge-stabilized
+    spec selects on the same SSE scale as an unridged one.
 
     Eager by design (the winning degree is read back to slice the
     coefficients): the moment pass and the ladder solve are jitted
@@ -274,7 +280,10 @@ def select_degree(x: jax.Array, y: jax.Array, max_degree: int = 8, *,
         fold_m = None
         total = engine_lib.compute_moments(plan, xt, y, weights)
 
-    sweep = _JIT_SWEEP(total, fold_m, solver, fallback, cond_cap, basis,
-                       do_norm)
+    solve_m, score_m = total, None
+    if ridge:
+        solve_m, score_m = total.regularized(ridge), total
+    sweep = _JIT_SWEEP(solve_m, fold_m, score_m, solver, fallback,
+                       cond_cap, basis, do_norm)
     return selection_from_sweep(sweep, criterion, domain=dom, basis=basis,
                                 solver=solver, fallback=fallback)

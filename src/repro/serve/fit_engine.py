@@ -9,20 +9,26 @@ TPU, via ``repro.engine`` plan dispatch) with per-slot streaming
 ``StreamState`` — so a million-point series occupies one slot and folds in
 chunk-by-chunk while short requests churn through the other slots.
 
-vLLM-style static shapes: every bucket owns exactly TWO compiled
-executables — one ingest step of shape (n_slots, width) and one solve of
-the pooled O(m²) state — warmed once and reused across arbitrary request
-churn.  Padding rides in with weight 0 (contributes nothing, by the
-additive-moments property), slot reuse zeroes the slot's moments with a
-keep-mask inside the same compiled step, so request arrival/departure
-never changes a shape and never recompiles.  ``compiled_executables()``
-exposes the counter the serve benchmark asserts on.
+vLLM-style static shapes: every bucket owns exactly ONE compiled ingest
+executable of shape (n_slots, width), warmed once and reused across
+arbitrary request churn.  Padding rides in with weight 0 (contributes
+nothing, by the additive-moments property), slot reuse zeroes the slot's
+moments with a keep-mask inside the same compiled step, and per-slot IRLS
+robustness is selected by RUNTIME mask/loss/c arrays — so request
+arrival/departure, solver policy, and loss mix never change a shape and
+never recompile.  ``compiled_executables()`` exposes the counter the serve
+benchmark asserts on.
 
-The pooled solve is condition-aware (``core.solve`` ladder + SVD rescue,
-selected by ``FitServeConfig.solver``/``fallback``): each finished request
-reports the estimated κ(Gram) and whether the rescue fired
-(``FitRequest.condition`` / ``fallback_used``), so degenerate series
-come back finite and flagged instead of NaN-ing a whole slot pool.
+Requests carry their own ``repro.api.FitSpec`` (``submit(x, y,
+spec=...)``): the solve side — solver/fallback/cond_cap ladder, ridge,
+method (LSE / moment-space LSPIA), fixed degree ≤ the pool's (served from
+the ``Moments.truncate`` view), or a DegreeSearch over the nested ladder —
+is honored PER REQUEST.  Each distinct spec compiles its solve executable
+once (the spec is the jit static arg) and coexists with every other spec
+from then on: the no-recompile invariant keyed on spec identity.  The
+accumulation side (basis, engine path, decay, pinned domain, max degree)
+is necessarily pool-wide — it is baked into the slots' running moments —
+and comes from ``FitServeConfig`` (or its ``spec=``).
 
 The host loop is deliberately synchronous/deterministic — the scheduling
 substrate an async front-end would wrap.
@@ -37,8 +43,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import select as select_lib
+from repro.core import basis as basis_lib
 from repro.core import fit as fit_lib
+from repro.core import lspia as lspia_lib
 from repro.core import moments as moments_lib
+from repro.core import robust as robust_lib
+from repro.core import solve as solve_lib
 from repro.core import streaming
 
 
@@ -46,16 +56,18 @@ from repro.core import streaming
 class FitRequest:
     """One fit job: a ragged series in, a polynomial + quality report out.
 
-    ``auto=True`` requests (``submit(..., degree="auto")``) come back with
-    the *chosen* degree plus the whole scored ladder: ``degree`` is the
-    winner under the engine's ``select_criterion``, ``scores`` maps each
-    criterion name to its per-degree row (0..cfg.degree), and
+    ``spec`` is the request's ``FitSpec`` (the engine's default when the
+    legacy ``degree=`` spelling was used).  DegreeSearch specs
+    (``auto=True``) come back with the *chosen* degree plus the whole
+    scored ladder: ``degree`` is the winner under the spec's criterion,
+    ``scores`` maps each criterion name to its per-degree row, and
     ``condition_ladder`` carries κ(truncated Gram) per candidate degree —
     the response diagnostics of single-pass model selection."""
 
     uid: int
     x: np.ndarray                      # (n,) host-side series
     y: np.ndarray
+    spec: Any = None                   # the request's FitSpec
     auto: bool = False                 # automatic degree selection requested
     coeffs: np.ndarray | None = None   # (degree+1,) when done
     sse: float | None = None
@@ -75,8 +87,8 @@ class FitRequest:
 
 @dataclasses.dataclass(frozen=True)
 class FitServeConfig:
-    degree: int = 3                     # fixed fit degree AND the auto-
-    # degree ladder's maximum candidate (slots accumulate at this degree)
+    degree: int = 3                     # pool accumulation degree AND the
+    # ceiling for per-request degrees / DegreeSearch ladders
     n_slots: int = 8                    # concurrent series per bucket
     buckets: tuple[int, ...] = (256, 2048)   # chunk widths, ascending
     solver: str = "auto"                # condition-aware solve (core.solve)
@@ -88,26 +100,38 @@ class FitServeConfig:
     decay: float = 1.0                  # exponential forgetting (γ=1: off);
     # γ<1 assumes full chunks (ages are counted inside each ingest chunk)
     engine: str = "auto"                # repro.engine path selection
-    select_criterion: str = "aicc"      # auto-degree criterion (moment-
-    # space only: the slot pool keeps one running state per series, no
-    # fold partials — AIC/AICc/BIC/GCV; "cv" would need fold slots)
+    select_criterion: str = "aicc"      # default auto-degree criterion
+    # (moment-space only: the slot pool keeps no fold partials —
+    # AIC/AICc/BIC/GCV; "cv" would need fold slots)
     dtype: Any = jnp.float32
+    spec: Any = None                    # a FitSpec supplying the pool-wide
+    # accumulation policy (degree/basis/engine/decay/domain/numerics) AND
+    # the default per-request solve; overrides the flat fields above
 
 
 class _Bucket:
     """One length bucket: a slot pool + its compiled ingest step."""
 
-    def __init__(self, width: int, n_slots: int, cfg: FitServeConfig):
+    def __init__(self, width: int, n_slots: int, engine: "FitServeEngine"):
+        cfg = engine.cfg
+        pool = engine.spec
         self.width = width
         self.state = streaming.StreamState.create(
-            cfg.degree, (n_slots,), decay=cfg.decay, dtype=cfg.dtype)
+            pool.max_degree, (n_slots,), decay=pool.decay, dtype=cfg.dtype)
         self.slot_req: list[FitRequest | None] = [None] * n_slots
         self.slot_pos = np.zeros(n_slots, np.int64)    # points ingested
         self.reset = np.zeros(n_slots, bool)           # zero slot next step
         self.queue: list[FitRequest] = []
+        dom = pool.domain_or(None, dtype=cfg.dtype)
+        rsolver = engine._pool_solver
+        ridge = max(pool.ridge, 1e-9)   # the reweight solve must tolerate
+        # idle/young slots even when the request asked for ridge=0
+        degree = pool.max_degree
+
+        sweeps = pool.irls.stream_sweeps
 
         @jax.jit
-        def ingest(state, x, y, w, keep):
+        def ingest(state, x, y, w, keep, rmask, loss_id, cval):
             # keep==0 wipes a slot's previous occupant inside the same
             # compiled step (count included: it restarts for the new series)
             m = state.moments
@@ -115,9 +139,54 @@ class _Bucket:
             m = moments_lib.Moments(
                 gram=m.gram * k[:, None, None], vty=m.vty * k[:, None],
                 yty=m.yty * k, count=m.count * k, weight_sum=m.weight_sum * k)
-            return streaming.update(
-                streaming.StreamState(m, state.decay), x, y, weights=w,
-                engine=cfg.engine)
+            st = streaming.StreamState(m, state.decay)
+            xt = dom.apply(x) if dom is not None else x
+
+            def solve(mm):
+                coeffs, _, _ = solve_lib.solve_with_fallback(
+                    mm.regularized(ridge).gram, mm.regularized(ridge).vty,
+                    method=rsolver, fallback="svd")
+                return coeffs
+
+            def rw_of(coeffs, w):
+                # ψ-weights with the loss/tuning selected by RUNTIME
+                # per-slot arrays — one executable serves any robust/plain
+                # mix with zero recompiles
+                r = y - basis_lib.evaluate(coeffs, xt, basis=pool.basis)
+                sigma = robust_lib.chunk_scale(r, w, y)
+                wr = robust_lib.robust_weights_by_id(
+                    r / sigma, loss_id[:, None], cval[:, None])
+                return jnp.where((rmask > 0)[:, None], wr, 1.0)
+
+            def reweight(w):
+                # per-slot single-pass IRLS: sweep 0 against the slot's
+                # RUNNING fit (where determined), then stream_sweeps − 1
+                # re-accumulations of the in-hand chunk against
+                # (decayed slot state + chunk) — robust from the first
+                # chunk.  Mirrors streaming._streaming_irls_weights,
+                # including the decay bookkeeping: old mass ages by γⁿ and
+                # the chunk carries its own γ age ladder, exactly as the
+                # final streaming.update accumulation will weight it.
+                determined = (st.moments.count > degree)[:, None]
+                wr = jnp.where(determined, rw_of(solve(st.moments), w), 1.0)
+                from repro import engine as engine_lib
+                plan = engine_lib.plan_fit(
+                    x.shape, degree, basis=pool.basis, dtype=x.dtype,
+                    weighted=True, engine=pool.engine,
+                    accum_dtype=st.moments.gram.dtype)
+                n = x.shape[-1]
+                g = st.decay ** jnp.asarray(n, st.decay.dtype)
+                old = jax.tree.map(lambda a: a * g, st.moments)
+                lad = moments_lib.decay_ladder(n, st.decay, x.dtype)
+                for _ in range(sweeps - 1):
+                    new = engine_lib.compute_moments(plan, xt, y,
+                                                     lad * w * wr)
+                    wr = rw_of(solve(old + new), w)
+                return wr * w
+
+            w = jax.lax.cond(jnp.any(rmask > 0), reweight, lambda w: w, w)
+            return streaming.update(st, xt, y, weights=w, basis=pool.basis,
+                                    engine=pool.engine)
 
         self.ingest = ingest
 
@@ -126,6 +195,8 @@ class FitServeEngine:
     """Host-side continuous batching around compiled moment-ingest steps."""
 
     def __init__(self, cfg: FitServeConfig | None = None):
+        from repro.api import spec as spec_lib
+        from repro.engine import plan as plan_lib
         self.cfg = cfg = cfg or FitServeConfig()
         if tuple(sorted(cfg.buckets)) != tuple(cfg.buckets):
             raise ValueError(f"buckets must ascend: {cfg.buckets}")
@@ -135,71 +206,211 @@ class FitServeEngine:
                 f"keeps no fold partials, so only moment-space criteria "
                 f"{select_lib.MOMENT_CRITERIA} can serve auto-degree "
                 "requests")
-        self.buckets = [_Bucket(w, cfg.n_slots, cfg) for w in cfg.buckets]
+        if cfg.spec is not None:
+            base = cfg.spec
+        else:
+            solver = cfg.method or cfg.solver
+            base = spec_lib.FitSpec(
+                degree=cfg.degree,
+                numerics=plan_lib.NumericsPolicy(solver=solver,
+                                                 fallback=cfg.fallback),
+                decay=cfg.decay, ridge=cfg.ridge, engine=cfg.engine)
+        # the pool-wide spec: what the slots accumulate (fixed max degree)
+        self.spec = (dataclasses.replace(base, degree=base.max_degree)
+                     if base.is_search else base)
+        self._validate_pool_spec(self.spec)
+        # default per-request specs for the legacy degree= spellings
+        self.fixed_spec = self.spec
+        ds = (base.degree if base.is_search
+              else select_lib.DegreeSearch(
+                  max_degree=self.spec.max_degree, folds=0,
+                  criterion=cfg.select_criterion,
+                  solver=self.spec.numerics.solver,
+                  fallback=self.spec.numerics.fallback,
+                  cond_cap=self.spec.numerics.cond_cap))
+        # a DegreeSearch rides the condition-aware ladder solve; an LSPIA
+        # pool's auto requests therefore search as LSE (the accumulated
+        # moments are method-free — only the solve differs)
+        self.auto_spec = dataclasses.replace(
+            base, degree=ds,
+            method="lse" if base.method == "lspia" else base.method)
+        self.default_spec = base if base.is_search else self.fixed_spec
+        # the reweight solve's static rung (pool degree/dtype/basis)
+        self._pool_solver = (
+            self.spec.numerics.solver if self.spec.numerics.solver
+            not in ("auto",) + spec_lib.RAW_DATA_SOLVERS
+            else solve_lib.select_solver(
+                self.spec.max_degree, cfg.dtype, basis=self.spec.basis,
+                normalized=self.spec.domain is not None))
+        self.buckets = [_Bucket(w, cfg.n_slots, self) for w in cfg.buckets]
         self._uid = 0
         self.fits_done = 0
         self.points_ingested = 0
+        pool_degree = self.spec.max_degree
+        from functools import partial as _partial
 
-        @jax.jit
-        def solve(state):
-            poly = streaming.current_fit(state, method=cfg.method,
-                                         solver=cfg.solver,
-                                         fallback=cfg.fallback,
-                                         ridge=cfg.ridge)
-            rep = fit_lib.report_from_moments(state.moments, poly.coeffs)
-            d = poly.diagnostics
-            return (poly.coeffs, rep.sse, rep.r, state.moments.count,
-                    d.condition, d.fallback_used)
+        @_partial(jax.jit, static_argnames=("spec",))
+        def solve(state, spec):
+            # the per-request fixed-degree solve: the request's nested
+            # degree is a truncate view of the pooled state; its numerics
+            # policy (solver rung, fallback, cond_cap, ridge) and method
+            # (LSE vs moment-space LSPIA) ride in the static spec
+            d = int(spec.degree)
+            m = (state.moments.truncate(d) if d < pool_degree
+                 else state.moments)
+            ms = m.regularized(spec.ridge) if spec.ridge else m
+            if spec.method == "lspia":
+                opts = spec.lspia
+                coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
+                    ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
+                    power_iters=opts.power_iters, step=opts.step)
+                fb = ~conv
+            else:
+                rung = spec.numerics.solver
+                if rung == "auto":
+                    rung = solve_lib.select_solver(
+                        d, state.moments.gram.dtype, basis=spec.basis,
+                        normalized=spec.domain is not None)
+                coeffs, cond, fb = solve_lib.solve_with_fallback(
+                    ms.gram, ms.vty, method=rung,
+                    fallback=spec.numerics.fallback,
+                    cond_cap=spec.numerics.cond_cap)
+            rep = fit_lib.report_from_moments(m, coeffs)
+            return (coeffs, rep.sse, rep.r, state.moments.count, cond, fb)
 
         self._solve = solve
 
-        @jax.jit
-        def sweep(state):
-            # the auto-degree solve: whole ladder 0..cfg.degree from the
-            # slot pool's running moments (same ridge stabilizer — idle
-            # slots must stay solvable at every rung — but scored on the
-            # RAW moments so sse/criteria agree with the fixed-degree
-            # path), plus the per-degree R of the padded coefficient
-            # ladder for the response report.  One compiled executable
-            # for ALL buckets (state shapes match).
-            m = state.moments.regularized(cfg.ridge)
+        @_partial(jax.jit, static_argnames=("spec",))
+        def sweep(state, spec):
+            # the auto-degree solve: the request's ladder 0..max_degree
+            # from the (truncated view of the) slot pool's running moments
+            # — same ridge stabilizer (idle slots must stay solvable at
+            # every rung) but scored on the RAW moments so sse/criteria
+            # agree with the fixed-degree path, plus the per-degree R of
+            # the padded coefficient ladder for the response report.
+            ds = spec.degree
+            m = (state.moments.truncate(ds.max_degree)
+                 if ds.max_degree < pool_degree else state.moments)
+            ridge = spec.ridge
+            mr = m.regularized(ridge) if ridge else m
+            rung = (spec.numerics.solver
+                    if spec.numerics.solver != "auto" else ds.solver)
             sw = select_lib.sweep_from_moments(
-                m, score_moments=state.moments,
-                solver=cfg.method or cfg.solver, fallback=cfg.fallback)
-            rep = fit_lib.report_from_moments(state.moments, sw.coeffs)
+                mr, score_moments=m if ridge else None, solver=rung,
+                fallback=ds.fallback, cond_cap=ds.cond_cap,
+                basis=spec.basis, normalized=spec.domain is not None)
+            rep = fit_lib.report_from_moments(m, sw.coeffs)
             return sw, rep.r, state.moments.count
 
         self._sweep = sweep
 
+    def _validate_pool_spec(self, spec) -> None:
+        # only an EXPLICIT normalize request is rejected: the plan layer's
+        # high-degree auto-escalation is a before-the-Gram fix the server
+        # cannot apply (min/max of unseen series), so — as the engine
+        # always has — high-degree pools accumulate raw-domain moments and
+        # lean on solve-time solver escalation + the rank-revealing
+        # fallback instead (pin FitSpec.domain to get true normalization)
+        from repro.api import spec as spec_lib
+        if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
+            raise ValueError(
+                f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
+                "rows; the slot pools only hold moments")
+        if spec.numerics.normalize and spec.domain is None:
+            raise ValueError(
+                "this spec normalizes the domain, but the server cannot "
+                "derive min/max from series it has not seen — pin it with "
+                "FitSpec(domain=(shift, scale))")
+
     # ------------------------------------------------------------- plumbing
-    def submit(self, x, y, *, degree: int | str | None = None) -> FitRequest:
+    def _resolve_spec(self, degree, spec):
+        """Map the (degree=, spec=) submit spellings onto one FitSpec."""
+        if spec is not None:
+            if degree is not None:
+                raise ValueError("pass degree= or spec=, not both")
+            self._validate_request_spec(spec)
+            return spec
+        if degree is None:
+            return self.default_spec
+        if degree == "auto":
+            return self.auto_spec
+        if int(degree) != self.spec.max_degree:
+            raise ValueError(
+                f"degree={degree!r}: slot pools accumulate at the static "
+                f"cfg.degree={self.spec.max_degree}; pass degree='auto' for "
+                "selection over the ladder 0..cfg.degree, or a FitSpec "
+                "(spec=) for any nested degree <= cfg.degree")
+        return self.fixed_spec
+
+    def _validate_request_spec(self, spec) -> None:
+        from repro.api import spec as spec_lib
+        pool = self.spec
+        if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
+            raise ValueError(
+                f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
+                "rows; the slot pools only hold moments")
+        if spec.basis != pool.basis:
+            raise ValueError(
+                f"request basis={spec.basis!r} but the pool accumulates "
+                f"{pool.basis!r} moments — basis is pool-wide "
+                "(FitServeConfig.spec)")
+        if spec.domain != pool.domain:
+            raise ValueError(
+                f"request domain={spec.domain!r} but the pool accumulates "
+                f"in domain {pool.domain!r} — the domain map is baked into "
+                "the slots' moments (FitServeConfig.spec)")
+        if spec.decay != pool.decay:
+            raise ValueError(
+                f"request decay={spec.decay} but the pool decays at "
+                f"{pool.decay} — forgetting is baked into the running "
+                "state (FitServeConfig.spec)")
+        if spec.max_degree > pool.max_degree:
+            raise ValueError(
+                f"request degree {spec.max_degree} exceeds the pool's "
+                f"accumulation degree {pool.max_degree}; nested degrees "
+                "<= cfg.degree are served from the truncated state")
+        if (spec.method == "irls"
+                and spec.irls.stream_sweeps != pool.irls.stream_sweeps):
+            raise ValueError(
+                f"request stream_sweeps={spec.irls.stream_sweeps} but the "
+                f"pool's compiled ingest runs {pool.irls.stream_sweeps} — "
+                "the sweep count is baked into the ingest executable "
+                "(FitServeConfig.spec); per-request loss/c ARE honored")
+        if spec.is_search:
+            crit = spec.degree.criterion or self.cfg.select_criterion
+            if crit not in select_lib.MOMENT_CRITERIA:
+                raise ValueError(
+                    f"criterion={crit!r}: the slot pool keeps no fold "
+                    f"partials, so only {select_lib.MOMENT_CRITERIA} can "
+                    "serve auto-degree requests")
+
+    def submit(self, x, y, *, degree: int | str | None = None,
+               spec=None) -> FitRequest:
         """Queue one ragged series; routed to the smallest bucket that holds
         it in one chunk, else the largest (multi-chunk streaming ingest).
 
-        ``degree="auto"`` requests automatic degree selection over the
-        ladder 0..cfg.degree: the response carries the chosen degree, the
-        per-degree criterion scores, and the per-degree condition — same
-        single accumulation, one extra O(m²) ladder solve at completion.
-        Any other ``degree`` must equal ``cfg.degree`` (the slot pools
-        accumulate at one static degree)."""
-        auto = degree == "auto"
-        if degree is not None and not auto and int(degree) != self.cfg.degree:
-            raise ValueError(
-                f"degree={degree!r}: slot pools accumulate at the static "
-                f"cfg.degree={self.cfg.degree}; pass degree='auto' for "
-                "selection over the ladder 0..cfg.degree")
+        ``spec=`` attaches a full ``FitSpec`` to the request: its method
+        (LSE / IRLS chunk-reweighting / moment-space LSPIA), its solve
+        policy (solver/fallback/cond_cap/ridge), a nested fixed degree
+        <= cfg.degree, or a DegreeSearch over the nested ladder.  Each
+        distinct spec compiles its solve once, then coexists with every
+        other spec — no recompiles.  ``degree=`` is the legacy spelling:
+        the pool degree, or "auto" for selection under the engine's
+        default criterion."""
+        rspec = self._resolve_spec(degree, spec)
+        auto = rspec.is_search
         x = np.asarray(x, np.float32)
         y = np.asarray(y, np.float32)
         if x.ndim != 1 or x.shape != y.shape or x.shape[0] == 0:
             raise ValueError(f"expected equal non-empty 1-D x/y, got "
                              f"{x.shape} vs {y.shape}")
-        if not auto and x.shape[0] < self.cfg.degree + 1:
+        if not auto and x.shape[0] < int(rspec.degree) + 1:
             raise ValueError(
                 f"series of {x.shape[0]} points cannot determine a "
-                f"degree-{self.cfg.degree} fit (need >= "
-                f"{self.cfg.degree + 1}); degree='auto' accepts short "
+                f"degree-{int(rspec.degree)} fit (need >= "
+                f"{int(rspec.degree) + 1}); degree='auto' accepts short "
                 "series (underdetermined rungs score +inf)")
-        req = FitRequest(self._uid, x, y, auto=auto)
+        req = FitRequest(self._uid, x, y, spec=rspec, auto=auto)
         self._uid += 1
         for b in self.buckets[:-1]:
             if req.n <= b.width:
@@ -212,23 +423,25 @@ class FitServeEngine:
         """Compile every executable up front — one full-width synthetic
         fixed-degree request AND one auto-degree request per bucket,
         drained immediately — so steady-state serving provably never
-        recompiles whatever mix of request kinds arrives.  Returns
-        ``compiled_executables()`` (the baseline the no-recompile
-        invariant is asserted against).  Deterministic: does not depend on
-        the live traffic's lengths."""
+        recompiles whatever mix of DEFAULT-spec request kinds arrives.
+        (A novel per-request spec compiles its own solve once on first
+        use, then joins the invariant.)  Returns ``compiled_executables()``
+        (the baseline the no-recompile invariant is asserted against).
+        Deterministic: does not depend on the live traffic's lengths."""
         if self.pending:
             raise RuntimeError("warmup() requires an idle engine")
         for b in self.buckets:
-            n = max(b.width, self.cfg.degree + 1)
+            n = max(b.width, self.spec.max_degree + 1)
             x = np.linspace(-1.0, 1.0, n, dtype=np.float32)
-            self.submit(x, x)
-            self.submit(x, x, degree="auto")
+            self.submit(x, x, spec=self.fixed_spec)
+            self.submit(x, x, spec=self.auto_spec)
         self.run()
         return self.compiled_executables()
 
     def compiled_executables(self) -> int:
         """Total compiled executables across the engine's jitted steps —
-        constant after warmup is the no-recompile serving invariant."""
+        constant after warmup (plus one per NOVEL request spec, compiled
+        at first use) is the no-recompile serving invariant."""
         return (self._solve._cache_size() + self._sweep._cache_size()
                 + sum(b.ingest._cache_size() for b in self.buckets))
 
@@ -254,6 +467,9 @@ class FitServeEngine:
         xh = np.zeros((n_slots, w), np.float32)
         yh = np.zeros((n_slots, w), np.float32)
         wh = np.zeros((n_slots, w), np.float32)
+        rmask = np.zeros(n_slots, np.float32)
+        loss_id = np.zeros(n_slots, np.int32)
+        cval = np.ones(n_slots, np.float32)
         for s in active:
             req = b.slot_req[s]
             lo = int(b.slot_pos[s])
@@ -264,33 +480,46 @@ class FitServeEngine:
             wh[s, :m] = 1.0
             b.slot_pos[s] = lo + m
             self.points_ingested += m
+            if req.spec.method == "irls":
+                rmask[s] = 1.0
+                loss_id[s] = robust_lib.LOSS_IDS[req.spec.irls.loss]
+                cval[s] = robust_lib.resolve_tuning(req.spec.irls.loss,
+                                                    req.spec.irls.c)
         keep = np.where(b.reset, 0.0, 1.0).astype(np.float32)
         b.reset[:] = False
         b.state = b.ingest(b.state, jnp.asarray(xh), jnp.asarray(yh),
-                           jnp.asarray(wh), jnp.asarray(keep))
+                           jnp.asarray(wh), jnp.asarray(keep),
+                           jnp.asarray(rmask), jnp.asarray(loss_id),
+                           jnp.asarray(cval))
 
         ready = [s for s in active if b.slot_pos[s] >= b.slot_req[s].n]
         if not ready:
             return
-        fixed = [s for s in ready if not b.slot_req[s].auto]
-        autos = [s for s in ready if b.slot_req[s].auto]
-        if fixed:
+        # group ready slots by their request's spec: one compiled solve
+        # per DISTINCT spec (not per request) serves the whole group
+        fixed_groups: dict[Any, list[int]] = {}
+        auto_groups: dict[Any, list[int]] = {}
+        for s in ready:
+            groups = (auto_groups if b.slot_req[s].auto else fixed_groups)
+            groups.setdefault(b.slot_req[s].spec, []).append(s)
+        for spec, slots in fixed_groups.items():
             coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
-                                               self._solve(b.state))
-            for s in fixed:
+                                               self._solve(b.state, spec))
+            for s in slots:
                 req = b.slot_req[s]
-                req.coeffs = coeffs[s].copy()
+                d = int(spec.degree)
+                req.coeffs = coeffs[s][:d + 1].copy()
                 req.sse = float(sse[s])
                 req.r = float(r[s])
                 req.count = float(count[s])
                 req.condition = float(cond[s])
                 req.fallback_used = bool(fb[s])
-                req.degree = self.cfg.degree
+                req.degree = d
                 req.done = True
                 b.slot_req[s] = None
                 self.fits_done += 1
-        if autos:
-            sw, r_ladder, count = self._sweep(b.state)
+        for spec, slots in auto_groups.items():
+            sw, r_ladder, count = self._sweep(b.state, spec)
             scores = {name: np.asarray(sw.scores.by_name(name))
                       for name in select_lib.MOMENT_CRITERIA + ("sse", "r2")}
             ladder = np.asarray(sw.coeffs)
@@ -298,8 +527,8 @@ class FitServeEngine:
             fb = np.asarray(sw.fallback_used)
             r_ladder = np.asarray(r_ladder)
             count = np.asarray(count)
-            crit = self.cfg.select_criterion
-            for s in autos:
+            crit = spec.degree.criterion or self.cfg.select_criterion
+            for s in slots:
                 req = b.slot_req[s]
                 d = int(np.argmin(scores[crit][s]))
                 req.degree = d
@@ -317,7 +546,7 @@ class FitServeEngine:
 
     def step(self) -> None:
         """One engine iteration: admit + one compiled ingest per non-empty
-        bucket (+ one compiled solve per bucket that finished a series)."""
+        bucket (+ one compiled solve per distinct ready spec)."""
         for b in self.buckets:
             self._step_bucket(b)
 

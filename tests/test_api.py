@@ -1,0 +1,474 @@
+"""repro.api: one declarative FitSpec, four execution surfaces.
+
+The heart is the cross-surface parity matrix: the SAME FitSpec must
+produce coefficient-identical results (κ-scaled tolerance) on eager vs
+streaming vs distributed vs serve, over method × basis × degree-search
+cells — including the cells the spec redesign newly unlocked
+(IRLS+streaming, DegreeSearch+IRLS).  Distributed cells run when the
+process was started with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(same convention as tests/test_distributed_fit.py) and are skipped
+otherwise; the other three surfaces always run.
+
+Also here: FitSpec construction-time validation, the spec-keyed compile
+cache (equal specs share one executable), the polyfit_qr deprecation
+(matching the use_kernel= precedent), per-request serve solver policy,
+and the public-API snapshot (core.__all__ + api.__all__ frozen to a
+checked-in list so accidental surface growth fails CI).
+"""
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api, core
+from repro.core import streaming
+
+HAVE_DEVICES = len(jax.devices()) >= 8
+
+rng = np.random.default_rng(7)
+N = 1024
+_x = rng.uniform(-2.0, 2.0, N)
+TRUE = np.array([1.0, -0.5, 0.0, 0.3])
+_clean = np.polyval(TRUE[::-1], _x)
+X = jnp.asarray(_x, jnp.float32)
+Y_EXACT = jnp.asarray(_clean, jnp.float32)
+Y_NOISY = jnp.asarray(_clean + rng.normal(0, 0.05, N), jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# FitSpec: construction-time validation, hashability, compile-cache keying
+# --------------------------------------------------------------------------
+class TestFitSpec:
+    def test_defaults_validate(self):
+        spec = api.FitSpec()
+        assert spec.degree == 3 and spec.method == "lse"
+        assert hash(spec) == hash(api.FitSpec())
+        assert spec == api.FitSpec()
+
+    @pytest.mark.parametrize("make", [
+        lambda: api.FitSpec(method="nope"),
+        lambda: api.FitSpec(basis="legendre"),
+        lambda: api.FitSpec(engine="cuda"),
+        lambda: api.FitSpec(degree=-1),
+        lambda: api.FitSpec(decay=0.0),
+        lambda: api.FitSpec(decay=1.5),
+        lambda: api.FitSpec(ridge=-1e-3),
+        lambda: api.FitSpec(method="lspia", degree=api.DegreeSearch()),
+        lambda: api.FitSpec(numerics=api.NumericsPolicy(solver="lspia")),
+        lambda: api.FitSpec(numerics=api.NumericsPolicy(
+            solver="qr_vandermonde"), method="irls"),
+        lambda: api.FitSpec(numerics=api.NumericsPolicy(
+            solver="qr_vandermonde"), degree=api.DegreeSearch()),
+        lambda: api.FitSpec(engine="kernel", basis="chebyshev"),
+        lambda: api.IRLSOptions(loss="cauchy"),
+    ])
+    def test_invalid_specs_raise_at_construction(self, make):
+        with pytest.raises(ValueError):
+            make()
+
+    def test_domain_accepts_domain_and_tuple(self):
+        from repro.core import basis as basis_lib
+        a = api.FitSpec(domain=(1.0, 0.5))
+        b = api.FitSpec(domain=basis_lib.Domain(jnp.float32(1.0),
+                                                jnp.float32(0.5)))
+        assert a == b and a.domain == (1.0, 0.5)
+
+    def test_equal_specs_share_one_executable(self):
+        """The compile cache keys on spec identity: re-running an equal
+        spec adds no executable; a different spec adds exactly one."""
+        from repro.api import executors
+        x = jnp.linspace(-1, 1, 64)
+        y = x * 2.0 + 1.0
+        api.fit(x, y, api.FitSpec(degree=2))
+        base = executors._fit_lse_fixed._cache_size()
+        api.fit(x, y, api.FitSpec(degree=2))        # equal spec, new object
+        assert executors._fit_lse_fixed._cache_size() == base
+        api.fit(x, y, api.FitSpec(degree=2, ridge=1e-6))
+        assert executors._fit_lse_fixed._cache_size() == base + 1
+
+    def test_shim_polyfit_identical_to_spec_fit(self):
+        a = core.polyfit(X, Y_NOISY, 3)
+        b = api.fit(X, Y_NOISY, api.FitSpec(degree=3))
+        np.testing.assert_array_equal(np.asarray(a.coeffs),
+                                      np.asarray(b.coeffs))
+        assert b.report is not None and np.isfinite(float(b.report.sse))
+
+
+# --------------------------------------------------------------------------
+# polyfit_qr fold-in + deprecation (matching the use_kernel= precedent)
+# --------------------------------------------------------------------------
+class TestQRVandermonde:
+    def test_polyfit_qr_warns_and_matches_spec_path(self):
+        with pytest.warns(DeprecationWarning, match="qr_vandermonde"):
+            old = core.polyfit_qr(X, Y_NOISY, 3)
+        new = api.fit(X, Y_NOISY, api.FitSpec(
+            method="lse",
+            numerics=api.NumericsPolicy(solver="qr_vandermonde",
+                                        fallback=None)))
+        np.testing.assert_array_equal(np.asarray(old.coeffs),
+                                      np.asarray(new.coeffs))
+        via_polyfit = core.polyfit(X, Y_NOISY, 3, solver="qr_vandermonde")
+        np.testing.assert_array_equal(np.asarray(old.coeffs),
+                                      np.asarray(via_polyfit.coeffs))
+
+    def test_qr_vandermonde_close_to_normal_equations(self):
+        qr = core.polyfit(X, Y_NOISY, 3, solver="qr_vandermonde")
+        ge = core.polyfit(X, Y_NOISY, 3)
+        np.testing.assert_allclose(np.asarray(qr.coeffs),
+                                   np.asarray(ge.coeffs),
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_raw_data_solver_rejected_on_moment_surfaces(self):
+        spec = api.FitSpec(numerics=api.NumericsPolicy(
+            solver="qr_vandermonde"))
+        with pytest.raises(ValueError, match="moments|Vandermonde"):
+            spec.streaming()
+        from repro.serve import FitServeConfig, FitServeEngine
+        eng = FitServeEngine(FitServeConfig(n_slots=1, buckets=(32,)))
+        with pytest.raises(ValueError, match="moments|Vandermonde"):
+            eng.submit(np.ones(8), np.ones(8), spec=spec)
+
+
+# --------------------------------------------------------------------------
+# the cross-surface parity matrix
+# --------------------------------------------------------------------------
+def _eager(spec, x, y):
+    return api.fit(x, y, spec)
+
+
+def _stream(spec, x, y, chunks=4):
+    st = spec.streaming()
+    n = x.shape[-1] // chunks
+    for i in range(chunks):
+        st = streaming.update(st, x[i * n:(i + 1) * n],
+                              y[i * n:(i + 1) * n])
+    return api.stream_result(st)
+
+
+def _serve(spec, x, y):
+    from repro.serve import FitServeConfig, FitServeEngine
+    eng = FitServeEngine(FitServeConfig(spec=spec, n_slots=2,
+                                        buckets=(256,)))
+    req = eng.submit(np.asarray(x), np.asarray(y), spec=spec)
+    eng.run()
+    assert req.done
+    return req
+
+
+def _distributed(spec, x, y):
+    from repro.launch import mesh as mesh_lib
+    mesh = mesh_lib.make_host_mesh(data=8, model=1)
+    return spec.distributed(mesh)(x, y)
+
+
+def _coeff_tol(res, scale=200.0):
+    """κ-scaled absolute tolerance: the honest fp-difference budget for
+    two evaluations of the same solve from differently-ordered f32 sums."""
+    kappa = 1.0
+    diag = res.poly.diagnostics
+    if diag is not None:
+        k = float(np.max(np.asarray(diag.condition)))
+        if np.isfinite(k):
+            kappa = max(kappa, k)
+    cscale = max(1.0, float(np.max(np.abs(np.asarray(res.coeffs)))))
+    return scale * kappa * np.finfo(np.float32).eps * cscale
+
+
+# (name, spec, y, extra absolute slack for iterative/approximate surfaces)
+MATRIX_CELLS = [
+    ("lse-monomial-d3",
+     api.FitSpec(degree=3), Y_NOISY, 0.0),
+    ("lse-chebyshev-d4-pinned",
+     api.FitSpec(degree=4, basis="chebyshev", domain=(0.0, 0.5)),
+     Y_NOISY, 0.0),
+    ("lse-decayless-ridge",
+     api.FitSpec(degree=2, ridge=1e-6), Y_NOISY, 0.0),
+    ("irls-huber-d3",
+     api.FitSpec(degree=3, method="irls"), Y_EXACT, 1e-4),
+    ("irls-tukey-cheb-d3",
+     api.FitSpec(degree=3, basis="chebyshev", domain=(0.0, 0.5),
+                 method="irls", irls=api.IRLSOptions(loss="tukey")),
+     Y_EXACT, 1e-4),
+    ("lspia-d3-pinned",
+     api.FitSpec(degree=3, method="lspia", domain=(0.0, 0.5)),
+     Y_NOISY, 5e-3),
+    ("search-aicc-lse",
+     api.FitSpec(degree=api.DegreeSearch(max_degree=5, folds=0,
+                                         criterion="aicc")), Y_NOISY, 0.0),
+    # noisy (not exact) data: on an exact interpolation every rung past
+    # the true degree has SSE at roundoff and the criteria order noise;
+    # with real noise the BIC gaps dwarf the small difference between the
+    # surfaces' IRLS weights (converged loop vs per-chunk reweighting)
+    ("search-bic-irls",
+     api.FitSpec(degree=api.DegreeSearch(max_degree=4, folds=0,
+                                         criterion="bic"),
+                 method="irls"), Y_NOISY, 5e-3),
+]
+
+
+def _result_coeffs(out):
+    """Uniform (degree, coeffs) view across surface result types."""
+    if isinstance(out, api.FitResult):
+        if out.selection is not None:
+            d = int(np.asarray(out.selection.best_degree))
+            c = np.asarray(out.coeffs)[..., :d + 1]
+            return d, c
+        c = np.asarray(out.coeffs)
+        return c.shape[-1] - 1, c
+    # a served FitRequest
+    return int(out.degree), np.asarray(out.coeffs)
+
+
+@pytest.mark.parametrize("name,spec,y,slack",
+                         MATRIX_CELLS, ids=[c[0] for c in MATRIX_CELLS])
+def test_parity_matrix(name, spec, y, slack):
+    """One FitSpec, every surface, coefficient-identical answers."""
+    ref = _eager(spec, X, y)
+    d_ref, c_ref = _result_coeffs(ref)
+    tol = _coeff_tol(ref) + slack
+    surfaces = {"streaming": _stream, "serve": _serve}
+    if HAVE_DEVICES:
+        surfaces["distributed"] = _distributed
+    for sname, run in surfaces.items():
+        out = run(spec, X, y)
+        d, c = _result_coeffs(out)
+        assert d == d_ref, (f"{name}/{sname}: degree {d} != eager {d_ref}")
+        np.testing.assert_allclose(
+            c[..., :d_ref + 1], c_ref, atol=tol, rtol=tol,
+            err_msg=f"{name}/{sname} diverged from eager (tol={tol:.2e})")
+
+
+def test_matrix_covers_every_capability_axis():
+    """The acceptance grid: every method, both bases, fixed + search —
+    expressible as a FitSpec and present in the parity matrix."""
+    specs = [c[1] for c in MATRIX_CELLS]
+    assert {s.method for s in specs} == {"lse", "irls", "lspia"}
+    assert {s.basis for s in specs} == {"monomial", "chebyshev"}
+    assert any(s.is_search for s in specs)
+    assert any(not s.is_search for s in specs)
+    assert any(s.ridge > 0 for s in specs)
+    assert any(s.domain is not None for s in specs)
+
+
+# --------------------------------------------------------------------------
+# newly unlocked cells, behaviorally
+# --------------------------------------------------------------------------
+class TestUnlockedCells:
+    def test_streaming_irls_downweights_outliers(self):
+        """IRLS over streams: the spec-carrying state reweights each chunk
+        against the running fit, so gross outliers in later chunks barely
+        move the coefficients — while the plain LSE stream is dragged."""
+        rng = np.random.default_rng(3)
+        xs = rng.uniform(-2, 2, 2048).astype(np.float32)
+        ys = np.polyval(TRUE[::-1], xs).astype(np.float32)
+        ys_bad = ys.copy()
+        bad = rng.choice(np.arange(1024, 2048), 200, replace=False)
+        ys_bad[bad] += rng.choice([-1.0, 1.0], 200) * 50.0
+
+        def run(spec):
+            st = spec.streaming()
+            for lo in range(0, 2048, 256):
+                st = streaming.update(st, jnp.asarray(xs[lo:lo + 256]),
+                                      jnp.asarray(ys_bad[lo:lo + 256]))
+            return np.asarray(api.stream_result(st).coeffs)
+
+        robust = run(api.FitSpec(degree=3, method="irls",
+                                 irls=api.IRLSOptions(loss="tukey")))
+        plain = run(api.FitSpec(degree=3))
+        err_r = np.linalg.norm(robust - TRUE) / np.linalg.norm(TRUE)
+        err_p = np.linalg.norm(plain - TRUE) / np.linalg.norm(TRUE)
+        assert err_r < 0.05, f"streaming IRLS err {err_r:.3f}"
+        assert err_r < err_p / 5, (err_r, err_p)
+
+    def test_degree_search_under_robust_loss(self):
+        """DegreeSearch+IRLS: contamination that breaks plain selection is
+        survived when the ladder rides on IRLS weights."""
+        rng = np.random.default_rng(4)
+        xs = rng.uniform(-2, 2, 4096)
+        sig = np.polyval(TRUE[::-1], xs)
+        ys = sig + 0.05 * rng.normal(0, 1, 4096)
+        bad = rng.choice(4096, 800, replace=False)
+        ys[bad] += rng.choice([-1.0, 1.0], 800) * 50.0
+        x = jnp.asarray(xs, jnp.float32)
+        y = jnp.asarray(ys, jnp.float32)
+        res = api.fit(x, y, api.FitSpec(
+            degree=api.DegreeSearch(max_degree=6, folds=5),
+            method="irls", irls=api.IRLSOptions(loss="tukey")))
+        assert int(np.asarray(res.selection.best_degree)) == 3
+        # max_degree=6 auto-normalizes the domain — convert back to raw-x
+        raw = np.asarray(res.selection.poly.monomial_coeffs(), np.float64)
+        err = np.linalg.norm(raw - TRUE) / np.linalg.norm(TRUE)
+        assert err < 0.05, f"robust-search coeff err {err:.3f}"
+        # the same contamination sinks the plain (LSE) search entirely
+        plain = api.fit(x, y, api.FitSpec(
+            degree=api.DegreeSearch(max_degree=6, folds=5)))
+        assert int(np.asarray(plain.selection.best_degree)) != 3
+
+    def test_streaming_search_with_cv_folds(self):
+        """DegreeSearch folds become chunk-round-robin CV partials."""
+        spec = api.FitSpec(degree=api.DegreeSearch(max_degree=5, folds=5))
+        st = spec.streaming()
+        assert st.fold_moments is not None
+        for i in range(10):
+            lo = i * 100
+            st = streaming.update(st, X[lo:lo + 100], Y_NOISY[lo:lo + 100])
+        out = api.stream_result(st)
+        assert out.selection.criterion == "cv"
+        assert int(np.asarray(out.selection.best_degree)) == 3
+
+    def test_eager_decay_equals_streaming_decay(self):
+        """spec.decay on the eager surface == the chunked stream == the
+        mesh (each shard reconstructs its global γ ages) — the γ-weighted
+        LSE identity, now reachable from one spec on every surface."""
+        spec = api.FitSpec(degree=2, decay=0.999)
+        res = _eager(spec, X[:512], Y_NOISY[:512])
+        st = spec.streaming()
+        for lo in range(0, 512, 128):
+            st = streaming.update(st, X[lo:lo + 128],
+                                  Y_NOISY[lo:lo + 128])
+        out = api.stream_result(st)
+        np.testing.assert_allclose(np.asarray(out.coeffs),
+                                   np.asarray(res.coeffs),
+                                   rtol=1e-3, atol=1e-3)
+        if HAVE_DEVICES:
+            dist = _distributed(spec, X[:512], Y_NOISY[:512])
+            np.testing.assert_allclose(np.asarray(dist.coeffs),
+                                       np.asarray(res.coeffs),
+                                       rtol=1e-3, atol=1e-3)
+
+    def test_ridge_search_spec_honored_on_every_surface(self):
+        """A ridge-stabilized DegreeSearch solves the ladder on the λI
+        state but scores raw, identically on eager/streaming/serve (the
+        divergence the spec layer exists to prevent)."""
+        spec = api.FitSpec(degree=api.DegreeSearch(max_degree=4, folds=0,
+                                                   criterion="aicc"),
+                           ridge=1e-4)
+        ref = _eager(spec, X, Y_NOISY)
+        d_ref, c_ref = _result_coeffs(ref)
+        assert d_ref == 3
+        for run in (_stream, _serve):
+            d, c = _result_coeffs(run(spec, X, Y_NOISY))
+            assert d == d_ref
+            np.testing.assert_allclose(c[..., :d_ref + 1], c_ref,
+                                       rtol=2e-3, atol=2e-3)
+
+
+# --------------------------------------------------------------------------
+# serve: per-request solver policy (the FitServeConfig satellite)
+# --------------------------------------------------------------------------
+class TestServePerRequestPolicy:
+    def test_cond_cap_specs_coexist_without_recompiles(self):
+        """Two specs that differ only in cond_cap each compile their solve
+        ONCE (spec-keyed static arg), then arbitrary traffic of both mixes
+        with zero further recompiles — and the tighter cap demonstrably
+        flips the fallback on the same data."""
+        from repro.serve import FitServeConfig, FitServeEngine
+        eng = FitServeEngine(FitServeConfig(degree=3, n_slots=2,
+                                            buckets=(128,), ridge=1e-9))
+        warm = eng.warmup()
+        x = np.asarray(X[:400])
+        y = np.asarray(Y_NOISY[:400])
+        tight = api.FitSpec(degree=3, numerics=api.NumericsPolicy(
+            solver="gauss", fallback="svd", cond_cap=1.0))
+        loose = api.FitSpec(degree=3, numerics=api.NumericsPolicy(
+            solver="gauss", fallback="svd"))
+        a = eng.submit(x, y, spec=tight)
+        b = eng.submit(x, y, spec=loose)
+        eng.run()
+        after_first_use = eng.compiled_executables()
+        assert after_first_use == warm + 2   # one compile per novel spec
+        reqs = [eng.submit(x, y, spec=s)
+                for s in (tight, loose) * 4]
+        eng.run()
+        assert eng.compiled_executables() == after_first_use
+        assert all(r.done for r in reqs)
+        assert a.fallback_used and not b.fallback_used
+        np.testing.assert_allclose(a.coeffs, b.coeffs, rtol=5e-2, atol=5e-2)
+
+    def test_nested_degree_served_from_truncated_state(self):
+        from repro.serve import FitServeConfig, FitServeEngine
+        eng = FitServeEngine(FitServeConfig(degree=3, n_slots=2,
+                                            buckets=(128,)))
+        x, y = np.asarray(X[:300]), np.asarray(Y_NOISY[:300])
+        req = eng.submit(x, y, spec=api.FitSpec(degree=1))
+        eng.run()
+        ref = core.polyfit(jnp.asarray(x), jnp.asarray(y), 1)
+        assert req.degree == 1 and req.coeffs.shape == (2,)
+        np.testing.assert_allclose(req.coeffs, np.asarray(ref.coeffs),
+                                   rtol=5e-3, atol=5e-3)
+
+    def test_pool_mismatched_specs_rejected(self):
+        from repro.serve import FitServeConfig, FitServeEngine
+        eng = FitServeEngine(FitServeConfig(degree=3, n_slots=1,
+                                            buckets=(64,)))
+        x, y = np.ones(8, np.float32), np.ones(8, np.float32)
+        with pytest.raises(ValueError, match="basis"):
+            eng.submit(x, y, spec=api.FitSpec(degree=2, basis="chebyshev"))
+        with pytest.raises(ValueError, match="domain"):
+            eng.submit(x, y, spec=api.FitSpec(degree=2, domain=(0.0, 1.0)))
+        with pytest.raises(ValueError, match="decay"):
+            eng.submit(x, y, spec=api.FitSpec(degree=2, decay=0.99))
+        with pytest.raises(ValueError, match="exceeds"):
+            eng.submit(x, y, spec=api.FitSpec(degree=5))
+        with pytest.raises(ValueError, match="criterion"):
+            eng.submit(x, y, spec=api.FitSpec(
+                degree=api.DegreeSearch(max_degree=3, criterion="cv")))
+        with pytest.raises(ValueError, match="degree= or spec="):
+            eng.submit(x, y, degree=3, spec=api.FitSpec(degree=3))
+
+    def test_legacy_submit_spellings_still_pinned(self):
+        from repro.serve import FitServeConfig, FitServeEngine
+        eng = FitServeEngine(FitServeConfig(n_slots=1, buckets=(32,)))
+        with pytest.raises(ValueError):
+            eng.submit(np.ones(3), np.ones(4))
+        with pytest.raises(ValueError, match="determine"):
+            eng.submit(np.ones(2), np.ones(2))
+        with pytest.raises(ValueError):
+            eng.submit(np.ones(8), np.ones(8), degree=2)
+
+
+# --------------------------------------------------------------------------
+# the public-API snapshot: surface growth must be deliberate
+# --------------------------------------------------------------------------
+SNAPSHOT = os.path.join(os.path.dirname(__file__),
+                        "public_api_snapshot.txt")
+
+
+def test_public_api_snapshot():
+    """repro.core.__all__ + repro.api.__all__ frozen to the checked-in
+    list: adding (or dropping) a public name without updating
+    tests/public_api_snapshot.txt fails CI."""
+    with open(SNAPSHOT) as f:
+        frozen = {ln.strip() for ln in f
+                  if ln.strip() and not ln.startswith("#")}
+    live = ({f"core.{n}" for n in core.__all__}
+            | {f"api.{n}" for n in api.__all__})
+    added = sorted(live - frozen)
+    removed = sorted(frozen - live)
+    assert not added and not removed, (
+        f"public API drifted: added={added} removed={removed}; if "
+        "deliberate, update tests/public_api_snapshot.txt")
+
+
+def test_all_names_resolve():
+    for name in core.__all__:
+        assert getattr(core, name) is not None
+    for name in api.__all__:
+        assert getattr(api, name) is not None
+
+
+# --------------------------------------------------------------------------
+# use_kernel precedent intact through the shim layer
+# --------------------------------------------------------------------------
+def test_use_kernel_deprecation_survives_shim():
+    x = jnp.linspace(-1, 1, 256)
+    y = 1.0 + 2.0 * x
+    with pytest.warns(DeprecationWarning, match="use_kernel"):
+        a = core.polyfit(x, y, 1, use_kernel=False).coeffs
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        b = core.polyfit(x, y, 1, engine="reference").coeffs
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -57,7 +57,8 @@ def test_gauss_equals_qr_in_f64(order):
     with enable_x64(True):
         x, y = _data()
         a = np.asarray(core.polyfit(x, y, order).coeffs)
-        b = np.asarray(core.polyfit_qr(x, y, order).coeffs)
+        b = np.asarray(
+            core.polyfit(x, y, order, solver="qr_vandermonde").coeffs)
     np.testing.assert_allclose(a, b, rtol=1e-8, atol=1e-10)
 
 
@@ -93,7 +94,9 @@ def test_f32_reproduces_papers_precision_gap():
     x32 = jnp.asarray(X64, jnp.float32)
     y32 = jnp.asarray(Y64, jnp.float32)
     a = np.asarray(core.polyfit(x32, y32, 3).coeffs, np.float64)
-    b = np.asarray(core.polyfit_qr(x32, y32, 3).coeffs, np.float64)
+    b = np.asarray(
+        core.polyfit(x32, y32, 3, solver="qr_vandermonde").coeffs,
+        np.float64)
     gap = np.max(np.abs(a - b))
     assert 0 < gap < 0.5  # differ, but bounded
 
