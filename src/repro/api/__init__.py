@@ -11,7 +11,7 @@ See ``repro.api.spec`` for the spec's fields and ``repro.api.executors``
 for the execution surfaces.
 """
 from repro.api.spec import (FitSpec, FitResult, IRLSOptions, LSPIAOptions,
-                            METHODS, RAW_DATA_SOLVERS)
+                            ServicePolicy, METHODS, RAW_DATA_SOLVERS)
 from repro.api.executors import (fit, spec_from_legacy, stream_state,
                                  stream_result, make_distributed)
 # the spec's composable vocabulary, re-exported so one import serves
@@ -19,7 +19,7 @@ from repro.engine.plan import NumericsPolicy
 from repro.select.sweep import DegreeSearch
 
 __all__ = [
-    "FitSpec", "FitResult", "IRLSOptions", "LSPIAOptions",
+    "FitSpec", "FitResult", "IRLSOptions", "LSPIAOptions", "ServicePolicy",
     "METHODS", "RAW_DATA_SOLVERS",
     "fit", "spec_from_legacy", "stream_state", "stream_result",
     "make_distributed",

@@ -62,6 +62,51 @@ class StreamState:
         return StreamState(moments_lib.Moments.zeros(degree, batch, dtype),
                            jnp.asarray(decay, dtype), folds, idx, spec)
 
+    def snapshot(self) -> dict:
+        """Host-side O(m²) copy of the running state — the fleet journal's
+        unit of replay (``repro.serve.fleet``).
+
+        Everything dynamic (moments, decay, fold partials, fold index)
+        lands as plain numpy, so the snapshot is picklable across a
+        process mailbox and costs a few hundred bytes at serving degrees.
+        The static ``spec`` is intentionally NOT captured: the restoring
+        side supplies it (it already knows what it accumulates), keeping
+        snapshots transport-plain.  ``restore(snapshot())`` round-trips
+        bit-exactly: a state restored mid-stream and fed the remaining
+        chunks produces the same bits as the uninterrupted run."""
+        import numpy as np
+        m = self.moments
+        snap = {"gram": np.asarray(m.gram), "vty": np.asarray(m.vty),
+                "yty": np.asarray(m.yty), "count": np.asarray(m.count),
+                "weight_sum": np.asarray(m.weight_sum),
+                "decay": np.asarray(self.decay)}
+        if self.fold_moments is not None:
+            f = self.fold_moments
+            snap["folds"] = {"gram": np.asarray(f.gram),
+                             "vty": np.asarray(f.vty),
+                             "yty": np.asarray(f.yty),
+                             "count": np.asarray(f.count),
+                             "weight_sum": np.asarray(f.weight_sum)}
+            snap["fold_index"] = np.asarray(self.fold_index)
+        return snap
+
+    @staticmethod
+    def restore(snap: dict, *, spec=None) -> "StreamState":
+        """Rebuild a ``StreamState`` from a ``snapshot()`` dict.
+
+        ``spec`` re-attaches the (static, non-serialized) ``FitSpec`` the
+        state accumulates under — pass the same spec the snapshotted
+        state carried or updates will apply different semantics."""
+        mk = lambda d: moments_lib.Moments(  # noqa: E731
+            gram=jnp.asarray(d["gram"]), vty=jnp.asarray(d["vty"]),
+            yty=jnp.asarray(d["yty"]), count=jnp.asarray(d["count"]),
+            weight_sum=jnp.asarray(d["weight_sum"]))
+        folds = mk(snap["folds"]) if "folds" in snap else None
+        idx = (jnp.asarray(snap["fold_index"]) if "fold_index" in snap
+               else None)
+        return StreamState(mk(snap), jnp.asarray(snap["decay"]),
+                           folds, idx, spec)
+
     def current_selection(self, *, criterion: str | None = None,
                           ridge: float = 0.0, solver: str = "auto",
                           fallback: str | None = "svd",

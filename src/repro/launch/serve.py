@@ -4,6 +4,12 @@ Fit serving (the paper's workload — the flagship path):
 
     PYTHONPATH=src python -m repro.launch.serve --requests 200
 
+Fault-tolerant fleet serving under chaos (replicated workers, seeded
+fault injection, parity check against the fault-free run):
+
+    PYTHONPATH=src python -m repro.launch.serve --workload fleet \
+        --workers 4 --chaos "crash=1,stall=1,poison=1" --assert-parity
+
 Token serving (the zoo-arch decode engine):
 
     PYTHONPATH=src python -m repro.launch.serve --workload tokens \
@@ -56,6 +62,62 @@ def serve_fits(args) -> None:
     assert recompiles == 0, f"{recompiles} recompiles during steady state"
 
 
+def serve_fleet(args) -> None:
+    """Drive the fault-tolerant fleet twice — fault-free, then under the
+    requested chaos schedule — and report recovery numbers (and, with
+    ``--assert-parity``, enforce the bitwise chaos-parity invariant)."""
+    from repro.runtime.chaos import ChaosSchedule
+    from repro.serve import FitServeConfig, FleetConfig, FitFleet
+
+    rng = np.random.default_rng(7)
+    coef = rng.normal(0, 1, args.degree + 1)
+    series = []
+    for _ in range(args.requests):
+        n = int(np.exp(rng.uniform(np.log(args.min_n), np.log(args.max_n))))
+        x = rng.uniform(-2, 2, n).astype(np.float32)
+        y = (np.polyval(coef[::-1], x)
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        series.append((x, y))
+
+    def run(chaos):
+        cfg = FleetConfig(fit=FitServeConfig(degree=args.degree),
+                          n_workers=args.workers, chaos=chaos,
+                          straggler_threshold=2.0)
+        fleet = FitFleet(cfg)
+        t0 = time.perf_counter()
+        reqs = [fleet.submit(x, y) for x, y in series]
+        fleet.run(max_ticks=50_000)
+        dt = time.perf_counter() - t0
+        return fleet, reqs, dt
+
+    base_fleet, base, base_dt = run(None)
+    q0 = base_fleet.latency_quantiles()
+    print(f"[fleet] fault-free: {base_fleet.stats['completed']}"
+          f"/{len(base)} fits in {base_dt:.2f}s over {base_fleet.tick} "
+          f"ticks (p50 {q0['p50']:.0f} / p99 {q0['p99']:.0f} ticks)")
+
+    chaos = ChaosSchedule.parse(args.chaos, args.chaos_seed, args.workers,
+                                horizon=args.chaos_horizon)
+    fleet, reqs, dt = run(chaos)
+    s, q = fleet.stats, fleet.latency_quantiles()
+    lost = [r.uid for r in reqs if not r.done or r.failed]
+    print(f"[fleet] chaos '{args.chaos}' (seed {args.chaos_seed}): "
+          f"{s['completed']}/{len(reqs)} fits in {dt:.2f}s over "
+          f"{fleet.tick} ticks (p50 {q['p50']:.0f} / p99 {q['p99']:.0f})")
+    print(f"[fleet]   lost={len(lost)} deaths={s['worker_deaths']} "
+          f"revivals={s['revivals']} replays={s['replays']} "
+          f"hedges={s['hedges']} resends={s['resends']} "
+          f"poisoned={s['poisoned']} shed={s['shed']}")
+    assert not lost, f"lost requests: {lost}"
+    if args.assert_parity:
+        for b, c in zip(base, reqs):
+            assert c.count == b.count, (c.uid, c.count, b.count)
+            np.testing.assert_array_equal(np.asarray(c.coeffs),
+                                          np.asarray(b.coeffs))
+        print(f"[fleet] parity OK: {len(reqs)} requests bit-identical "
+              "to the fault-free run")
+
+
 def serve_tokens(args) -> None:
     from repro import configs
     from repro.models import get_model
@@ -93,7 +155,8 @@ def serve_tokens(args) -> None:
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--workload", choices=("fits", "tokens"), default="fits")
+    ap.add_argument("--workload", choices=("fits", "fleet", "tokens"),
+                    default="fits")
     # per-workload defaults: fits churns cheap requests, tokens decodes
     ap.add_argument("--requests", type=int, default=None)
     ap.add_argument("--slots", type=int, default=None)
@@ -104,6 +167,16 @@ def main(argv=None):
     ap.add_argument("--max-n", type=int, default=8192)
     ap.add_argument("--engine", default="auto",
                     help="repro.engine path: auto/reference/kernel/...")
+    # fleet knobs
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--chaos", default="crash=1,stall=1",
+                    help='fault counts, e.g. "crash=1,stall=1,poison=2"')
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--chaos-horizon", type=int, default=8,
+                    help="fault ticks are drawn in [1, horizon); keep it "
+                         "below the run length or nothing fires")
+    ap.add_argument("--assert-parity", action="store_true",
+                    help="require bitwise parity with the fault-free run")
     # token-serving knobs
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")
@@ -114,6 +187,9 @@ def main(argv=None):
         args.requests = 200 if args.requests is None else args.requests
         args.slots = 8 if args.slots is None else args.slots
         serve_fits(args)
+    elif args.workload == "fleet":
+        args.requests = 32 if args.requests is None else args.requests
+        serve_fleet(args)
     else:
         args.requests = 12 if args.requests is None else args.requests
         args.slots = 4 if args.slots is None else args.slots

@@ -1,6 +1,9 @@
+from repro.runtime.chaos import (FAULT_KINDS, ChaosSchedule, ChaosWorker,
+                                 FaultEvent)
 from repro.runtime.fault_tolerance import (HeartbeatTracker, RestartPolicy,
                                            ElasticPlan, FailureDetector)
 from repro.runtime.straggler import plan_reslice, ResliceAction
 
 __all__ = ["HeartbeatTracker", "RestartPolicy", "ElasticPlan",
-           "FailureDetector", "plan_reslice", "ResliceAction"]
+           "FailureDetector", "plan_reslice", "ResliceAction",
+           "FAULT_KINDS", "ChaosSchedule", "ChaosWorker", "FaultEvent"]

@@ -38,19 +38,50 @@ class HeartbeatTracker:
 
 @dataclasses.dataclass
 class RestartPolicy:
+    """Bounded restart budget with decorrelated-jitter backoff.
+
+    ``jitter="decorrelated"`` (the default) draws each wait uniformly from
+    ``[base, min(3 * previous_wait, max)]`` — the AWS decorrelated-jitter
+    schedule — so a fleet of replicas that died together does NOT retry in
+    lockstep (the thundering herd the plain exponential creates).  Every
+    draw lies in ``[base_backoff_s, max_backoff_s]`` and the expected wait
+    still grows geometrically until it saturates at the cap.  ``seed``
+    makes the draw sequence reproducible (chaos tests pin it);
+    ``jitter=None`` restores the deterministic exponential ladder."""
+
     max_restarts: int = 100
     base_backoff_s: float = 5.0
     max_backoff_s: float = 300.0
+    jitter: str | None = "decorrelated"
+    seed: int | None = None
 
     restarts: int = 0
+
+    def __post_init__(self):
+        if self.jitter not in (None, "decorrelated"):
+            raise ValueError(f"jitter={self.jitter!r}; expected "
+                             "'decorrelated' or None")
+        if not 0 < self.base_backoff_s <= self.max_backoff_s:
+            raise ValueError(
+                f"need 0 < base_backoff_s <= max_backoff_s, got "
+                f"{self.base_backoff_s} / {self.max_backoff_s}")
+        import numpy as np
+        self._rng = np.random.default_rng(self.seed)
+        self._prev = self.base_backoff_s
 
     def next_backoff(self) -> float | None:
         """None = give up."""
         if self.restarts >= self.max_restarts:
             return None
-        b = min(self.base_backoff_s * (2 ** min(self.restarts, 10)),
-                self.max_backoff_s)
         self.restarts += 1
+        if self.jitter is None:
+            b = min(self.base_backoff_s * (2 ** min(self.restarts - 1, 10)),
+                    self.max_backoff_s)
+        else:
+            hi = min(3.0 * self._prev, self.max_backoff_s)
+            b = float(self._rng.uniform(self.base_backoff_s,
+                                        max(self.base_backoff_s, hi)))
+        self._prev = b
         return b
 
 

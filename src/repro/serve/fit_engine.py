@@ -109,6 +109,282 @@ class FitServeConfig:
     # the default per-request solve; overrides the flat fields above
 
 
+@dataclasses.dataclass(frozen=True)
+class PoolSpecs:
+    """The server-side spec family one ``FitServeConfig`` implies: what the
+    slots accumulate (``pool``, fixed max degree), the default fixed and
+    auto-degree request specs, and the spec a bare ``submit(x, y)`` gets.
+
+    Derived once by ``derive_pool_specs`` and shared by every serving
+    surface — the single-process ``FitServeEngine`` and the replicated
+    workers of ``serve.fleet`` — so "what does this server accumulate and
+    how does it answer by default" has exactly one definition."""
+
+    pool: Any
+    fixed: Any
+    auto: Any
+    default: Any
+    select_criterion: str
+
+
+def validate_pool_spec(spec) -> None:
+    # only an EXPLICIT normalize request is rejected: the plan layer's
+    # high-degree auto-escalation is a before-the-Gram fix the server
+    # cannot apply (min/max of unseen series), so — as the engine
+    # always has — high-degree pools accumulate raw-domain moments and
+    # lean on solve-time solver escalation + the rank-revealing
+    # fallback instead (pin FitSpec.domain to get true normalization)
+    from repro.api import spec as spec_lib
+    if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
+        raise ValueError(
+            f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
+            "rows; the slot pools only hold moments")
+    if spec.numerics.normalize and spec.domain is None:
+        raise ValueError(
+            "this spec normalizes the domain, but the server cannot "
+            "derive min/max from series it has not seen — pin it with "
+            "FitSpec(domain=(shift, scale))")
+
+
+def derive_pool_specs(cfg: "FitServeConfig") -> PoolSpecs:
+    """Map one ``FitServeConfig`` onto the ``PoolSpecs`` family."""
+    from repro.api import spec as spec_lib
+    from repro.engine import plan as plan_lib
+    if cfg.select_criterion not in select_lib.MOMENT_CRITERIA:
+        raise ValueError(
+            f"select_criterion={cfg.select_criterion!r}; the slot pool "
+            f"keeps no fold partials, so only moment-space criteria "
+            f"{select_lib.MOMENT_CRITERIA} can serve auto-degree "
+            "requests")
+    if cfg.spec is not None:
+        base = cfg.spec
+    else:
+        solver = cfg.method or cfg.solver
+        base = spec_lib.FitSpec(
+            degree=cfg.degree,
+            numerics=plan_lib.NumericsPolicy(solver=solver,
+                                             fallback=cfg.fallback),
+            decay=cfg.decay, ridge=cfg.ridge, engine=cfg.engine)
+    # the pool-wide spec: what the slots accumulate (fixed max degree)
+    pool = (dataclasses.replace(base, degree=base.max_degree)
+            if base.is_search else base)
+    validate_pool_spec(pool)
+    ds = (base.degree if base.is_search
+          else select_lib.DegreeSearch(
+              max_degree=pool.max_degree, folds=0,
+              criterion=cfg.select_criterion,
+              solver=pool.numerics.solver,
+              fallback=pool.numerics.fallback,
+              cond_cap=pool.numerics.cond_cap))
+    # a DegreeSearch rides the condition-aware ladder solve; an LSPIA
+    # pool's auto requests therefore search as LSE (the accumulated
+    # moments are method-free — only the solve differs)
+    auto = dataclasses.replace(
+        base, degree=ds,
+        method="lse" if base.method == "lspia" else base.method)
+    default = base if base.is_search else pool
+    return PoolSpecs(pool=pool, fixed=pool, auto=auto, default=default,
+                     select_criterion=cfg.select_criterion)
+
+
+def validate_request_spec(specs: PoolSpecs, spec) -> None:
+    """Reject request specs the pool's accumulated state cannot serve."""
+    from repro.api import spec as spec_lib
+    pool = specs.pool
+    if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
+        raise ValueError(
+            f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
+            "rows; the slot pools only hold moments")
+    if spec.basis != pool.basis:
+        raise ValueError(
+            f"request basis={spec.basis!r} but the pool accumulates "
+            f"{pool.basis!r} moments — basis is pool-wide "
+            "(FitServeConfig.spec)")
+    if spec.domain != pool.domain:
+        raise ValueError(
+            f"request domain={spec.domain!r} but the pool accumulates "
+            f"in domain {pool.domain!r} — the domain map is baked into "
+            "the slots' moments (FitServeConfig.spec)")
+    if spec.decay != pool.decay:
+        raise ValueError(
+            f"request decay={spec.decay} but the pool decays at "
+            f"{pool.decay} — forgetting is baked into the running "
+            "state (FitServeConfig.spec)")
+    if spec.max_degree > pool.max_degree:
+        raise ValueError(
+            f"request degree {spec.max_degree} exceeds the pool's "
+            f"accumulation degree {pool.max_degree}; nested degrees "
+            "<= cfg.degree are served from the truncated state")
+    if (spec.method == "irls"
+            and spec.irls.stream_sweeps != pool.irls.stream_sweeps):
+        raise ValueError(
+            f"request stream_sweeps={spec.irls.stream_sweeps} but the "
+            f"pool's compiled ingest runs {pool.irls.stream_sweeps} — "
+            "the sweep count is baked into the ingest executable "
+            "(FitServeConfig.spec); per-request loss/c ARE honored")
+    if spec.is_search:
+        crit = spec.degree.criterion or specs.select_criterion
+        if crit not in select_lib.MOMENT_CRITERIA:
+            raise ValueError(
+                f"criterion={crit!r}: the slot pool keeps no fold "
+                f"partials, so only {select_lib.MOMENT_CRITERIA} can "
+                "serve auto-degree requests")
+
+
+def resolve_request_spec(specs: PoolSpecs, degree, spec):
+    """Map the (degree=, spec=) submit spellings onto one FitSpec."""
+    if spec is not None:
+        if degree is not None:
+            raise ValueError("pass degree= or spec=, not both")
+        validate_request_spec(specs, spec)
+        return spec
+    if degree is None:
+        return specs.default
+    if degree == "auto":
+        return specs.auto
+    if int(degree) != specs.pool.max_degree:
+        raise ValueError(
+            f"degree={degree!r}: slot pools accumulate at the static "
+            f"cfg.degree={specs.pool.max_degree}; pass degree='auto' for "
+            "selection over the ladder 0..cfg.degree, or a FitSpec "
+            "(spec=) for any nested degree <= cfg.degree")
+    return specs.fixed
+
+
+def validate_series(x, y, rspec) -> tuple[np.ndarray, np.ndarray]:
+    """Shared submit-time series validation (engine AND fleet)."""
+    x = np.asarray(x, np.float32)
+    y = np.asarray(y, np.float32)
+    if x.ndim != 1 or x.shape != y.shape or x.shape[0] == 0:
+        raise ValueError(f"expected equal non-empty 1-D x/y, got "
+                         f"{x.shape} vs {y.shape}")
+    if not rspec.is_search and x.shape[0] < int(rspec.degree) + 1:
+        raise ValueError(
+            f"series of {x.shape[0]} points cannot determine a "
+            f"degree-{int(rspec.degree)} fit (need >= "
+            f"{int(rspec.degree) + 1}); degree='auto' accepts short "
+            "series (underdetermined rungs score +inf)")
+    return x, y
+
+
+def make_spec_solve(pool_degree: int):
+    """The per-request fixed-degree solve over a pool-degree state.
+
+    Module-level factory so every serving surface (the slot-pool engine,
+    each fleet worker) answers a spec with the SAME compiled semantics:
+    the request's nested degree is a truncate view of the accumulated
+    state; its numerics policy (solver rung, fallback, cond_cap, ridge)
+    and method (LSE vs moment-space LSPIA) ride in the static spec.
+    Shape-polymorphic over the state's batch axes: (n_slots,) on the
+    engine, () on a fleet worker's per-request state."""
+    from functools import partial as _partial
+
+    @_partial(jax.jit, static_argnames=("spec",))
+    def solve(state, spec):
+        d = int(spec.degree)
+        m = (state.moments.truncate(d) if d < pool_degree
+             else state.moments)
+        ms = m.regularized(spec.ridge) if spec.ridge else m
+        if spec.method == "lspia":
+            opts = spec.lspia
+            coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
+                ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
+                power_iters=opts.power_iters, step=opts.step)
+            fb = ~conv
+        else:
+            rung = spec.numerics.solver
+            if rung == "auto":
+                rung = solve_lib.select_solver(
+                    d, state.moments.gram.dtype, basis=spec.basis,
+                    normalized=spec.domain is not None)
+            coeffs, cond, fb = solve_lib.solve_with_fallback(
+                ms.gram, ms.vty, method=rung,
+                fallback=spec.numerics.fallback,
+                cond_cap=spec.numerics.cond_cap)
+        rep = fit_lib.report_from_moments(m, coeffs)
+        return (coeffs, rep.sse, rep.r, state.moments.count, cond, fb)
+
+    return solve
+
+
+def make_spec_sweep(pool_degree: int):
+    """The auto-degree ladder solve over a pool-degree state (see
+    ``make_spec_solve`` for why this is a shared module-level factory)."""
+    from functools import partial as _partial
+
+    @_partial(jax.jit, static_argnames=("spec",))
+    def sweep(state, spec):
+        # the request's ladder 0..max_degree from the (truncated view of
+        # the) accumulated running moments — same ridge stabilizer (idle
+        # slots must stay solvable at every rung) but scored on the RAW
+        # moments so sse/criteria agree with the fixed-degree path, plus
+        # the per-degree R of the padded coefficient ladder for the
+        # response report.
+        ds = spec.degree
+        m = (state.moments.truncate(ds.max_degree)
+             if ds.max_degree < pool_degree else state.moments)
+        ridge = spec.ridge
+        mr = m.regularized(ridge) if ridge else m
+        rung = (spec.numerics.solver
+                if spec.numerics.solver != "auto" else ds.solver)
+        sw = select_lib.sweep_from_moments(
+            mr, score_moments=m if ridge else None, solver=rung,
+            fallback=ds.fallback, cond_cap=ds.cond_cap,
+            basis=spec.basis, normalized=spec.domain is not None)
+        rep = fit_lib.report_from_moments(m, sw.coeffs)
+        return sw, rep.r, state.moments.count
+
+    return sweep
+
+
+def fill_fixed_result(req: FitRequest, spec, solved, s=None) -> None:
+    """Populate one request from a fixed-degree solve's (numpy) outputs.
+
+    ``s`` indexes a batched (slot-pool) solve; ``None`` reads a scalar
+    (fleet-worker) solve.  One definition of "what a served fit reports",
+    shared by every surface."""
+    pick = (lambda a: a) if s is None else (lambda a: a[s])
+    coeffs, sse, r, count, cond, fb = solved
+    d = int(spec.degree)
+    req.coeffs = np.asarray(pick(coeffs))[:d + 1].copy()
+    req.sse = float(pick(sse))
+    req.r = float(pick(r))
+    req.count = float(pick(count))
+    req.condition = float(pick(cond))
+    req.fallback_used = bool(pick(fb))
+    req.degree = d
+    req.done = True
+
+
+def auto_outputs(sw, r_ladder, count) -> dict:
+    """Convert one ``make_spec_sweep`` output to host-side numpy once per
+    solve (the per-request fill then just indexes)."""
+    scores = {name: np.asarray(sw.scores.by_name(name))
+              for name in select_lib.MOMENT_CRITERIA + ("sse", "r2")}
+    return {"scores": scores, "ladder": np.asarray(sw.coeffs),
+            "cond": np.asarray(sw.condition),
+            "fb": np.asarray(sw.fallback_used),
+            "r": np.asarray(r_ladder), "count": np.asarray(count)}
+
+
+def fill_auto_result(req: FitRequest, spec, outs: dict, criterion: str,
+                     s=None) -> None:
+    """Populate one auto-degree request from ``auto_outputs``."""
+    pick = (lambda a: a) if s is None else (lambda a: a[s])
+    scores = outs["scores"]
+    d = int(np.argmin(pick(scores[criterion])))
+    req.degree = d
+    req.coeffs = np.asarray(pick(outs["ladder"]))[d, :d + 1].copy()
+    req.sse = float(pick(scores["sse"])[d])
+    req.r = float(pick(outs["r"])[d])
+    req.count = float(pick(outs["count"]))
+    req.condition = float(pick(outs["cond"])[d])
+    req.fallback_used = bool(pick(outs["fb"])[d])
+    req.scores = {k: np.asarray(pick(v)).copy() for k, v in scores.items()}
+    req.condition_ladder = np.asarray(pick(outs["cond"])).copy()
+    req.done = True
+
+
 class _Bucket:
     """One length bucket: a slot pool + its compiled ingest step."""
 
@@ -196,45 +472,15 @@ class FitServeEngine:
 
     def __init__(self, cfg: FitServeConfig | None = None):
         from repro.api import spec as spec_lib
-        from repro.engine import plan as plan_lib
         self.cfg = cfg = cfg or FitServeConfig()
         if tuple(sorted(cfg.buckets)) != tuple(cfg.buckets):
             raise ValueError(f"buckets must ascend: {cfg.buckets}")
-        if cfg.select_criterion not in select_lib.MOMENT_CRITERIA:
-            raise ValueError(
-                f"select_criterion={cfg.select_criterion!r}; the slot pool "
-                f"keeps no fold partials, so only moment-space criteria "
-                f"{select_lib.MOMENT_CRITERIA} can serve auto-degree "
-                "requests")
-        if cfg.spec is not None:
-            base = cfg.spec
-        else:
-            solver = cfg.method or cfg.solver
-            base = spec_lib.FitSpec(
-                degree=cfg.degree,
-                numerics=plan_lib.NumericsPolicy(solver=solver,
-                                                 fallback=cfg.fallback),
-                decay=cfg.decay, ridge=cfg.ridge, engine=cfg.engine)
-        # the pool-wide spec: what the slots accumulate (fixed max degree)
-        self.spec = (dataclasses.replace(base, degree=base.max_degree)
-                     if base.is_search else base)
-        self._validate_pool_spec(self.spec)
+        specs = self.pool_specs = derive_pool_specs(cfg)
+        self.spec = specs.pool
         # default per-request specs for the legacy degree= spellings
-        self.fixed_spec = self.spec
-        ds = (base.degree if base.is_search
-              else select_lib.DegreeSearch(
-                  max_degree=self.spec.max_degree, folds=0,
-                  criterion=cfg.select_criterion,
-                  solver=self.spec.numerics.solver,
-                  fallback=self.spec.numerics.fallback,
-                  cond_cap=self.spec.numerics.cond_cap))
-        # a DegreeSearch rides the condition-aware ladder solve; an LSPIA
-        # pool's auto requests therefore search as LSE (the accumulated
-        # moments are method-free — only the solve differs)
-        self.auto_spec = dataclasses.replace(
-            base, degree=ds,
-            method="lse" if base.method == "lspia" else base.method)
-        self.default_spec = base if base.is_search else self.fixed_spec
+        self.fixed_spec = specs.fixed
+        self.auto_spec = specs.auto
+        self.default_spec = specs.default
         # the reweight solve's static rung (pool degree/dtype/basis)
         self._pool_solver = (
             self.spec.numerics.solver if self.spec.numerics.solver
@@ -246,143 +492,16 @@ class FitServeEngine:
         self._uid = 0
         self.fits_done = 0
         self.points_ingested = 0
-        pool_degree = self.spec.max_degree
-        from functools import partial as _partial
-
-        @_partial(jax.jit, static_argnames=("spec",))
-        def solve(state, spec):
-            # the per-request fixed-degree solve: the request's nested
-            # degree is a truncate view of the pooled state; its numerics
-            # policy (solver rung, fallback, cond_cap, ridge) and method
-            # (LSE vs moment-space LSPIA) ride in the static spec
-            d = int(spec.degree)
-            m = (state.moments.truncate(d) if d < pool_degree
-                 else state.moments)
-            ms = m.regularized(spec.ridge) if spec.ridge else m
-            if spec.method == "lspia":
-                opts = spec.lspia
-                coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
-                    ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
-                    power_iters=opts.power_iters, step=opts.step)
-                fb = ~conv
-            else:
-                rung = spec.numerics.solver
-                if rung == "auto":
-                    rung = solve_lib.select_solver(
-                        d, state.moments.gram.dtype, basis=spec.basis,
-                        normalized=spec.domain is not None)
-                coeffs, cond, fb = solve_lib.solve_with_fallback(
-                    ms.gram, ms.vty, method=rung,
-                    fallback=spec.numerics.fallback,
-                    cond_cap=spec.numerics.cond_cap)
-            rep = fit_lib.report_from_moments(m, coeffs)
-            return (coeffs, rep.sse, rep.r, state.moments.count, cond, fb)
-
-        self._solve = solve
-
-        @_partial(jax.jit, static_argnames=("spec",))
-        def sweep(state, spec):
-            # the auto-degree solve: the request's ladder 0..max_degree
-            # from the (truncated view of the) slot pool's running moments
-            # — same ridge stabilizer (idle slots must stay solvable at
-            # every rung) but scored on the RAW moments so sse/criteria
-            # agree with the fixed-degree path, plus the per-degree R of
-            # the padded coefficient ladder for the response report.
-            ds = spec.degree
-            m = (state.moments.truncate(ds.max_degree)
-                 if ds.max_degree < pool_degree else state.moments)
-            ridge = spec.ridge
-            mr = m.regularized(ridge) if ridge else m
-            rung = (spec.numerics.solver
-                    if spec.numerics.solver != "auto" else ds.solver)
-            sw = select_lib.sweep_from_moments(
-                mr, score_moments=m if ridge else None, solver=rung,
-                fallback=ds.fallback, cond_cap=ds.cond_cap,
-                basis=spec.basis, normalized=spec.domain is not None)
-            rep = fit_lib.report_from_moments(m, sw.coeffs)
-            return sw, rep.r, state.moments.count
-
-        self._sweep = sweep
-
-    def _validate_pool_spec(self, spec) -> None:
-        # only an EXPLICIT normalize request is rejected: the plan layer's
-        # high-degree auto-escalation is a before-the-Gram fix the server
-        # cannot apply (min/max of unseen series), so — as the engine
-        # always has — high-degree pools accumulate raw-domain moments and
-        # lean on solve-time solver escalation + the rank-revealing
-        # fallback instead (pin FitSpec.domain to get true normalization)
-        from repro.api import spec as spec_lib
-        if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
-            raise ValueError(
-                f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
-                "rows; the slot pools only hold moments")
-        if spec.numerics.normalize and spec.domain is None:
-            raise ValueError(
-                "this spec normalizes the domain, but the server cannot "
-                "derive min/max from series it has not seen — pin it with "
-                "FitSpec(domain=(shift, scale))")
+        self._solve = make_spec_solve(self.spec.max_degree)
+        self._sweep = make_spec_sweep(self.spec.max_degree)
 
     # ------------------------------------------------------------- plumbing
     def _resolve_spec(self, degree, spec):
         """Map the (degree=, spec=) submit spellings onto one FitSpec."""
-        if spec is not None:
-            if degree is not None:
-                raise ValueError("pass degree= or spec=, not both")
-            self._validate_request_spec(spec)
-            return spec
-        if degree is None:
-            return self.default_spec
-        if degree == "auto":
-            return self.auto_spec
-        if int(degree) != self.spec.max_degree:
-            raise ValueError(
-                f"degree={degree!r}: slot pools accumulate at the static "
-                f"cfg.degree={self.spec.max_degree}; pass degree='auto' for "
-                "selection over the ladder 0..cfg.degree, or a FitSpec "
-                "(spec=) for any nested degree <= cfg.degree")
-        return self.fixed_spec
+        return resolve_request_spec(self.pool_specs, degree, spec)
 
     def _validate_request_spec(self, spec) -> None:
-        from repro.api import spec as spec_lib
-        pool = self.spec
-        if spec.numerics.solver in spec_lib.RAW_DATA_SOLVERS:
-            raise ValueError(
-                f"solver={spec.numerics.solver!r} needs the raw Vandermonde "
-                "rows; the slot pools only hold moments")
-        if spec.basis != pool.basis:
-            raise ValueError(
-                f"request basis={spec.basis!r} but the pool accumulates "
-                f"{pool.basis!r} moments — basis is pool-wide "
-                "(FitServeConfig.spec)")
-        if spec.domain != pool.domain:
-            raise ValueError(
-                f"request domain={spec.domain!r} but the pool accumulates "
-                f"in domain {pool.domain!r} — the domain map is baked into "
-                "the slots' moments (FitServeConfig.spec)")
-        if spec.decay != pool.decay:
-            raise ValueError(
-                f"request decay={spec.decay} but the pool decays at "
-                f"{pool.decay} — forgetting is baked into the running "
-                "state (FitServeConfig.spec)")
-        if spec.max_degree > pool.max_degree:
-            raise ValueError(
-                f"request degree {spec.max_degree} exceeds the pool's "
-                f"accumulation degree {pool.max_degree}; nested degrees "
-                "<= cfg.degree are served from the truncated state")
-        if (spec.method == "irls"
-                and spec.irls.stream_sweeps != pool.irls.stream_sweeps):
-            raise ValueError(
-                f"request stream_sweeps={spec.irls.stream_sweeps} but the "
-                f"pool's compiled ingest runs {pool.irls.stream_sweeps} — "
-                "the sweep count is baked into the ingest executable "
-                "(FitServeConfig.spec); per-request loss/c ARE honored")
-        if spec.is_search:
-            crit = spec.degree.criterion or self.cfg.select_criterion
-            if crit not in select_lib.MOMENT_CRITERIA:
-                raise ValueError(
-                    f"criterion={crit!r}: the slot pool keeps no fold "
-                    f"partials, so only {select_lib.MOMENT_CRITERIA} can "
-                    "serve auto-degree requests")
+        validate_request_spec(self.pool_specs, spec)
 
     def submit(self, x, y, *, degree: int | str | None = None,
                spec=None) -> FitRequest:
@@ -399,17 +518,7 @@ class FitServeEngine:
         default criterion."""
         rspec = self._resolve_spec(degree, spec)
         auto = rspec.is_search
-        x = np.asarray(x, np.float32)
-        y = np.asarray(y, np.float32)
-        if x.ndim != 1 or x.shape != y.shape or x.shape[0] == 0:
-            raise ValueError(f"expected equal non-empty 1-D x/y, got "
-                             f"{x.shape} vs {y.shape}")
-        if not auto and x.shape[0] < int(rspec.degree) + 1:
-            raise ValueError(
-                f"series of {x.shape[0]} points cannot determine a "
-                f"degree-{int(rspec.degree)} fit (need >= "
-                f"{int(rspec.degree) + 1}); degree='auto' accepts short "
-                "series (underdetermined rungs score +inf)")
+        x, y = validate_series(x, y, rspec)
         req = FitRequest(self._uid, x, y, spec=rspec, auto=auto)
         self._uid += 1
         for b in self.buckets[:-1]:
@@ -503,44 +612,16 @@ class FitServeEngine:
             groups = (auto_groups if b.slot_req[s].auto else fixed_groups)
             groups.setdefault(b.slot_req[s].spec, []).append(s)
         for spec, slots in fixed_groups.items():
-            coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
-                                               self._solve(b.state, spec))
+            solved = tuple(np.asarray(a) for a in self._solve(b.state, spec))
             for s in slots:
-                req = b.slot_req[s]
-                d = int(spec.degree)
-                req.coeffs = coeffs[s][:d + 1].copy()
-                req.sse = float(sse[s])
-                req.r = float(r[s])
-                req.count = float(count[s])
-                req.condition = float(cond[s])
-                req.fallback_used = bool(fb[s])
-                req.degree = d
-                req.done = True
+                fill_fixed_result(b.slot_req[s], spec, solved, s)
                 b.slot_req[s] = None
                 self.fits_done += 1
         for spec, slots in auto_groups.items():
-            sw, r_ladder, count = self._sweep(b.state, spec)
-            scores = {name: np.asarray(sw.scores.by_name(name))
-                      for name in select_lib.MOMENT_CRITERIA + ("sse", "r2")}
-            ladder = np.asarray(sw.coeffs)
-            cond = np.asarray(sw.condition)
-            fb = np.asarray(sw.fallback_used)
-            r_ladder = np.asarray(r_ladder)
-            count = np.asarray(count)
+            outs = auto_outputs(*self._sweep(b.state, spec))
             crit = spec.degree.criterion or self.cfg.select_criterion
             for s in slots:
-                req = b.slot_req[s]
-                d = int(np.argmin(scores[crit][s]))
-                req.degree = d
-                req.coeffs = ladder[s, d, :d + 1].copy()
-                req.sse = float(scores["sse"][s, d])
-                req.r = float(r_ladder[s, d])
-                req.count = float(count[s])
-                req.condition = float(cond[s, d])
-                req.fallback_used = bool(fb[s, d])
-                req.scores = {k: v[s].copy() for k, v in scores.items()}
-                req.condition_ladder = cond[s].copy()
-                req.done = True
+                fill_auto_result(b.slot_req[s], spec, outs, crit, s)
                 b.slot_req[s] = None
                 self.fits_done += 1
 

@@ -1,0 +1,322 @@
+"""Fault-tolerant fit fleet: chaos parity, journal idempotence, recovery
+policies, graceful degradation.
+
+The committed invariant (ISSUE 6): a fleet under a seeded fault schedule
+— crash mid-ingest, persistent straggler, poisoned reply — completes
+every request, never double-counts a chunk, and returns coefficients
+bit-identical to a fault-free run.  Everything runs on the injected
+virtual tick clock: no wall sleeps, fully deterministic.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import polyfit, streaming
+from repro.runtime.chaos import ChaosSchedule, ChaosWorker, FaultEvent
+from repro.serve import fit_engine as fe
+from repro.serve.fleet import (Ack, FitFleet, FleetConfig, FleetWorker,
+                               Ingest, Solve)
+
+CHUNK = 128
+
+
+def _series(seed, n_lo=300, n_hi=900, k=4):
+    rng = np.random.default_rng(seed)
+    out = []
+    for _ in range(k):
+        n = int(rng.integers(n_lo, n_hi))
+        x = np.sort(rng.uniform(-1, 1, n)).astype(np.float32)
+        y = (0.3 - 1.2 * x + 0.5 * x ** 3
+             + 0.02 * rng.normal(size=n)).astype(np.float32)
+        out.append((x, y))
+    return out
+
+
+def _fleet(chaos=None, **kw):
+    kw.setdefault("fit", fe.FitServeConfig(degree=5))
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("chunk_width", CHUNK)
+    return FitFleet(FleetConfig(chaos=chaos, **kw))
+
+
+def _run(series, chaos=None, **kw):
+    fleet = _fleet(chaos, **kw)
+    reqs = [fleet.submit(x, y, spec=api.FitSpec(degree=3))
+            for x, y in series]
+    reqs.append(fleet.submit(*series[0], degree="auto"))
+    fleet.run(max_ticks=5000)
+    return fleet, reqs
+
+
+# ------------------------------------------------------------------ parity
+def test_fleet_matches_polyfit_without_chaos():
+    series = _series(0)
+    fleet, reqs = _run(series)
+    assert fleet.stats["completed"] == len(reqs)
+    assert fleet.stats["failed"] == fleet.stats["shed"] == 0
+    for r, (x, y) in zip(reqs, series):
+        assert r.done and r.failed is None
+        assert r.count == len(x)
+        ref = np.asarray(polyfit(x, y, 3).coeffs)
+        np.testing.assert_allclose(r.coeffs, ref, rtol=2e-3, atol=2e-3)
+    auto = reqs[-1]
+    assert auto.done and auto.degree is not None and auto.scores
+
+
+def test_chaos_parity_crash_straggler_poison():
+    """The acceptance invariant: 4 workers, crash mid-ingest + persistent
+    straggler + poisoned reply → every request completes, no chunk is
+    double-counted (exact counts), and coefficients are BIT-identical to
+    the fault-free run (journal replay restores the same f32 state and
+    re-runs the same compiled ops on the same chunk boundaries)."""
+    series = _series(7, n_lo=600, n_hi=1600, k=8)
+    base_fleet, base = _run(series, straggler_threshold=2.0)
+    chaos = ChaosSchedule((
+        FaultEvent(3, 1, "crash"),        # dies mid-ingest
+        FaultEvent(2, 2, "stall", 400),   # persistent straggler
+        FaultEvent(1, 3, "poison"),       # NaN-poisoned result
+    ))
+    fleet, reqs = _run(series, chaos, straggler_threshold=2.0)
+    kinds = {e.kind for w in fleet.workers for e in w.faults_applied}
+    assert kinds == {"crash", "stall", "poison"}
+    assert fleet.stats["worker_deaths"] == 1
+    assert fleet.stats["poisoned"] == 1
+    assert fleet.stats["completed"] == len(reqs)     # zero lost
+    assert fleet.stats["failed"] == 0
+    assert fleet.stats["replays"] >= 1 and fleet.stats["hedges"] >= 1
+    for b, c in zip(base, reqs):
+        assert c.done and c.failed is None
+        assert c.count == b.count                    # no double-count
+        np.testing.assert_array_equal(np.asarray(c.coeffs),
+                                      np.asarray(b.coeffs))
+    assert reqs[-1].degree == base[-1].degree
+
+
+def test_chaos_parity_drop_and_delay():
+    """Silently dropped chunks and late acks: retries race the late
+    replies, and the worker-side (key, seq) idempotence keeps the
+    accumulated moments exact."""
+    series = _series(11, k=5)
+    _, base = _run(series)
+    chaos = ChaosSchedule((
+        FaultEvent(2, 0, "drop"),
+        FaultEvent(3, 1, "drop"),
+        FaultEvent(2, 2, "delay", 10),
+    ))
+    fleet, reqs = _run(series, chaos)
+    assert fleet.stats["completed"] == len(reqs)
+    assert fleet.stats["resends"] >= 1
+    for b, c in zip(base, reqs):
+        assert c.count == b.count
+        np.testing.assert_array_equal(np.asarray(c.coeffs),
+                                      np.asarray(b.coeffs))
+
+
+def test_seeded_schedule_reproduces():
+    s1 = ChaosSchedule.from_seed(5, 4, 64, crashes=1, stalls=2, poisons=1)
+    s2 = ChaosSchedule.from_seed(5, 4, 64, crashes=1, stalls=2, poisons=1)
+    assert s1 == s2
+    assert ChaosSchedule.parse("crash=1,stall=2,poison=1", 5, 4) == s1
+    with pytest.raises(ValueError, match="fault kind"):
+        ChaosSchedule.parse("explode=1", 0, 4)
+
+
+# --------------------------------------------------- journal / idempotence
+def test_worker_duplicate_ingest_is_idempotent():
+    """A retried chunk must be acked at the watermark and never
+    re-accumulated — the property that makes journal replay exact."""
+    specs = fe.derive_pool_specs(fe.FitServeConfig(degree=3))
+    import jax.numpy as jnp
+    solve = fe.make_spec_solve(3)
+    sweep = fe.make_spec_sweep(3)
+    wk = FleetWorker(0, specs, jnp.float32, solve, sweep)
+    x = np.linspace(-1, 1, 64, dtype=np.float32)
+    y = (x ** 2).astype(np.float32)
+    w = np.ones(64, np.float32)
+    msg = Ingest(key=9, seq=1, x=x, y=y, w=w, spec=specs.fixed)
+    [ack1] = wk.process(msg, tick=1)
+    assert isinstance(ack1, Ack) and ack1.seq == 1
+    snap1 = wk.states[9].snapshot()
+    [ack_dup] = wk.process(msg, tick=2)          # duplicate delivery
+    assert ack_dup.seq == 1                      # re-acked, not re-applied
+    snap2 = wk.states[9].snapshot()
+    np.testing.assert_array_equal(snap1["gram"], snap2["gram"])
+    np.testing.assert_array_equal(snap1["count"], snap2["count"])
+    [ack_gap] = wk.process(dataclasses.replace(msg, seq=5), tick=3)
+    assert ack_gap.seq == 1                      # out-of-window: resync ack
+    [res] = wk.process(Solve(key=9, spec=specs.fixed), tick=4)
+    assert float(res.fixed[3]) == 64.0           # count: exactly one copy
+
+
+def test_stream_state_snapshot_restore_roundtrip():
+    import jax.numpy as jnp
+    from repro.core.streaming import StreamState
+    spec = api.FitSpec(degree=4, method="irls")
+    st = StreamState.create(4, (), spec=spec)
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(-1, 1, 200).astype(np.float32))
+    y = x ** 2 - x
+    st = streaming.update(st, x, y)
+    snap = st.snapshot()
+    back = StreamState.restore(snap, spec=spec)
+    np.testing.assert_array_equal(np.asarray(back.moments.gram),
+                                  np.asarray(st.moments.gram))
+    np.testing.assert_array_equal(np.asarray(back.moments.vty),
+                                  np.asarray(st.moments.vty))
+    assert back.spec == spec
+    # restored state keeps accumulating identically
+    a = streaming.update(st, x, y)
+    b = streaming.update(back, x, y)
+    np.testing.assert_array_equal(np.asarray(a.moments.gram),
+                                  np.asarray(b.moments.gram))
+
+
+# ----------------------------------------------------- degradation / limits
+def test_overload_degrades_then_sheds():
+    x = np.linspace(-1, 1, 300, dtype=np.float32)
+    y = (x ** 2 - x).astype(np.float32)
+    fleet = _fleet(fit=fe.FitServeConfig(degree=4), n_workers=2,
+                   max_queue=6, degrade_watermark=3, max_inflight=1)
+    reqs = [fleet.submit(x, y, degree="auto") for _ in range(10)]
+    degraded = [r for r in reqs if r.degraded]
+    shed = [r for r in reqs if r.shed]
+    assert degraded and shed
+    assert all(r.done and r.failed == "shed" for r in shed)
+    fleet.run()
+    for r in degraded:
+        assert r.degraded == "degree_search->fixed"
+        assert r.done and r.scores is None       # served as a fixed fit
+        assert r.degree == 4
+    served = [r for r in reqs if not r.shed]
+    assert fleet.stats["completed"] == len(served)
+    assert fleet.stats["shed"] == len(shed)
+    assert fleet.stats["degraded"] == len(degraded)
+
+
+def test_deadline_fails_unservable_request():
+    x = np.linspace(-1, 1, 500, dtype=np.float32)
+    y = x.copy()
+    chaos = ChaosSchedule(tuple(
+        FaultEvent(1, w, "stall", 500) for w in range(2)))
+    fleet = _fleet(chaos, n_workers=2)
+    req = fleet.submit(x, y, service=api.ServicePolicy(deadline=10))
+    for _ in range(30):
+        fleet.step()
+    assert req.done and req.failed == "deadline"
+    assert fleet.stats["failed"] == 1
+    assert fleet.pending == 0
+
+
+def test_service_policy_validation():
+    with pytest.raises(ValueError, match="max_retries"):
+        api.ServicePolicy(max_retries=-1)
+    with pytest.raises(ValueError, match="deadline"):
+        api.ServicePolicy(deadline=0)
+
+
+# ------------------------------------------------------- recovery policies
+def test_crashed_worker_revives_and_serves_again():
+    series = _series(13, k=6)
+    chaos = ChaosSchedule((FaultEvent(2, 0, "crash"),))
+    fleet, reqs = _run(series, chaos, n_workers=2)
+    assert fleet.stats["worker_deaths"] == 1
+    assert fleet.stats["revivals"] == 1
+    assert fleet.stats["completed"] == len(reqs)
+    assert fleet.workers[0].alive
+    # the revived worker can take fresh work
+    r = fleet.submit(*series[0], spec=api.FitSpec(degree=3))
+    fleet.run()
+    assert r.done and r.failed is None
+
+
+def test_hedge_rescues_straggler_pinned_request():
+    series = _series(17, k=3)
+    chaos = ChaosSchedule((FaultEvent(2, 0, "stall", 300),))
+    fleet, reqs = _run(series, chaos, straggler_threshold=2.0)
+    assert fleet.stats["hedges"] >= 1
+    hedged = [r for r in reqs if r.hedged]
+    assert hedged
+    for r in hedged:
+        assert r.done and r.failed is None
+        assert len(r.workers) >= 2               # served by the backup
+
+
+def test_hedging_disabled_by_service_policy():
+    x = np.linspace(-1, 1, 700, dtype=np.float32)
+    y = (x ** 3).astype(np.float32)
+    chaos = ChaosSchedule((FaultEvent(2, 0, "stall", 60),))
+    fleet = _fleet(chaos, n_workers=2, straggler_threshold=2.0)
+    svc = api.ServicePolicy(hedge=False, retry_timeout=100,
+                            max_retries=50)
+    req = fleet.submit(x, y, service=svc)
+    fleet.run(max_ticks=5000)
+    assert req.done and not req.hedged
+    assert fleet.stats["hedges"] == 0
+
+
+def test_poisoned_result_quarantines_worker():
+    x = np.linspace(-1, 1, 400, dtype=np.float32)
+    y = (1.0 + x).astype(np.float32)
+    chaos = ChaosSchedule((FaultEvent(1, 0, "poison"),))
+    fleet = _fleet(chaos, n_workers=2)
+    req = fleet.submit(x, y)
+    fleet.run()
+    assert fleet.stats["poisoned"] == 1
+    assert req.done and req.failed is None
+    assert np.all(np.isfinite(req.coeffs))       # NaN never reached caller
+    assert req.retries >= 1
+    # producer sat in the penalty box after the bad reply
+    assert fleet._quarantined_until[0] > 0
+
+
+# ----------------------------------------------------------- infrastructure
+def test_parallel_pump_matches_serial():
+    x = np.linspace(-1, 1, 500, dtype=np.float32)
+    y = (x ** 2 - 0.5 * x).astype(np.float32)
+
+    def coeffs(par):
+        fleet = _fleet(n_workers=3, parallel_pump=par)
+        rs = [fleet.submit(x, y) for _ in range(6)]
+        fleet.run()
+        return np.stack([np.asarray(r.coeffs) for r in rs])
+
+    np.testing.assert_array_equal(coeffs(False), coeffs(True))
+
+
+def test_fleet_compiles_once_for_default_specs():
+    """Replication adds zero executables: all workers share the pool's
+    solve/sweep, and more requests on the warmed default specs never
+    recompile."""
+    fleet = _fleet()
+    n0 = fleet.warmup()
+    series = _series(23, k=5)
+    for x, y in series:
+        fleet.submit(x, y)
+        fleet.submit(x, y, degree="auto")
+    fleet.run()
+    assert fleet.compiled_executables() == n0
+    assert fleet.stats["completed"] == 2 * len(series) + 2
+
+
+def test_fleet_config_validation():
+    with pytest.raises(ValueError, match="n_workers"):
+        FleetConfig(n_workers=0)
+    with pytest.raises(ValueError, match="degrade_watermark"):
+        FleetConfig(max_queue=4, degrade_watermark=9)
+
+
+def test_chaos_worker_passthrough_without_events():
+    class _Echo:
+        def process(self, msg, tick):
+            return [msg]
+
+        def reset(self):
+            pass
+
+    wk = ChaosWorker(_Echo(), 0, ())
+    wk.begin_tick(1)
+    assert wk.alive and not wk.stalled(1)
+    msg = Ingest(key=1, seq=1, x=None, y=None, w=None, spec=None)
+    assert wk.process(msg, 1) == [(0, msg)]
