@@ -1,11 +1,31 @@
-"""Render the dry-run JSON into the EXPERIMENTS.md roofline tables.
+"""Render benchmark JSON into the EXPERIMENTS.md markdown tables.
 
+Two modes:
+
+    # the dry-run roofline grid (launch.dryrun output)
     PYTHONPATH=src python -m benchmarks.make_tables dryrun_results.json
+
+    # the perf trajectory: row x rev from every committed BENCH_*.json
+    PYTHONPATH=src python -m benchmarks.make_tables --trajectory [--mode smoke]
+
+The trajectory table is the history the perf gate's budgets are anchored
+to: one column per benchmarked revision (git order), us/call per cell,
+with the newest revision's achieved Mpts/s and roofline fraction broken
+out in their own columns.  Interpret-mode Pallas rows are tagged ``*`` —
+their absolute numbers are CPU-emulation artifacts (correctness tools,
+excluded from the gate's roofline floors).
 """
+import argparse
+import glob
 import json
+import os
+import subprocess
 import sys
 
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
 
+
+# ------------------------------------------------------------ dryrun tables
 def fmt_table(rows, mesh):
     out = [
         f"### Mesh {mesh}",
@@ -24,8 +44,7 @@ def fmt_table(rows, mesh):
     return "\n".join(out)
 
 
-def main():
-    path = sys.argv[1] if len(sys.argv) > 1 else "dryrun_results.json"
+def dryrun_tables(path):
     rs = [r for r in json.load(open(path)) if r.get("status") == "ok"]
     for mesh in ("16x16", "2x16x16"):
         rows = [r for r in rs if r["mesh"] == mesh]
@@ -37,6 +56,94 @@ def main():
         for r in bad:
             print(f"- {r['arch']} × {r['shape']} × {r['mesh']}: "
                   f"{r.get('error')}")
+
+
+# -------------------------------------------------------- trajectory tables
+def _git_rev_order():
+    """Map short-rev -> position in first-parent history (oldest first)."""
+    try:
+        out = subprocess.run(
+            ["git", "log", "--format=%h", "--reverse"],
+            cwd=BENCH_DIR, capture_output=True, text=True, check=True)
+        return {h: i for i, h in enumerate(out.stdout.split())}
+    except Exception:  # noqa: BLE001 — outside a checkout: timestamp order
+        return {}
+
+
+def load_trajectory(mode="smoke", bench_dir=BENCH_DIR):
+    """Every committed BENCH_<rev>_<mode>.json, oldest rev first."""
+    runs = []
+    for p in glob.glob(os.path.join(bench_dir, f"BENCH_*_{mode}.json")):
+        d = json.load(open(p))
+        d.setdefault("rev",
+                     os.path.basename(p).split("_")[1])
+        runs.append(d)
+    order = _git_rev_order()
+    runs.sort(key=lambda d: (order.get(d["rev"], len(order)),
+                             d.get("timestamp", "")))
+    return runs
+
+
+def _cell(row):
+    if row is None:
+        return "—"
+    if row.get("status", "ok") != "ok":
+        return "FAIL"
+    tag = "\\*" if row.get("interpret") else ""
+    return f"{row['us_per_call']:.1f}{tag}"
+
+
+def trajectory_table(runs):
+    if not runs:
+        return "(no BENCH files found)"
+    revs = [d["rev"] for d in runs]
+    by_rev = {d["rev"]: {r["name"]: r for r in d["rows"]} for d in runs}
+    names = []                                     # first-appearance order
+    for d in runs:
+        for r in d["rows"]:
+            if r["name"] not in names:
+                names.append(r["name"])
+    latest = revs[-1]
+
+    head = ("| row | " + " | ".join(f"{r} us" for r in revs)
+            + f" | {latest} Mpts/s | {latest} roofline |")
+    sep = "|---|" + "---|" * (len(revs) + 2)
+    lines = [head, sep]
+    for name in names:
+        cells = [_cell(by_rev[rev].get(name)) for rev in revs]
+        last = by_rev[latest].get(name) or {}
+        mpts = last.get("mpts_per_s")
+        frac = last.get("roofline_frac")
+        tag = "\\*" if last.get("interpret") else ""
+        mp = f"{mpts:.2f}{tag}" if mpts is not None else "—"
+        fr = f"{frac:.2%}{tag}" if frac is not None else "—"
+        lines.append(f"| {name} | " + " | ".join(cells)
+                     + f" | {mp} | {fr} |")
+    bw = runs[-1].get("bandwidth_gbps")
+    src = runs[-1].get("bandwidth_source", "model")
+    lines.append("")
+    lines.append(f"us/call are min-of-reps; \\* = interpret-mode Pallas "
+                 f"(CPU emulation — correctness row, absolute numbers not "
+                 f"meaningful, excluded from gate roofline floors). "
+                 f"Latest ceilings vs {bw} GB/s ({src}).")
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default=None,
+                    help="dryrun_results.json (dryrun-table mode)")
+    ap.add_argument("--trajectory", action="store_true",
+                    help="render the row x rev perf-trajectory table")
+    ap.add_argument("--mode", default="smoke",
+                    help="BENCH file suffix to aggregate (default: smoke)")
+    args = ap.parse_args()
+    if args.trajectory:
+        print(f"### Perf trajectory ({args.mode})")
+        print()
+        print(trajectory_table(load_trajectory(args.mode)))
+    else:
+        dryrun_tables(args.path or "dryrun_results.json")
 
 
 if __name__ == "__main__":

@@ -65,6 +65,21 @@ contribution is corrected by the error of the previous addition, making the
 cross-block reduction error O(1) in the number of blocks instead of O(nblk).
 Costs one extra (128, 128) tile and 3 extra VPU adds per block — invisible
 next to the MXU matmul.
+
+Double buffering (``nbuf >= 2``)
+--------------------------------
+The grid-streamed form above leaves the HBM→VMEM pipelining entirely to the
+Mosaic pipeliner. ``moments_packed_extended(..., nbuf=2)`` instead runs ONE
+grid step per group and drives the n-block loop in-kernel over an explicit
+``nbuf``-slot VMEM scratch ring: the DMA for block k+1 is started *before*
+the matmul on block k, so the MXU never waits on HBM as long as one block's
+compute covers one block's transfer (true for every block_n ≥ 1024 at the
+moment pass's arithmetic intensity). Inputs stay in ``ANY`` (HBM) memory
+space; per-slot DMA semaphores sequence the ring. The per-block update and
+accumulation order are IDENTICAL to the grid-streamed kernel (shared
+``_packed_tile_update``), so the two paths are bit-equal by construction —
+asserted in tests. Pick ``block_n`` with ``repro.kernels.tune``
+(one-shot sweep cached per (degree, dtype, backend)).
 """
 from __future__ import annotations
 
@@ -73,6 +88,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 K_PAD = 128          # fixed row count: degree + 2 <= 128
 DEFAULT_BLOCK_N = 4096
@@ -140,16 +156,13 @@ def _moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
     _accum_add(update, g_ref, c_ref)
 
 
-def _packed_moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
-                           accum_dtype):
-    """One (group, block) grid step with P series packed into the sublanes."""
-    c_ref = maybe_c[0] if maybe_c else None
-    i = pl.program_id(1)
-    _accum_init(i, (g_ref,) + ((c_ref,) if c_ref is not None else ()))
-
-    x = x_ref[0].astype(accum_dtype)     # (P, block_n)
-    y = y_ref[0].astype(accum_dtype)
-    w = w_ref[0].astype(accum_dtype)
+def _packed_tile_update(x, y, w, degree: int, accum_dtype):
+    """The packed layout's (1, 128, 128) Gram contribution of one
+    (P, block_n) tile — the ONE definition both the grid-streamed and the
+    double-buffered kernels accumulate, so their results agree bitwise."""
+    x = x.astype(accum_dtype)
+    y = y.astype(accum_dtype)
+    w = w.astype(accum_dtype)
     p, bn = x.shape
     k = degree + 2
 
@@ -164,10 +177,75 @@ def _packed_moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
         wmat = jnp.concatenate([wmat, zpad], axis=0)
         wfull = jnp.concatenate([wfull, zpad], axis=0)
 
-    update = jax.lax.dot_general(
+    return jax.lax.dot_general(
         wmat * wfull, wmat, (((1,), (1,)), ((), ())),
         preferred_element_type=accum_dtype)[None]
+
+
+def _packed_moments_kernel(x_ref, y_ref, w_ref, g_ref, *maybe_c, degree: int,
+                           accum_dtype):
+    """One (group, block) grid step with P series packed into the sublanes."""
+    c_ref = maybe_c[0] if maybe_c else None
+    i = pl.program_id(1)
+    _accum_init(i, (g_ref,) + ((c_ref,) if c_ref is not None else ()))
+
+    update = _packed_tile_update(x_ref[0], y_ref[0], w_ref[0], degree,
+                                 accum_dtype)
     _accum_add(update, g_ref, c_ref)
+
+
+def _packed_moments_db_kernel(x_hbm, y_hbm, w_hbm, g_ref, *maybe_c,
+                              degree: int, accum_dtype, block_n: int,
+                              n_blocks: int, nbuf: int, p: int):
+    """One grid step per GROUP; the n-block loop runs in-kernel over an
+    ``nbuf``-slot VMEM ring with explicit async copies: block k+1's three
+    DMAs are in flight while block k's matmul runs on the MXU."""
+    c_ref = maybe_c[0] if maybe_c else None
+    gi = pl.program_id(0)
+    in_dtype = x_hbm.dtype
+
+    def body(xs, ys, ws, sem):
+        g_ref[...] = jnp.zeros_like(g_ref)
+        if c_ref is not None:
+            c_ref[...] = jnp.zeros_like(c_ref)
+
+        def dmas(slot, i):
+            sl = pl.ds(i * block_n, block_n)
+            return (pltpu.make_async_copy(x_hbm.at[gi, :, sl], xs.at[slot],
+                                          sem.at[slot, 0]),
+                    pltpu.make_async_copy(y_hbm.at[gi, :, sl], ys.at[slot],
+                                          sem.at[slot, 1]),
+                    pltpu.make_async_copy(w_hbm.at[gi, :, sl], ws.at[slot],
+                                          sem.at[slot, 2]))
+
+        for d in dmas(0, 0):                       # warm the pipeline
+            d.start()
+
+        def step(i, _):
+            slot = jax.lax.rem(i, nbuf)
+            nxt = jax.lax.rem(i + 1, nbuf)
+
+            @pl.when(i + 1 < n_blocks)
+            def _prefetch():                       # block k+1 in flight...
+                for d in dmas(nxt, i + 1):
+                    d.start()
+
+            for d in dmas(slot, i):                # ...while block k lands
+                d.wait()
+            update = _packed_tile_update(xs[slot], ys[slot], ws[slot],
+                                         degree, accum_dtype)
+            _accum_add(update, g_ref, c_ref)
+            return 0
+
+        jax.lax.fori_loop(0, n_blocks, step, 0)
+
+    pl.run_scoped(
+        body,
+        xs=pltpu.VMEM((nbuf, p, block_n), in_dtype),
+        ys=pltpu.VMEM((nbuf, p, block_n), in_dtype),
+        ws=pltpu.VMEM((nbuf, p, block_n), in_dtype),
+        sem=pltpu.SemaphoreType.DMA((nbuf, 3)),
+    )
 
 
 def _fused_report_kernel(x_ref, y_ref, w_ref, coef_ref, o_ref, *, degree: int,
@@ -245,17 +323,23 @@ def moments_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
 
 @functools.partial(jax.jit,
                    static_argnames=("degree", "block_n", "interpret",
-                                    "accum_dtype", "compensated"))
+                                    "accum_dtype", "compensated", "nbuf"))
 def moments_packed_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
                             degree: int, block_n: int = DEFAULT_BLOCK_N,
                             accum_dtype=jnp.float32,
                             compensated: bool = False,
+                            nbuf: int = 0,
                             interpret: bool = False) -> jax.Array:
     """Packed kernel output: (G, K_PAD, K_PAD); series p of group g lives in
     the diagonal block ``out[g, p*K:(p+1)*K, p*K:(p+1)*K]`` (K = degree+2).
 
     x, y, weights: (G, P, n) with P == packing_factor(degree) and
     n % block_n == 0. Use ``extract_packed`` to pull per-series blocks.
+
+    ``nbuf >= 2`` selects the explicit multi-buffered DMA pipeline (see
+    module docstring §Double buffering): same per-block math and
+    accumulation order, prefetch of block k+1 overlapped with block k's
+    matmul. ``nbuf=0`` (default) is the grid-streamed form.
     """
     if x.ndim != 3:
         raise ValueError("moments_packed_extended expects (G, P, n) inputs")
@@ -265,6 +349,23 @@ def moments_packed_extended(x: jax.Array, y: jax.Array, weights: jax.Array, *,
                          f"{packing_factor(degree)}")
     if n % block_n:
         raise ValueError(f"n={n} must be a multiple of block_n={block_n}")
+    if nbuf == 1 or nbuf < 0:
+        raise ValueError(f"nbuf={nbuf}: 0 (grid-streamed) or >= 2 "
+                         "(multi-buffered ring)")
+
+    if nbuf >= 2:
+        n_blocks = n // block_n
+        kernel_fn = functools.partial(
+            _packed_moments_db_kernel, degree=degree,
+            accum_dtype=accum_dtype, block_n=block_n,
+            n_blocks=n_blocks, nbuf=min(nbuf, n_blocks) if n_blocks > 1
+            else 2, p=p)
+        in_specs = [pl.BlockSpec(memory_space=pltpu.ANY)] * 3
+        out_spec = pl.BlockSpec((1, K_PAD, K_PAD), lambda gi: (gi, 0, 0))
+        return _moments_call(kernel_fn, (g,), in_specs, out_spec, g,
+                             compensated=compensated,
+                             accum_dtype=accum_dtype, interpret=interpret,
+                             args=(x, y, weights))
 
     kernel_fn = functools.partial(_packed_moments_kernel, degree=degree,
                                   accum_dtype=accum_dtype)

@@ -59,20 +59,24 @@ def _true_count(weights, b, n, dtype):
 
 @functools.partial(jax.jit, static_argnames=("degree", "block_n", "interpret",
                                              "accum_dtype", "packing",
-                                             "compensated"))
+                                             "compensated", "nbuf"))
 def moments(x: jax.Array, y: jax.Array, degree: int, *,
             weights: jax.Array | None = None,
             block_n: int | None = None,
             accum_dtype=jnp.float32,
             packing: str = "auto",
             compensated: bool = False,
+            nbuf: int = 0,
             interpret: bool | None = None) -> Moments:
     """Drop-in kernel-backed equivalent of ``repro.core.gram_moments``.
 
     Accepts (n,) or (B, n) inputs of any float dtype; returns f32-accumulated
     Moments with matching batch shape. ``packing`` ∈ {"auto", "packed",
     "plain"} picks the tile layout; ``compensated=True`` enables the Kahan
-    two-float Gram accumulator (large-n precision, Skala arXiv:1802.07591).
+    two-float Gram accumulator (large-n precision, Skala arXiv:1802.07591);
+    ``nbuf >= 2`` selects the packed kernel's explicit multi-buffered DMA
+    pipeline (prefetch block k+1 while block k's matmul runs — pick the
+    tile width with ``repro.kernels.tune.autotune_block_n``).
     """
     if packing not in ("auto", "packed", "plain"):
         raise ValueError(f"packing={packing!r}; expected 'auto', 'packed' "
@@ -97,6 +101,10 @@ def moments(x: jax.Array, y: jax.Array, degree: int, *,
     if use_packed and pfac < 2:
         raise ValueError(f"degree {degree} leaves no room to pack "
                          f"(packing_factor={pfac}); use packing='plain'")
+    if nbuf >= 2 and not use_packed:
+        raise ValueError("nbuf (multi-buffered DMA pipeline) is a packed-"
+                         "kernel knob; this call resolved to the plain "
+                         "layout")
 
     if block_n is None:
         block_n = _auto_block(n)
@@ -116,7 +124,7 @@ def moments(x: jax.Array, y: jax.Array, degree: int, *,
         gp = kernel.moments_packed_extended(
             x.reshape(shape), y.reshape(shape), w.reshape(shape),
             degree=degree, block_n=block_n, accum_dtype=accum_dtype,
-            compensated=compensated, interpret=interpret)
+            compensated=compensated, nbuf=nbuf, interpret=interpret)
         g = kernel.extract_packed(gp, degree)[:b]         # (b, m+2, m+2)
     else:
         g = kernel.moments_extended(x, y, w, degree=degree, block_n=block_n,

@@ -1,0 +1,98 @@
+"""Packing-aware ``block_n`` autotune for the packed moments kernel.
+
+The packed kernel's only free parameter is the tile width ``block_n``: too
+small and the per-block overhead (DMA issue, accumulator add) dominates;
+too large and the multi-buffered ring blows the ~16 MB VMEM budget or
+starves the pipeline of overlap. The best value depends on the packing
+factor P = ⌊128/(degree+2)⌋ (the ring holds 3·nbuf·P·block_n elements), the
+input dtype, and the backend — so ``autotune_block_n`` runs a ONE-SHOT
+timed sweep over the VMEM-feasible candidates and caches the winner per
+``(degree, dtype, backend)`` for the life of the process.
+
+The sweep costs a few kernel launches once per key; every later call is a
+dict hit. ``clear_cache()`` resets it (tests).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import moments as kernel
+
+# candidate tile widths, lane-aligned; clamped by the VMEM model below
+CANDIDATE_BLOCKS = (1024, 2048, 4096, 8192)
+VMEM_BUDGET = 8 << 20          # stay in half the ~16 MB/core VMEM
+
+_CACHE: dict[tuple, int] = {}
+
+
+def ring_vmem_bytes(degree: int, block_n: int, *, nbuf: int = 2,
+                    itemsize: int = 4, compensated: bool = False) -> int:
+    """VMEM the multi-buffered packed kernel needs at this tile width:
+    the 3-array input ring, the in-register W / weighted-W tiles, and the
+    (1|2) accumulator tiles."""
+    p = kernel.packing_factor(degree)
+    ring = 3 * nbuf * p * block_n * itemsize
+    wmat = 2 * kernel.K_PAD * block_n * 4          # accum dtype f32
+    acc = (2 if compensated else 1) * kernel.K_PAD * kernel.K_PAD * 4
+    return ring + wmat + acc
+
+
+def feasible_blocks(degree: int, *, nbuf: int = 2, itemsize: int = 4,
+                    budget: int = VMEM_BUDGET) -> tuple[int, ...]:
+    out = tuple(b for b in CANDIDATE_BLOCKS
+                if ring_vmem_bytes(degree, b, nbuf=nbuf,
+                                   itemsize=itemsize) <= budget)
+    return out or CANDIDATE_BLOCKS[:1]
+
+
+def autotune_block_n(degree: int, n: int | None = None, *,
+                     dtype=jnp.float32, nbuf: int = 2,
+                     backend: str | None = None, reps: int = 2,
+                     timer=time.perf_counter,
+                     force: bool = False) -> int:
+    """Pick ``block_n`` for the packed kernel from a one-shot timed sweep.
+
+    ``n`` only bounds the sweep's synthetic series length (defaults to
+    4 blocks of the largest candidate); the winner is cached per
+    ``(degree, dtype.name, backend)`` — NOT per n, since any block width
+    serves any length (ops.py pads the tail with weight 0).
+    """
+    bk = backend or jax.default_backend()
+    key = (degree, jnp.dtype(dtype).name, bk)
+    if not force and key in _CACHE:
+        return _CACHE[key]
+
+    cands = feasible_blocks(degree, nbuf=nbuf,
+                            itemsize=jnp.dtype(dtype).itemsize)
+    p = kernel.packing_factor(degree)
+    interpret = bk != "tpu"
+    n_sweep = max(c * 2 for c in cands) if n is None else n
+    best_b, best_t = cands[0], float("inf")
+    for bn in cands:
+        n_pad = -(-n_sweep // bn) * bn
+        x = jnp.linspace(-1.0, 1.0, n_pad, dtype=dtype)
+        x = jnp.broadcast_to(x, (1, p, n_pad))
+        try:
+            fn = lambda: kernel.moments_packed_extended(   # noqa: E731
+                x, x, jnp.ones_like(x), degree=degree, block_n=bn,
+                nbuf=nbuf, interpret=interpret)
+            jax.block_until_ready(fn())                    # compile + warm
+            t = float("inf")
+            for _ in range(reps):
+                t0 = timer()
+                out = fn()
+                jax.block_until_ready(out)
+                t = min(t, timer() - t0)
+        except Exception:  # noqa: BLE001 — infeasible candidate on this host
+            continue
+        if t < best_t:
+            best_b, best_t = bn, t
+    _CACHE[key] = best_b
+    return best_b
+
+
+def clear_cache() -> None:
+    _CACHE.clear()

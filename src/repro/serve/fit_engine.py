@@ -9,9 +9,14 @@ TPU, via ``repro.engine`` plan dispatch) with per-slot streaming
 ``StreamState`` — so a million-point series occupies one slot and folds in
 chunk-by-chunk while short requests churn through the other slots.
 
-vLLM-style static shapes: every bucket owns exactly ONE compiled ingest
-executable of shape (n_slots, width), warmed once and reused across
-arbitrary request churn.  Padding rides in with weight 0 (contributes
+vLLM-style static shapes: every bucket owns ONE compiled fused
+ingest+solve executable of shape (n_slots, width) — on any step where a
+request completes, the chunk accumulates into the slots' moments AND the
+pool's default fixed spec is solved in the same program, so the Gram goes
+matmul→solve without an HBM round-trip or a second host dispatch.
+Mid-series steps (no completion — only the widest bucket ever takes
+them) dispatch a plain ingest instead, skipping the wasted solve.  Both
+are warmed once and reused across arbitrary request churn.  Padding rides in with weight 0 (contributes
 nothing, by the additive-moments property), slot reuse zeroes the slot's
 moments with a keep-mask inside the same compiled step, and per-slot IRLS
 robustness is selected by RUNTIME mask/loss/c arrays — so request
@@ -267,42 +272,49 @@ def validate_series(x, y, rspec) -> tuple[np.ndarray, np.ndarray]:
     return x, y
 
 
-def make_spec_solve(pool_degree: int):
-    """The per-request fixed-degree solve over a pool-degree state.
+def _spec_solve_from_state(state, spec, pool_degree: int):
+    """The ONE definition of a per-request fixed-degree solve over a
+    pool-degree state: the request's nested degree is a truncate view of
+    the accumulated state; its numerics policy (solver rung, fallback,
+    cond_cap, ridge) and method (LSE vs moment-space LSPIA) ride in the
+    static spec.  Traced both standalone (``make_spec_solve``) and fused
+    after the ingest body (``_Bucket.ingest_solve``) — same ops, same
+    order, so the two executables agree bitwise."""
+    d = int(spec.degree)
+    m = (state.moments.truncate(d) if d < pool_degree
+         else state.moments)
+    ms = m.regularized(spec.ridge) if spec.ridge else m
+    if spec.method == "lspia":
+        opts = spec.lspia
+        coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
+            ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
+            power_iters=opts.power_iters, step=opts.step)
+        fb = ~conv
+    else:
+        rung = spec.numerics.solver
+        if rung == "auto":
+            rung = solve_lib.select_solver(
+                d, state.moments.gram.dtype, basis=spec.basis,
+                normalized=spec.domain is not None)
+        coeffs, cond, fb = solve_lib.solve_with_fallback(
+            ms.gram, ms.vty, method=rung,
+            fallback=spec.numerics.fallback,
+            cond_cap=spec.numerics.cond_cap)
+    rep = fit_lib.report_from_moments(m, coeffs)
+    return (coeffs, rep.sse, rep.r, state.moments.count, cond, fb)
 
-    Module-level factory so every serving surface (the slot-pool engine,
-    each fleet worker) answers a spec with the SAME compiled semantics:
-    the request's nested degree is a truncate view of the accumulated
-    state; its numerics policy (solver rung, fallback, cond_cap, ridge)
-    and method (LSE vs moment-space LSPIA) ride in the static spec.
+
+def make_spec_solve(pool_degree: int):
+    """Jitted wrapper of ``_spec_solve_from_state`` — the executable every
+    serving surface (the slot-pool engine for NON-default specs, each
+    fleet worker for every spec) answers a fixed-degree request with.
     Shape-polymorphic over the state's batch axes: (n_slots,) on the
     engine, () on a fleet worker's per-request state."""
     from functools import partial as _partial
 
     @_partial(jax.jit, static_argnames=("spec",))
     def solve(state, spec):
-        d = int(spec.degree)
-        m = (state.moments.truncate(d) if d < pool_degree
-             else state.moments)
-        ms = m.regularized(spec.ridge) if spec.ridge else m
-        if spec.method == "lspia":
-            opts = spec.lspia
-            coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
-                ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
-                power_iters=opts.power_iters, step=opts.step)
-            fb = ~conv
-        else:
-            rung = spec.numerics.solver
-            if rung == "auto":
-                rung = solve_lib.select_solver(
-                    d, state.moments.gram.dtype, basis=spec.basis,
-                    normalized=spec.domain is not None)
-            coeffs, cond, fb = solve_lib.solve_with_fallback(
-                ms.gram, ms.vty, method=rung,
-                fallback=spec.numerics.fallback,
-                cond_cap=spec.numerics.cond_cap)
-        rep = fit_lib.report_from_moments(m, coeffs)
-        return (coeffs, rep.sse, rep.r, state.moments.count, cond, fb)
+        return _spec_solve_from_state(state, spec, pool_degree)
 
     return solve
 
@@ -386,7 +398,8 @@ def fill_auto_result(req: FitRequest, spec, outs: dict, criterion: str,
 
 
 class _Bucket:
-    """One length bucket: a slot pool + its compiled ingest step."""
+    """One length bucket: a slot pool + its compiled fused
+    ingest+default-solve step."""
 
     def __init__(self, width: int, n_slots: int, engine: "FitServeEngine"):
         cfg = engine.cfg
@@ -466,6 +479,23 @@ class _Bucket:
 
         self.ingest = ingest
 
+        # The fused hot path: accumulate the chunk AND solve the pool's
+        # default fixed spec in ONE executable, so the updated Gram flows
+        # from the moment matmul straight into the solve without a
+        # round-trip through HBM (or a second host dispatch) between
+        # ticks.  The solve half is the same ``_spec_solve_from_state``
+        # the standalone executable traces — non-default request specs
+        # still go through ``FitServeEngine._solve`` on the returned
+        # state, unchanged.
+        fixed_spec = engine.fixed_spec
+
+        @jax.jit
+        def ingest_solve(state, x, y, w, keep, rmask, loss_id, cval):
+            st = ingest(state, x, y, w, keep, rmask, loss_id, cval)
+            return st, _spec_solve_from_state(st, fixed_spec, degree)
+
+        self.ingest_solve = ingest_solve
+
 
 class FitServeEngine:
     """Host-side continuous batching around compiled moment-ingest steps."""
@@ -531,11 +561,13 @@ class FitServeEngine:
     def warmup(self) -> int:
         """Compile every executable up front — one full-width synthetic
         fixed-degree request AND one auto-degree request per bucket,
-        drained immediately — so steady-state serving provably never
-        recompiles whatever mix of DEFAULT-spec request kinds arrives.
-        (A novel per-request spec compiles its own solve once on first
-        use, then joins the invariant.)  Returns ``compiled_executables()``
-        (the baseline the no-recompile invariant is asserted against).
+        plus one double-width request whose mid-series chunk compiles the
+        widest bucket's plain (no-solve) ingest step — drained
+        immediately, so steady-state serving provably never recompiles
+        whatever mix of DEFAULT-spec request kinds arrives.  (A novel
+        per-request spec compiles its own solve once on first use, then
+        joins the invariant.)  Returns ``compiled_executables()`` (the
+        baseline the no-recompile invariant is asserted against).
         Deterministic: does not depend on the live traffic's lengths."""
         if self.pending:
             raise RuntimeError("warmup() requires an idle engine")
@@ -544,15 +576,28 @@ class FitServeEngine:
             x = np.linspace(-1.0, 1.0, n, dtype=np.float32)
             self.submit(x, x, spec=self.fixed_spec)
             self.submit(x, x, spec=self.auto_spec)
+        # only the LAST bucket ever ingests multi-chunk series (routing
+        # sends every shorter request to a bucket wide enough to finish
+        # it in one step), so one over-length request warms its
+        # mid-series path — 3 chunks long, so at least one step is
+        # mid-series-only even when it shares its first step with the
+        # completing requests above
+        n2 = 3 * self.buckets[-1].width
+        x2 = np.linspace(-1.0, 1.0, n2, dtype=np.float32)
+        self.submit(x2, x2, spec=self.fixed_spec)
         self.run()
         return self.compiled_executables()
 
     def compiled_executables(self) -> int:
         """Total compiled executables across the engine's jitted steps —
         constant after warmup (plus one per NOVEL request spec, compiled
-        at first use) is the no-recompile serving invariant."""
+        at first use) is the no-recompile serving invariant.  The fused
+        ingest+solve is ONE executable per bucket; the plain ingest
+        compiles only where mid-series (no-completion) steps can occur —
+        the widest bucket."""
         return (self._solve._cache_size() + self._sweep._cache_size()
-                + sum(b.ingest._cache_size() for b in self.buckets))
+                + sum(b.ingest._cache_size() + b.ingest_solve._cache_size()
+                      for b in self.buckets))
 
     @property
     def pending(self) -> int:
@@ -596,23 +641,32 @@ class FitServeEngine:
                                                     req.spec.irls.c)
         keep = np.where(b.reset, 0.0, 1.0).astype(np.float32)
         b.reset[:] = False
-        b.state = b.ingest(b.state, jnp.asarray(xh), jnp.asarray(yh),
-                           jnp.asarray(wh), jnp.asarray(keep),
-                           jnp.asarray(rmask), jnp.asarray(loss_id),
-                           jnp.asarray(cval))
-
+        # readiness is host-known BEFORE dispatch (slot_pos already
+        # advanced), so each step picks the cheapest executable: the
+        # fused ingest+solve when ≥1 request completes this chunk — the
+        # Gram never round-trips through HBM (or a second dispatch)
+        # between accumulate and solve — and the plain ingest on
+        # mid-series steps, where a solve would be wasted work
         ready = [s for s in active if b.slot_pos[s] >= b.slot_req[s].n]
+        args = (jnp.asarray(xh), jnp.asarray(yh), jnp.asarray(wh),
+                jnp.asarray(keep), jnp.asarray(rmask),
+                jnp.asarray(loss_id), jnp.asarray(cval))
         if not ready:
+            b.state = b.ingest(b.state, *args)
             return
-        # group ready slots by their request's spec: one compiled solve
-        # per DISTINCT spec (not per request) serves the whole group
+        b.state, fused = b.ingest_solve(b.state, *args)
+        # group ready slots by their request's spec: the default fixed
+        # spec is already solved (fused above); every other DISTINCT spec
+        # gets one compiled solve for its whole group
         fixed_groups: dict[Any, list[int]] = {}
         auto_groups: dict[Any, list[int]] = {}
         for s in ready:
             groups = (auto_groups if b.slot_req[s].auto else fixed_groups)
             groups.setdefault(b.slot_req[s].spec, []).append(s)
         for spec, slots in fixed_groups.items():
-            solved = tuple(np.asarray(a) for a in self._solve(b.state, spec))
+            out = (fused if spec == self.fixed_spec
+                   else self._solve(b.state, spec))
+            solved = tuple(np.asarray(a) for a in out)
             for s in slots:
                 fill_fixed_result(b.slot_req[s], spec, solved, s)
                 b.slot_req[s] = None
@@ -626,8 +680,9 @@ class FitServeEngine:
                 self.fits_done += 1
 
     def step(self) -> None:
-        """One engine iteration: admit + one compiled ingest per non-empty
-        bucket (+ one compiled solve per distinct ready spec)."""
+        """One engine iteration: admit + one compiled fused ingest+solve
+        per non-empty bucket (+ one compiled solve per distinct ready
+        NON-default spec)."""
         for b in self.buckets:
             self._step_bucket(b)
 

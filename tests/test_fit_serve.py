@@ -54,7 +54,10 @@ def test_zero_recompiles_across_request_churn():
     eng = FitServeEngine(FitServeConfig(degree=3, n_slots=3,
                                         buckets=(64, 256), ridge=1e-9))
     warm = eng.warmup()
-    # one ingest/bucket + one fixed solve + one auto-degree sweep
+    # one fused ingest+fixed-solve per bucket + one auto-degree sweep +
+    # one plain mid-series ingest for the widest bucket (the default
+    # fixed solve is inlined into the fused executable, so the
+    # standalone solve cache stays empty until a NOVEL spec arrives)
     assert warm == len(eng.buckets) + 2
     for x, y in _trace(2, 8, 5, 500):
         eng.submit(x, y)
@@ -119,3 +122,22 @@ def test_submit_validation():
         eng.submit(np.ones(2), np.ones(2))
     with pytest.raises(ValueError):
         FitServeEngine(FitServeConfig(buckets=(256, 64)))
+
+
+def test_fused_solve_matches_standalone_solve():
+    """The fused ingest+solve answers the default spec from the SAME
+    ``_spec_solve_from_state`` the standalone per-spec solve traces, so
+    re-solving the bucket's post-ingest state standalone reproduces the
+    served result."""
+    eng = FitServeEngine(FitServeConfig(degree=3, n_slots=2,
+                                        buckets=(128,), ridge=1e-9))
+    reqs = [eng.submit(x, y) for x, y in _trace(13, 2, 100, 100, degree=3)]
+    eng.run()
+    assert all(r.done for r in reqs)
+    b = eng.buckets[0]
+    coeffs, sse, r, count, cond, fb = (np.asarray(a) for a in
+                                       eng._solve(b.state, eng.fixed_spec))
+    for s, req in enumerate(reqs):
+        np.testing.assert_array_equal(req.coeffs, coeffs[s, :4])
+        np.testing.assert_array_equal(req.sse, sse[s])
+        np.testing.assert_array_equal(req.r, r[s])

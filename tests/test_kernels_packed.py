@@ -183,3 +183,81 @@ def test_streaming_update_kernel_path():
         np.asarray(streaming.current_fit(s_j, ridge=1e-6).coeffs),
         np.asarray(streaming.current_fit(s_k, ridge=1e-6).coeffs),
         rtol=5e-3, atol=5e-3)
+
+
+# ------------------------------------------------- double-buffered DMA kernel
+@pytest.mark.parametrize("deg,b,n,nbuf", [
+    (1, 4, 700, 2),
+    (3, 7, 1000, 2),
+    (3, 7, 1000, 3),
+    (5, 3, 2500, 4),
+    (9, 2, 640, 2),
+])
+def test_double_buffered_bit_equals_grid_streamed(deg, b, n, nbuf):
+    """The multi-buffered DMA pipeline shares ``_packed_tile_update`` with
+    the grid-streamed kernel, so at the SAME block_n the two are bit-equal
+    (identical summation grouping), not merely close."""
+    x, y = _data(17 + deg, b, n)
+    block_n = 256
+    m0 = ops.moments(x, y, deg, packing="packed", block_n=block_n)
+    m1 = ops.moments(x, y, deg, packing="packed", block_n=block_n, nbuf=nbuf)
+    for f in ("gram", "vty", "yty", "count", "weight_sum"):
+        np.testing.assert_array_equal(np.asarray(getattr(m0, f)),
+                                      np.asarray(getattr(m1, f)), err_msg=f)
+
+
+def test_double_buffered_weighted_and_compensated():
+    x, y = _data(23, 5, 900)
+    rng = np.random.default_rng(23)
+    w = jnp.asarray(rng.uniform(0, 2, x.shape), jnp.float32)
+    for comp in (False, True):
+        m0 = ops.moments(x, y, 3, weights=w, packing="packed",
+                         block_n=256, compensated=comp)
+        m1 = ops.moments(x, y, 3, weights=w, packing="packed",
+                         block_n=256, compensated=comp, nbuf=2)
+        for f in ("gram", "vty", "yty", "weight_sum"):
+            np.testing.assert_array_equal(np.asarray(getattr(m0, f)),
+                                          np.asarray(getattr(m1, f)),
+                                          err_msg=f"{f} comp={comp}")
+
+
+def test_double_buffered_matches_jnp_reference():
+    x, y = _data(29, 6, 1234)        # odd length: tail padding in play
+    mk = ops.moments(x, y, 3, packing="packed", block_n=512, nbuf=2)
+    _assert_moments_close(mk, _jnp_moments(x, y, 3))
+
+
+def test_nbuf_validation():
+    x, y = _data(31, 4, 256)
+    with pytest.raises(ValueError):
+        ops.moments(x, y, 3, packing="packed", nbuf=1)
+    with pytest.raises(ValueError):
+        ops.moments(x, y, 3, packing="plain", nbuf=2)
+
+
+# ------------------------------------------------------------------- autotune
+def test_autotune_feasible_and_cached():
+    from repro.kernels import tune
+    tune.clear_cache()
+    try:
+        ticks = iter(range(1000))
+        bn = tune.autotune_block_n(3, 4096, reps=1,
+                                   timer=lambda: next(ticks) * 1e-3)
+        assert bn in tune.CANDIDATE_BLOCKS
+        assert bn in tune.feasible_blocks(3)
+        # cache hit: no more timer draws
+        before = next(ticks)
+        assert tune.autotune_block_n(3, 4096) == bn
+        assert next(ticks) == before + 1
+    finally:
+        tune.clear_cache()
+
+
+def test_autotune_vmem_model_monotone():
+    from repro.kernels import tune
+    assert (tune.ring_vmem_bytes(3, 2048) < tune.ring_vmem_bytes(3, 4096)
+            < tune.ring_vmem_bytes(3, 4096, nbuf=3))
+    # every feasible candidate respects the budget
+    for deg in (1, 3, 9):
+        for bn in tune.feasible_blocks(deg):
+            assert tune.ring_vmem_bytes(deg, bn) <= tune.VMEM_BUDGET
