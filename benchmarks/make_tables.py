@@ -19,6 +19,7 @@ import argparse
 import glob
 import json
 import os
+import re
 import subprocess
 import sys
 
@@ -70,16 +71,50 @@ def _git_rev_order():
         return {}
 
 
+# BENCH_<rev>.json (full run) / BENCH_<rev>_smoke.json / BENCH_<rev>_quick.json.
+# The mode suffix is matched against the known set, so revs containing
+# underscores (or the "norev" fallback) parse correctly.
+_BENCH_RE = re.compile(r"^BENCH_(?P<rev>.+?)(?:_(?P<mode>smoke|quick))?\.json$")
+
+
+def _rev_position(rev, order):
+    """Position of ``rev`` in first-parent history.  Matches by hash prefix
+    in either direction — ``git log --format=%h`` and the bench writer may
+    abbreviate the same commit to different lengths.  Unknown revs sort
+    after all known history (then by timestamp) instead of crashing."""
+    if rev in order:
+        return order[rev]
+    for h, i in order.items():
+        if h.startswith(rev) or rev.startswith(h):
+            return i
+    return len(order)
+
+
 def load_trajectory(mode="smoke", bench_dir=BENCH_DIR):
-    """Every committed BENCH_<rev>_<mode>.json, oldest rev first."""
-    runs = []
-    for p in glob.glob(os.path.join(bench_dir, f"BENCH_*_{mode}.json")):
-        d = json.load(open(p))
-        d.setdefault("rev",
-                     os.path.basename(p).split("_")[1])
-        runs.append(d)
+    """Committed BENCH files for ``mode`` ("smoke"/"quick"/"full"), oldest
+    rev first.  One run per (rev, mode): when several files claim the same
+    rev (re-runs, embedded rev overriding the filename) the newest
+    timestamp wins.  Unparseable filenames and corrupt JSON are skipped."""
+    by_rev = {}
+    for p in sorted(glob.glob(os.path.join(bench_dir, "BENCH_*.json"))):
+        m = _BENCH_RE.match(os.path.basename(p))
+        if not m:
+            continue
+        fmode = m.group("mode") or "full"
+        if fmode != mode:
+            continue
+        try:
+            with open(p) as f:
+                d = json.load(f)
+        except (json.JSONDecodeError, OSError):
+            continue  # half-written bench drop: skip, don't kill the table
+        d.setdefault("rev", m.group("rev"))
+        prev = by_rev.get(d["rev"])
+        if prev is None or d.get("timestamp", "") > prev.get("timestamp", ""):
+            by_rev[d["rev"]] = d
     order = _git_rev_order()
-    runs.sort(key=lambda d: (order.get(d["rev"], len(order)),
+    runs = list(by_rev.values())
+    runs.sort(key=lambda d: (_rev_position(d["rev"], order),
                              d.get("timestamp", "")))
     return runs
 

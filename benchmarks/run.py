@@ -84,7 +84,7 @@ BW: perfgate.Bandwidth | None = None   # measured once per run (main())
 GATED_ROWS = ("moments_jnp", "moments_blocked", "moments_packed",
               "moments_packed_db", "fused_report", "streaming_update",
               "batched_fits", "select_sweep", "api_dispatch", "solve_ge",
-              "serve_fit", "serve_fleet")
+              "serve_fit", "serve_fleet", "lspia_momentum", "lspia_async")
 
 
 def _injected_slowdown(name: str) -> float | None:
@@ -372,6 +372,50 @@ def bench_solver_stack(quick: bool):
         f"converged={bool(lf.converged)};max_coeff_gap_vs_lse={gap:.2e}")
     if SMOKE:
         assert bool(lf.converged), "LSPIA failed to converge on smoke shapes"
+
+    # lspia_momentum: heavy-ball PIA-with-memory (β = 0.5, the measured
+    # optimum) — same fixed point, multiples fewer sweeps at one extra
+    # axpy per sweep
+    lspm = jax.jit(lambda x, y: core.lspia_fit(
+        x, y, 5, basis="chebyshev", momentum=0.5).poly.coeffs)
+    us_m = _time(lspm, xl, yl, iters=5, warmup=1)
+    lfm = core.lspia_fit(xl, yl, 5, basis="chebyshev", momentum=0.5)
+    gap_m = float(jnp.max(jnp.abs(lfm.poly.coeffs - ref.coeffs)))
+    row("lspia_momentum", us_m,
+        f"iters={int(lfm.iterations)};plain_iters={int(lf.iterations)};"
+        f"converged={bool(lfm.converged)};max_coeff_gap_vs_lse={gap_m:.2e}")
+    if SMOKE:
+        assert bool(lfm.converged), "momentum LSPIA failed to converge"
+        assert int(lfm.iterations) < int(lf.iterations), (
+            f"momentum did not accelerate: {int(lfm.iterations)} vs "
+            f"plain {int(lf.iterations)}")
+
+    # lspia_async: barrier-free sharded LSPIA — a python coordinator over
+    # jitted shard gradients on the virtual-tick mailbox substrate, so the
+    # row times one whole fault-free fit (wall time), not a kernel call
+    from repro.api.spec import FitSpec, LSPIAOptions
+    from repro.core import distributed as dist_lib
+    from repro.engine.plan import NumericsPolicy
+    # normalize=True: LSPIA needs the [-1, 1] domain map for a contractive
+    # iteration (the lspia_fit shim defaults it on, FitSpec defaults it off)
+    aspec = FitSpec(degree=5, basis="chebyshev", method="lspia",
+                    numerics=NumericsPolicy(solver="auto", normalize=True),
+                    lspia=LSPIAOptions(momentum=0.5))
+    n_sh = 4
+    dist_lib.async_lspia_fit(xl, yl, aspec, n_shards=n_sh)  # warm the jits
+    t0 = time.perf_counter()
+    af = dist_lib.async_lspia_fit(xl, yl, aspec, n_shards=n_sh)
+    us_a = Timed((time.perf_counter() - t0) * 1e6,
+                 {"stat": "single_call", "reps": 1, "iters": 1, "warmup": 1})
+    gap_a = float(jnp.max(jnp.abs(af.poly(xl) - ref(xl))))
+    # no n_points: this row is wall time of a python tick coordinator, not
+    # a memory-bound kernel — regression-gated only, no roofline floor
+    row("lspia_async", us_a,
+        f"versions={int(af.iterations)};ticks={int(af.ticks)};"
+        f"shards={n_sh};converged={bool(af.converged)};"
+        f"max_pred_gap_vs_lse={gap_a:.2e}")
+    if SMOKE:
+        assert bool(af.converged), "async LSPIA failed to converge"
 
 
 def bench_streaming(quick: bool):

@@ -266,7 +266,8 @@ def stream_result(state: streaming_lib.StreamState) -> FitResult:
     opts = spec.lspia
     coeffs, cond, conv, it = lspia_lib.lspia_solve_moments(
         m.gram, m.vty, tol=opts.tol, max_iter=opts.max_iter,
-        power_iters=opts.power_iters, step=opts.step)
+        power_iters=opts.power_iters, step=opts.step,
+        momentum=opts.momentum)
     diag = fit_lib.FitDiagnostics(condition=cond, fallback_used=~conv,
                                   solver="lspia", fallback="none")
     dom = spec.domain_or(basis_lib.Domain.identity(state.moments.gram.dtype),

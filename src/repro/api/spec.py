@@ -78,12 +78,28 @@ class LSPIAOptions:
     (``core.lspia.lspia_fit``); moment-only surfaces (streaming,
     distributed, serve) run the same fixed point as Richardson iteration
     directly on the accumulated O(m²) normal equations
-    (``core.lspia.lspia_solve_moments``)."""
+    (``core.lspia.lspia_solve_moments``).
+
+    ``momentum`` is the PIA-with-memory acceleration (arXiv:1908.06417):
+    a heavy-ball term β·(cₖ − cₖ₋₁) added to every sweep.  β = 0 is the
+    plain iteration; β ∈ (0, 1) cuts iterations-to-tol by multiples on
+    the moderately conditioned problems LSPIA targets (measured in
+    EXPERIMENTS.md §LSPIA acceleration).  Every surface honors it: the
+    eager matrix-free loop, moment-space streaming/serve solves, the
+    barrier-synchronous distributed executor, and the async shard fleet.
+
+    ``staleness`` bounds how out-of-date a shard's contribution may be in
+    the asynchronous executor (``core.distributed.async_lspia_fit``): a
+    delta computed against coefficients more than ``staleness`` versions
+    behind the coordinator's is rejected and recomputed rather than
+    accumulated.  Synchronous surfaces ignore it."""
 
     tol: float = 1e-8
     max_iter: int = 5000
     power_iters: int = 12
     step: float | None = None
+    momentum: float = 0.0
+    staleness: int = 4
 
     def __post_init__(self):
         if self.max_iter < 1:
@@ -91,6 +107,11 @@ class LSPIAOptions:
         if self.power_iters < 1:
             raise ValueError("power_iters must be >= 1, got "
                              f"{self.power_iters}")
+        if not 0.0 <= self.momentum < 1.0:
+            raise ValueError("momentum must lie in [0, 1) (heavy-ball "
+                             f"stability), got {self.momentum}")
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {self.staleness}")
 
 
 @dataclasses.dataclass(frozen=True)

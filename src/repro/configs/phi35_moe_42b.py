@@ -8,6 +8,9 @@ CONFIG = ModelConfig(
     vocab_size=32064, n_experts=16, top_k=2, norm="layernorm",
     rope_theta=10000.0)
 
+# capacity_factor 2.5: see dbrx_132b.py — smoke is effectively dropless so
+# the consistency test checks routing determinism, not capacity-drop edges.
 SMOKE = dataclasses.replace(
     CONFIG, arch="phi3.5-moe-smoke", n_layers=2, d_model=64, n_heads=4,
-    n_kv_heads=2, d_ff=96, vocab_size=256, n_experts=4, top_k=2)
+    n_kv_heads=2, d_ff=96, vocab_size=256, n_experts=4, top_k=2,
+    capacity_factor=2.5)

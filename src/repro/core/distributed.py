@@ -20,10 +20,12 @@ This module is mesh-agnostic: pass the axis names that partition the data.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core import basis as basis_lib
@@ -306,7 +308,8 @@ def make_spec_executor(spec, mesh: jax.sharding.Mesh, *,
             opts = spec.lspia
             coeffs, cond, conv, it = lspia_lib.lspia_solve_moments(
                 ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
-                power_iters=opts.power_iters, step=opts.step)
+                power_iters=opts.power_iters, step=opts.step,
+                momentum=opts.momentum)
             diag = fit_lib.FitDiagnostics(condition=cond,
                                           fallback_used=~conv,
                                           solver="lspia", fallback="none")
@@ -433,3 +436,367 @@ def distributed_fit_input_specs(n_global: int, dtype=jnp.float32):
     """ShapeDtypeStruct stand-ins for the dry-run of the fit itself."""
     s = jax.ShapeDtypeStruct((n_global,), dtype)
     return dict(x=s, y=s, weights=s)
+
+
+# --------------------------------------------------------------------------
+# asynchronous LSPIA: barrier-free shard contributions (arXiv:2211.06556)
+# --------------------------------------------------------------------------
+#
+# The shard_map executor above is a BARRIER program: every Richardson sweep
+# waits for the slowest shard's psum.  The asynchronous-LSPIA result says it
+# does not have to — gradient contributions computed against *stale*
+# coefficient versions still drive the iteration to the same least-squares
+# fixed point as long as the staleness is bounded.  This section realizes
+# that on the fleet's virtual-tick mailbox substrate: one coordinator, N
+# ``AsyncLSPIAShard`` workers (each wrappable by ``runtime.chaos``'s
+# ``ChaosWorker`` — same protocol as ``serve.fleet``'s workers), per-shard
+# sequence numbers for idempotent delivery, and a staleness window outside
+# which a shard's delta is rejected and recomputed.  A chaos-stalled shard
+# therefore delays CONVERGENCE (its contribution is missing until it
+# catches up) but never blocks the coordinator's updates — the property
+# the synchronous psum program cannot have.
+
+
+@dataclasses.dataclass
+class ShardSweep:
+    """Coordinator → shard: "compute your normal-equation gradient against
+    these version-``version`` coefficients".  ``seq`` is the per-shard
+    sequence number (idempotent delivery: the coordinator accepts exactly
+    one reply per outstanding seq).  ``kind="ingest"`` so the chaos
+    injector's drop fault hits sweeps exactly as it hits fleet ingests."""
+
+    shard: int
+    seq: int
+    version: int
+    coeffs: np.ndarray
+    kind: str = "ingest"
+
+
+@dataclasses.dataclass
+class ShardDelta:
+    """Shard → coordinator: gᵢ = VᵢᵀWᵢ(yᵢ − Vᵢ c_version), stamped with
+    the coefficient version it was computed against.  ``kind="result"``
+    so the chaos poison fault can corrupt it (and the coordinator's
+    finite-validation must catch that)."""
+
+    shard: int
+    seq: int
+    version: int
+    delta: np.ndarray
+    worker: int = 0
+    kind: str = "result"
+
+    def poisoned(self) -> "ShardDelta":
+        return dataclasses.replace(
+            self, delta=np.full_like(self.delta, np.nan))
+
+
+@partial(jax.jit, static_argnames=("degree", "basis"))
+def _shard_gradient(xt, y, w, c, degree, basis):
+    from repro.core import lspia as lspia_lib
+    f = basis_lib.evaluate(c, xt, basis=basis)
+    return lspia_lib.vt_apply(xt, w * (y - f), degree, basis=basis)
+
+
+class AsyncLSPIAShard:
+    """One data shard speaking the fleet mailbox protocol (``process(msg,
+    tick) -> [reply]`` / ``reset()``), so ``runtime.chaos.ChaosWorker``
+    wraps it unchanged.  Stateless between sweeps — the shard's partition
+    IS its identity — so a chaos crash + revive loses nothing but the
+    in-flight sweep (which the coordinator's retry resends)."""
+
+    def __init__(self, shard_id: int, xt, y, w, degree: int, basis: str):
+        self.shard_id = shard_id
+        self._xt, self._y, self._w = xt, y, w
+        self._degree, self._basis = degree, basis
+        self.sweeps_done = 0
+
+    def reset(self) -> None:
+        self.sweeps_done = 0
+
+    def process(self, msg, tick: int) -> list:
+        if getattr(msg, "kind", None) != "ingest":
+            return []
+        c = jnp.asarray(msg.coeffs, self._xt.dtype)
+        g = _shard_gradient(self._xt, self._y, self._w, c,
+                            self._degree, self._basis)
+        self.sweeps_done += 1
+        return [ShardDelta(shard=self.shard_id, seq=msg.seq,
+                           version=msg.version, delta=np.asarray(g),
+                           worker=self.shard_id)]
+
+
+@dataclasses.dataclass
+class AsyncLSPIAFit:
+    """An asynchronous LSPIA fit: polynomial + the coordinator's record.
+
+    ``iterations`` counts coefficient versions applied (the async analogue
+    of sweeps); ``stats`` surfaces every fault-path event — stale
+    rejections, poisoned deltas, resends, straggler verdicts and the
+    ``runtime.straggler`` reslice plan they imply, and crucially
+    ``updates_during_stall``: coordinator updates applied while at least
+    one shard was chaos-stalled (the no-global-barrier property, > 0 in
+    any stalled run that converged)."""
+
+    poly: fit_lib.Polynomial
+    iterations: int
+    ticks: int
+    converged: bool
+    grad_norm: float
+    step: float
+    stats: dict
+
+
+def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
+                    weights=None, chaos=None,
+                    work_per_tick: int = 1,
+                    max_ticks: int = 200_000,
+                    retry_ticks: int = 8,
+                    restart_ticks: int = 8,
+                    straggler_every: int = 4,
+                    straggler_threshold: float = 3.0) -> AsyncLSPIAFit:
+    """Barrier-free distributed LSPIA on the virtual-tick mailbox substrate.
+
+    ``spec`` must be ``FitSpec(method="lspia")``; its ``LSPIAOptions``
+    supply tol / max-iteration budget / ``momentum`` (heavy-ball on the
+    coordinator's updates) and ``staleness`` — the bounded-delay window of
+    the asynchronous convergence result: a delta computed more than
+    ``staleness`` coefficient versions ago is rejected (and excluded from
+    the accumulated gradient until its shard refreshes), and convergence
+    is only declared when the combined gradient is small AND every shard's
+    contribution is within the window.  The coordinator's step is the
+    synchronous safe step damped by the staleness bound
+    (μ = μ_sync / (1 + s/2), the classic delayed-gradient stability
+    margin), with the same divergence freeze guard as the eager path.
+
+    ``chaos`` takes a ``runtime.chaos.ChaosSchedule``; every fault kind
+    applies (sweeps are droppable "ingest"s, deltas poisonable "result"s,
+    shards stall/crash/delay like fleet workers).  Straggler verdicts come
+    from ``runtime.fault_tolerance.FailureDetector`` — the paper's own LSE
+    fitting per-shard reply gaps — and each verdict is answered with a
+    ``runtime.straggler.plan_reslice`` share plan in ``stats["reslice"]``.
+
+    Requires ``spec.decay == 1.0``: asynchronous delivery has no global
+    age order, so exponential forgetting is not defined on this surface.
+    """
+    from repro.core import lspia as lspia_lib
+    from repro.runtime import chaos as chaos_lib
+    from repro.runtime import straggler as straggler_lib
+    from repro.runtime.fault_tolerance import FailureDetector
+
+    if spec.method != "lspia":
+        raise ValueError(f"async_lspia_fit needs method='lspia', got "
+                         f"{spec.method!r}")
+    if spec.is_search:
+        raise ValueError("async_lspia_fit serves fixed degrees; run "
+                         "DegreeSearch on the moment surfaces")
+    if spec.decay != 1.0:
+        raise ValueError(
+            "async delivery has no global age order: decay must be 1.0 "
+            f"(got {spec.decay})")
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    if x.ndim != 1 or x.shape != y.shape:
+        raise ValueError(f"expected equal 1-D x/y, got {x.shape} vs "
+                         f"{y.shape}")
+    if x.shape[0] < n_shards:
+        raise ValueError(f"{x.shape[0]} points cannot fill {n_shards} "
+                         "shards")
+    degree = int(spec.degree)
+    basis = spec.basis
+    opts = spec.lspia
+    staleness = int(opts.staleness)
+    beta = float(opts.momentum)
+    ridge = float(spec.ridge)
+    w = (jnp.ones_like(x) if weights is None
+         else jnp.asarray(weights, x.dtype))
+    plan = spec.plan(x.shape, x.dtype, weighted=weights is not None,
+                     workload="lspia")
+    dom = spec.domain_or(
+        basis_lib.Domain.from_data(x) if plan.numerics.normalize
+        else basis_lib.Domain.identity(x.dtype), dtype=x.dtype)
+    xt = dom.apply(x)
+
+    # safe synchronous step (same settledness-gated trace clamp as the
+    # eager path), then the bounded-delay damping
+    tiny = float(jnp.finfo(x.dtype).tiny)
+    lam, lam_prev = lspia_lib._lambda_max(xt, w, degree, basis,
+                                          opts.power_iters, with_prev=True)
+    lam = float(lam) + ridge
+    tr_ub = float(lspia_lib._trace_normal(xt, w, degree, basis)) \
+        + ridge * (degree + 1)
+    settled = abs(lam - (float(lam_prev) + ridge)) <= 0.05 * lam
+    lam_safe = lam if settled else max(lam, tr_ub)
+    mu_sync = (1.0 / max(lam_safe, tiny) if opts.step is None
+               else float(opts.step))
+    mu = mu_sync / (1.0 + 0.5 * staleness)
+
+    bvec = np.asarray(lspia_lib.vt_apply(xt, w * y, degree, basis=basis),
+                      np.float64)
+    gref = max(float(np.linalg.norm(bvec)), tiny)
+    tol = max(float(opts.tol), 25.0 * float(jnp.finfo(x.dtype).eps))
+    cap = lspia_lib._DIVERGE_FACTOR * gref
+
+    bounds = np.linspace(0, x.shape[0], n_shards + 1).astype(int)
+    schedule = chaos or chaos_lib.ChaosSchedule()
+    workers = [
+        chaos_lib.ChaosWorker(
+            AsyncLSPIAShard(i, xt[bounds[i]:bounds[i + 1]],
+                            y[bounds[i]:bounds[i + 1]],
+                            w[bounds[i]:bounds[i + 1]], degree, basis),
+            i, schedule.for_worker(i))
+        for i in range(n_shards)]
+    detector = FailureDetector(n_shards, timeout_s=float(max_ticks),
+                               straggler_threshold=straggler_threshold)
+
+    m1 = degree + 1
+    c = np.zeros(m1, np.float64)
+    c_prev = c.copy()
+    version = 0
+    latest: list[np.ndarray | None] = [None] * n_shards
+    latest_version = [-1] * n_shards
+    next_seq = [0] * n_shards
+    # outstanding[i] = (seq, sent_tick) of the sweep awaiting a reply
+    outstanding: list[tuple[int, int] | None] = [None] * n_shards
+    inbox: list[list] = [[] for _ in range(n_shards)]
+    due: list[tuple[int, int, ShardDelta]] = []
+    due_n = 0
+    last_reply = [0] * n_shards
+    died_at: dict[int, int] = {}
+    gnorm = gref
+    gprev = float("inf")
+    stats = {"n_shards": n_shards, "staleness": staleness,
+             "updates": 0, "updates_during_stall": 0,
+             "stale_rejected": 0, "poisoned": 0, "resends": 0,
+             "duplicates": 0, "crashes": 0, "freezes": 0,
+             "straggler_verdicts": [], "reslice": None,
+             "sweeps_per_shard": None}
+    converged = False
+    tick = 0
+
+    def send_sweep(i: int) -> None:
+        if len(inbox[i]) >= 4:      # bounded mailbox: a stalled shard's
+            return                  # queue must not grow without limit
+        next_seq[i] += 1
+        outstanding[i] = (next_seq[i], tick)
+        inbox[i].append(ShardSweep(shard=i, seq=next_seq[i],
+                                   version=version, coeffs=c.copy()))
+
+    while tick < max_ticks and not converged:
+        tick += 1
+        for i, wk in enumerate(workers):
+            wk.begin_tick(tick)
+            if not wk.alive and i not in died_at:
+                died_at[i] = tick
+                stats["crashes"] += 1
+            if not wk.alive and tick - died_at.get(i, tick) >= \
+                    restart_ticks:
+                wk.revive()
+                inbox[i].clear()
+                outstanding[i] = None
+                del died_at[i]
+        stalled_now = any(wk.stalled(tick) for wk in workers)
+        # pump shard mailboxes (a stalled shard heartbeats but computes
+        # nothing — its inbox just waits)
+        for i, wk in enumerate(workers):
+            if not wk.alive or wk.stalled(tick):
+                continue
+            for _ in range(work_per_tick):
+                if not inbox[i]:
+                    break
+                msg = inbox[i].pop(0)
+                for delay, rep in wk.process(msg, tick):
+                    due.append((tick + delay, due_n, rep))
+                    due_n += 1
+        # deliver due replies
+        due.sort()
+        fresh = False
+        while due and due[0][0] <= tick:
+            _, _, rep = due.pop(0)
+            i = rep.shard
+            out = outstanding[i]
+            if out is None or rep.seq != out[0]:
+                stats["duplicates"] += 1
+                continue
+            outstanding[i] = None
+            last_reply[i] = tick
+            if not np.all(np.isfinite(rep.delta)):
+                stats["poisoned"] += 1      # chaos poison: recompute
+                continue
+            if version - rep.version > staleness:
+                stats["stale_rejected"] += 1    # outside the bounded-
+                continue                        # delay window: recompute
+            latest[i] = np.asarray(rep.delta, np.float64)
+            latest_version[i] = rep.version
+            fresh = True
+        # staleness-bounded accumulation: only in-window contributions
+        # enter the combined gradient (a stalled shard's ancient delta
+        # must not keep steering the iterate)
+        in_window = [i for i in range(n_shards)
+                     if latest[i] is not None
+                     and version - latest_version[i] <= staleness]
+        if fresh and in_window:
+            gsum = sum(latest[i] for i in in_window) - ridge * c
+            gn = float(np.linalg.norm(gsum))
+            if not np.isfinite(gn) or gn > cap:
+                stats["freezes"] += 1   # divergence freeze, as eager
+            else:
+                upd = c + mu * gsum + beta * (c - c_prev)
+                c_prev, c = c, upd
+                version += 1
+                gprev, gnorm = gnorm, gn
+                stats["updates"] += 1
+                if stalled_now:
+                    stats["updates_during_stall"] += 1
+        # convergence: small combined gradient AND every shard current
+        if (len(in_window) == n_shards and gnorm <= tol * gref
+                and stats["updates"] > 0):
+            converged = True
+            break
+        # refill / retry sweeps
+        for i in range(n_shards):
+            out = outstanding[i]
+            if out is None:
+                send_sweep(i)
+            elif tick - out[1] > retry_ticks:
+                stats["resends"] += 1   # dropped/lost sweep: resend with
+                send_sweep(i)           # a fresh seq (old reply ignored)
+        # straggler verdicts from the paper's own LSE on reply gaps
+        if tick % straggler_every == 0:
+            gaps = [float(max(1, tick - last_reply[i]))
+                    for i in range(n_shards)]
+            detector.observe_step(tick // straggler_every, gaps,
+                                  now=float(tick))
+            v = detector.verdict(tick // straggler_every, now=float(tick))
+            if v["stragglers"]:
+                stats["straggler_verdicts"].append(
+                    (tick, tuple(v["stragglers"])))
+                try:
+                    stats["reslice"] = straggler_lib.plan_reslice(
+                        detector.steptime, tick // straggler_every,
+                        int(x.shape[0]), min_share=1).shares
+                except ValueError:
+                    pass
+
+    if stats["updates"] >= 2 and gprev > 0 and np.isfinite(gprev):
+        rho = gnorm / gprev
+    else:
+        rho = 0.0
+    lam_mu = lam_safe * mu
+    cond = (float("inf") if rho >= 1.0
+            else max(lam_mu / (1.0 - rho), 1.0))
+    stats["sweeps_per_shard"] = [wk.inner.sweeps_done for wk in workers]
+    dtype = x.dtype
+    diag = fit_lib.FitDiagnostics(
+        condition=jnp.asarray(cond, dtype),
+        fallback_used=jnp.asarray(not converged),
+        solver="lspia", fallback="none")
+    poly = fit_lib.Polynomial(coeffs=jnp.asarray(c, dtype),
+                              domain_shift=dom.shift,
+                              domain_scale=dom.scale, basis=basis,
+                              diagnostics=diag)
+    return AsyncLSPIAFit(poly=poly, iterations=version, ticks=tick,
+                         converged=converged, grad_norm=gnorm, step=mu,
+                         stats=stats)

@@ -75,29 +75,76 @@ def _normal_op(x: jax.Array, w: jax.Array, c: jax.Array, degree: int,
     return vt_apply(x, w * f, degree, basis=basis)
 
 
-def _power_iter(op, shape, dtype, iters: int) -> jax.Array:
-    """Largest eigenvalue of the SPD operator ``op`` by power iteration."""
+def _power_iter(op, shape, dtype, iters: int,
+                with_prev: bool = False):
+    """Largest eigenvalue of the SPD operator ``op`` by power iteration.
+
+    ``with_prev=True`` additionally returns the previous sweep's estimate
+    — the caller's cheap settledness signal: a large relative gap between
+    the last two iterates means the estimate is still climbing (clustered
+    spectrum, or a start vector nearly orthogonal to the top eigenvector)
+    and must not be trusted as λmax."""
     m1 = shape[-1]
     v0 = jnp.broadcast_to(jnp.ones(m1, dtype) / jnp.sqrt(jnp.asarray(
         m1, dtype)), shape)
 
     def body(_, carry):
-        v, _ = carry
+        v, lam_prev, _ = carry
         av = op(v)
         lam = jnp.linalg.norm(av, axis=-1)
         safe = jnp.maximum(lam[..., None], jnp.finfo(dtype).tiny)
-        return av / safe, lam
+        return av / safe, lam, lam_prev
 
-    _, lam = jax.lax.fori_loop(0, iters, body,
-                               (v0, jnp.ones(shape[:-1], dtype)))
-    return lam
+    _, lam, prev = jax.lax.fori_loop(
+        0, iters, body, (v0, jnp.ones(shape[:-1], dtype),
+                         jnp.ones(shape[:-1], dtype)))
+    return (lam, prev) if with_prev else lam
 
 
 def _lambda_max(x: jax.Array, w: jax.Array, degree: int, basis: str,
-                iters: int) -> jax.Array:
+                iters: int, with_prev: bool = False):
     """Power-iteration λmax(VᵀWV) from V/Vᵀ passes only (batched)."""
     return _power_iter(lambda v: _normal_op(x, w, v, degree, basis),
-                       x.shape[:-1] + (degree + 1,), x.dtype, iters)
+                       x.shape[:-1] + (degree + 1,), x.dtype, iters,
+                       with_prev)
+
+
+def _trace_normal(x: jax.Array, w: jax.Array, degree: int,
+                  basis: str) -> jax.Array:
+    """Matrix-free trace(VᵀWV) = Σᵢ wᵢ Σₖ basisₖ(xᵢ)² — one O(n·m) pass
+    with the same recurrences as ``vt_apply``, never forming the Gram.
+    trace(A) ≥ λmax(A) for SPD A, so 1/trace is an always-convergent
+    (if slow) Richardson step."""
+    tr = jnp.sum(w, axis=-1)
+    if degree >= 1:
+        prev, cur = jnp.ones_like(x), x
+        tr = tr + jnp.sum(w * cur * cur, axis=-1)
+        for _ in range(2, degree + 1):
+            if basis == basis_lib.MONOMIAL:
+                prev, cur = cur, x * cur
+            else:
+                prev, cur = cur, 2.0 * x * cur - prev
+            tr = tr + jnp.sum(w * cur * cur, axis=-1)
+    return tr
+
+
+def _gram_lambda_ub(gram: jax.Array) -> jax.Array:
+    """Cheap guaranteed upper bound on λmax of the (batched) SPD Gram:
+    min(trace, Gershgorin max-row-sum).  Both dominate λmax, so clamping
+    the power-iteration estimate from below by half this bound keeps the
+    Richardson step μ = 1/λ̂ strictly inside the convergent region
+    μ·λmax < 2 even when 12 power sweeps under-estimated λmax on a
+    clustered spectrum (the silent-divergence bug)."""
+    tr = jnp.trace(gram, axis1=-2, axis2=-1)
+    gersh = jnp.max(jnp.sum(jnp.abs(gram), axis=-1), axis=-1)
+    return jnp.minimum(tr, gersh)
+
+
+# relative gradient-norm growth beyond this is divergence, not a heavy-ball
+# transient: the lane freezes at its last finite iterate and reports
+# converged=False (finite coefficients are guaranteed — the fleet's
+# non-finite quarantine must never fire from a mis-stepped LSPIA)
+_DIVERGE_FACTOR = 1e6
 
 
 def _condition_from_rate(rho: jax.Array, lam_mu: jax.Array) -> jax.Array:
@@ -121,12 +168,14 @@ def _condition_from_rate(rho: jax.Array, lam_mu: jax.Array) -> jax.Array:
                      inf)
 
 
-@partial(jax.jit, static_argnames=("tol", "max_iter", "power_iters", "step"))
+@partial(jax.jit, static_argnames=("tol", "max_iter", "power_iters", "step",
+                                   "momentum"))
 def lspia_solve_moments(gram: jax.Array, vty: jax.Array, *,
                         tol: float = 1e-8,
                         max_iter: int = 5000,
                         power_iters: int = 12,
-                        step: float | None = None):
+                        step: float | None = None,
+                        momentum: float = 0.0):
     """LSPIA's fixed point computed from the O(m²) moment state alone.
 
     The matrix-free iteration ``c ← c + μ Vᵀ W (y − V c)`` is Richardson
@@ -142,36 +191,62 @@ def lspia_solve_moments(gram: jax.Array, vty: jax.Array, *,
     ``(coeffs, condition, converged, iterations)``: ``condition`` is the
     contraction-rate κ̂ estimate (same convention as ``lspia_fit``),
     ``converged`` whether ‖B − Ac‖ ≤ tol·‖B‖ before ``max_iter``.  An
-    all-zero state (idle serve slot) converges immediately to c = 0."""
+    all-zero state (idle serve slot) converges immediately to c = 0.
+
+    ``momentum`` > 0 adds the PIA-with-memory heavy-ball term
+    β·(cₖ − cₖ₋₁) (arXiv:1908.06417) — same fixed point, multiples fewer
+    sweeps on moderately conditioned states.
+
+    The step μ = 1/λ̂max is clamped from below by half the
+    Gershgorin/trace upper bound on λmax (``_gram_lambda_ub``): a
+    12-sweep power iteration under-estimates λmax on clustered spectra,
+    and an unclamped 1/λ̂ then exceeds the Richardson stability bound
+    2/λmax — the iteration diverged *silently*.  Post-clamp μ·λmax < 2
+    always; should any lane still fail to contract (explicit user
+    ``step``, marginal rank-1 states), it freezes at its last finite
+    iterate and reports ``converged=False`` with finite coefficients."""
     dtype = gram.dtype
     mv = lambda c: jnp.einsum("...jk,...k->...j", gram, c)
     lam = _power_iter(mv, vty.shape, dtype, power_iters)
+    lam_safe = jnp.maximum(lam, 0.5 * _gram_lambda_ub(gram))
     if step is None:
-        mu = 1.0 / jnp.maximum(lam, jnp.finfo(dtype).tiny)
+        mu = 1.0 / jnp.maximum(lam_safe, jnp.finfo(dtype).tiny)
     else:
         mu = jnp.full(vty.shape[:-1], step, dtype)
+    beta = jnp.asarray(momentum, dtype)
     gref = jnp.maximum(jnp.linalg.norm(vty, axis=-1), jnp.finfo(dtype).tiny)
     tol = max(float(tol), 25.0 * float(jnp.finfo(dtype).eps))
+    cap = _DIVERGE_FACTOR * gref
     c0 = jnp.zeros_like(vty)
     g0 = jnp.linalg.norm(vty - mv(c0), axis=-1)
 
     def cond_fn(carry):
-        _, gnorm, _, it = carry
-        return (it < max_iter) & jnp.any(gnorm > tol * gref)
+        _, _, gnorm, _, it = carry
+        live = (gnorm > tol * gref) & (gnorm <= cap) & jnp.isfinite(gnorm)
+        return (it < max_iter) & jnp.any(live)
 
     def body_fn(carry):
-        c, gprev, _, it = carry
+        c, cp, gprev, _, it = carry
         g = vty - mv(c)
-        c = c + mu[..., None] * g
-        return c, jnp.linalg.norm(g, axis=-1), gprev, it + 1
+        gn = jnp.linalg.norm(g, axis=-1)
+        ok = (jnp.isfinite(gn) & (gn <= cap))[..., None]
+        upd = c + mu[..., None] * g + beta * (c - cp)
+        return (jnp.where(ok, upd, c), jnp.where(ok, c, cp),
+                gn, gprev, it + 1)
 
-    init = (c0, g0, jnp.full(vty.shape[:-1], jnp.inf, dtype),
+    init = (c0, c0, g0, jnp.full(vty.shape[:-1], jnp.inf, dtype),
             jnp.zeros((), jnp.int32))
-    c, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init)
+    c, _, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init)
     converged = gnorm <= tol * gref
+    # the freeze guard keeps iterates finite unless the INPUT state was
+    # already non-finite; scrub that too — downstream quarantine logic
+    # must be able to trust these coefficients
+    finite = jnp.all(jnp.isfinite(c), axis=-1)
+    c = jnp.where(finite[..., None], c, 0.0)
+    converged = converged & finite
     rho = jnp.where(jnp.isfinite(gprev) & (gprev > 0),
                     gnorm / jnp.where(gprev > 0, gprev, 1.0), 0.0)
-    cond = _condition_from_rate(rho, lam * mu)
+    cond = _condition_from_rate(rho, lam_safe * mu)
     return c, cond, converged, it
 
 
@@ -215,11 +290,24 @@ def lspia_fit_spec(x: jax.Array, y: jax.Array,
     # the same answer eagerly and from accumulated moments
     ridge = jnp.asarray(spec.ridge, x.dtype)
 
-    lam = _lambda_max(xt, w, degree, basis, power_iters) + ridge
+    lam, lam_prev = _lambda_max(xt, w, degree, basis, power_iters,
+                                with_prev=True)
+    lam = lam + ridge
+    # matrix-free step safety: the power estimate is trusted only when its
+    # last two sweeps agree (settled); otherwise — clustered spectrum, or a
+    # start vector nearly orthogonal to the top eigenvector, the cases
+    # where λ̂ under-estimates λmax and μ = 1/λ̂ silently diverges — fall
+    # back to μ = 1/trace, which trace(A) ≥ λmax makes unconditionally
+    # convergent (one extra O(n·m) pass, no Gram formed)
+    tr_ub = (_trace_normal(xt, w, degree, basis)
+             + ridge * jnp.asarray(degree + 1, x.dtype))
+    settled = jnp.abs(lam - (lam_prev + ridge)) <= 0.05 * lam
+    lam_safe = jnp.where(settled, lam, jnp.maximum(lam, tr_ub))
     if step is None:
-        mu = 1.0 / jnp.maximum(lam, jnp.finfo(x.dtype).tiny)
+        mu = 1.0 / jnp.maximum(lam_safe, jnp.finfo(x.dtype).tiny)
     else:
         mu = jnp.full(x.shape[:-1], step, x.dtype)
+    beta = jnp.asarray(opts.momentum, x.dtype)
 
     gref = jnp.linalg.norm(vt_apply(xt, w * y, degree, basis=basis), axis=-1)
     gref = jnp.maximum(gref, jnp.finfo(x.dtype).tiny)
@@ -227,30 +315,42 @@ def lspia_fit_spec(x: jax.Array, y: jax.Array,
     # floor is ~eps·√n of gref — clamp tol there or f32 fits spin to
     # max_iter chasing an unreachable residual
     tol = max(float(tol), 25.0 * float(jnp.finfo(x.dtype).eps))
+    cap = _DIVERGE_FACTOR * gref
     c0 = (jnp.zeros(x.shape[:-1] + (degree + 1,), x.dtype)
           if init is None else init)
 
     def cond_fn(carry):
-        _, gnorm, _, it = carry
-        return (it < max_iter) & jnp.any(gnorm > tol * gref)
+        _, _, gnorm, _, it = carry
+        live = (gnorm > tol * gref) & (gnorm <= cap) & jnp.isfinite(gnorm)
+        return (it < max_iter) & jnp.any(live)
 
     def body_fn(carry):
-        c, gprev, _, it = carry
+        c, cp, gprev, _, it = carry
         f = basis_lib.evaluate(c, xt, basis=basis)
         g = vt_apply(xt, w * (y - f), degree, basis=basis) - ridge * c
-        c = c + mu[..., None] * g
-        return c, jnp.linalg.norm(g, axis=-1), gprev, it + 1
+        gn = jnp.linalg.norm(g, axis=-1)
+        # divergence freeze: a lane whose gradient blew past the cap keeps
+        # its last finite iterate and will report converged=False — never
+        # non-finite coefficients
+        ok = (jnp.isfinite(gn) & (gn <= cap))[..., None]
+        upd = c + mu[..., None] * g + beta * (c - cp)
+        return (jnp.where(ok, upd, c), jnp.where(ok, c, cp),
+                gn, gprev, it + 1)
 
-    init_carry = (c0, jnp.full(x.shape[:-1], jnp.inf, x.dtype),
+    init_carry = (c0, c0,
+                  cap,  # finite "not yet measured" > tol·gref: lane is live
                   jnp.full(x.shape[:-1], jnp.inf, x.dtype),
                   jnp.zeros((), jnp.int32))
-    c, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init_carry)
+    c, _, gnorm, gprev, it = jax.lax.while_loop(cond_fn, body_fn, init_carry)
     converged = gnorm <= tol * gref
+    finite = jnp.all(jnp.isfinite(c), axis=-1)
+    c = jnp.where(finite[..., None], c, 0.0)
+    converged = converged & finite
     # observed per-sweep contraction (last two gradient norms) → κ̂; a
     # single-sweep run has no ratio yet and reports the κ ≈ 1 it implies
     rho = jnp.where(jnp.isfinite(gprev) & (gprev > 0),
                     gnorm / jnp.where(gprev > 0, gprev, 1.0), 0.0)
-    cond = _condition_from_rate(rho, lam * mu)
+    cond = _condition_from_rate(rho, lam_safe * mu)
     # diagnostics keep the no-silent-failure contract of the explicit
     # solvers: condition is the matrix-free κ̂ estimate, and fallback_used
     # doubles as the "iteration did NOT meet tol within max_iter" flag —
@@ -274,6 +374,7 @@ def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
               max_iter: int = 5000,
               power_iters: int = 12,
               step: float | None = None,
+              momentum: float = 0.0,
               init: jax.Array | None = None,
               engine: str = "auto") -> LSPIAFit:
     """Gram-free iterative LSE fit with tolerance/max-iter control.
@@ -290,7 +391,8 @@ def lspia_fit(x: jax.Array, y: jax.Array, degree: int, *,
         lspia=spec_lib.LSPIAOptions(tol=float(tol), max_iter=int(max_iter),
                                     power_iters=int(power_iters),
                                     step=None if step is None
-                                    else float(step)),
+                                    else float(step),
+                                    momentum=float(momentum)),
         numerics=plan_lib.NumericsPolicy(normalize=normalize,
                                          solver="auto"),
         engine=engine)

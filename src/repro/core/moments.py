@@ -62,7 +62,11 @@ class Moments:
         (``core.solve.solve_with_fallback``): it costs O(m³) on the tiny
         sufficient statistics — nothing next to the O(n·m²) accumulation —
         so streaming/serving paths can re-check it every solve.  +inf means
-        singular (fewer distinct x than coefficients, zero-weight state)."""
+        singular (fewer distinct x than coefficients, zero-weight state).
+        The estimate is scale-invariant: a decayed stream whose weighted
+        mass has shrunk toward underflow reports the κ of its SHAPE, so
+        refilled streams return to the fast solver rungs instead of being
+        pinned to the SVD fallback by spurious +inf."""
         from repro.core import solve as solve_lib
         return solve_lib.condition_estimate(self.gram)
 

@@ -164,11 +164,21 @@ def condition_estimate(a: jax.Array) -> jax.Array:
     sufficient-statistic state, so streaming/serving can afford it per
     solve.  Returns +inf for singular (or all-zero) matrices; near-singular
     matrices whose smallest eigenvalue rounds negative report the honest
-    huge-but-finite ratio of magnitudes."""
-    w = jnp.abs(jnp.linalg.eigvalsh(a))
+    huge-but-finite ratio of magnitudes.
+
+    κ is scale-invariant (κ(sA) = κ(A)), so the matrix is normalized by
+    its largest |entry| before the eigensolve: a uniformly tiny Gram — a
+    decayed stream whose total weight has underflowed toward 0 but whose
+    SHAPE is still perfectly conditioned — must report its true κ, not
+    the +inf that eigenvalues under the dtype's tiny would produce (which
+    silently pinned such streams to the SVD fallback forever)."""
+    amax = jnp.max(jnp.abs(a), axis=(-2, -1), keepdims=True)
+    an = a / jnp.where(amax > 0, amax, 1.0)
+    w = jnp.abs(jnp.linalg.eigvalsh(an))
     wmax = jnp.max(w, axis=-1)
     wmin = jnp.min(w, axis=-1)
     inf = jnp.asarray(jnp.inf, wmax.dtype)
+    # an all-zero state stays +inf (wmax == 0 after normalization guard)
     return jnp.where(wmin > 0, wmax / jnp.where(wmin > 0, wmin, 1.0), inf)
 
 

@@ -318,3 +318,102 @@ def current_fit(state: StreamState, *, method: str | None = None,
 
 def current_sse(state: StreamState, poly: fit_lib.Polynomial) -> jax.Array:
     return fit_lib.sse_from_moments(state.moments, poly.coeffs)
+
+
+class AsyncChunkIngestor:
+    """Barrier-free multi-source chunk ingestion into one ``StreamState``.
+
+    A state fed by several chunk sources (sensor shards, per-host log
+    tails) must not wait for the slowest one: because the moments are
+    additive and order-independent, any source's next-in-sequence chunk
+    folds in the moment it arrives — ``offer`` never blocks on another
+    source.  Per-source sequence numbers make delivery idempotent (a
+    retried chunk is acknowledged, never re-accumulated — the fleet
+    journal's contract) and a small reorder buffer absorbs out-of-order
+    arrival within one source.
+
+    The ``staleness`` bound governs *readout*, not ingestion: ``fresh()``
+    is True while no source lags the lead source by more than
+    ``staleness`` chunks, so a consumer can distinguish "current fit over
+    everything" from "one source is a straggler and this fit under-weights
+    it" — without ever stalling the updates themselves.  The same bound
+    ``repro.core.distributed.async_lspia_fit`` applies to shard gradient
+    versions (``LSPIAOptions.staleness``).
+
+    Requires ``decay == 1.0``: order-independence is exactly what
+    exponential forgetting gives up, and barrier-free folding would make
+    the γ-weighting depend on arrival races."""
+
+    def __init__(self, state: StreamState, n_sources: int,
+                 staleness: int = 4, reorder_window: int = 8):
+        if n_sources < 1:
+            raise ValueError(f"n_sources must be >= 1, got {n_sources}")
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
+        if float(state.decay) != 1.0:
+            raise ValueError(
+                "barrier-free folding is order-independent accumulation; "
+                f"decay={float(state.decay)} is order-dependent — use a "
+                "non-forgetting state")
+        self.state = state
+        self.n_sources = n_sources
+        self.staleness = staleness
+        self.reorder_window = reorder_window
+        self.applied = [0] * n_sources          # per-source seq watermark
+        self._held: list[dict[int, tuple]] = [{} for _ in range(n_sources)]
+        self.duplicates = 0
+        self.buffered = 0
+        self.overflowed = 0
+
+    def offer(self, source: int, seq: int, x, y, *,
+              weights=None) -> bool:
+        """Fold chunk ``seq`` (1-based, contiguous per source) of
+        ``source``.  Returns True if the running state advanced (the
+        chunk or any held successors were applied); a duplicate is
+        acknowledged idempotently and an early chunk is held in the
+        reorder buffer."""
+        if not 0 <= source < self.n_sources:
+            raise ValueError(f"source {source} out of range "
+                             f"[0, {self.n_sources})")
+        mark = self.applied[source]
+        if seq <= mark:
+            self.duplicates += 1
+            return False
+        held = self._held[source]
+        if seq > mark + 1:
+            if seq - mark > self.reorder_window or seq in held:
+                self.overflowed += seq not in held
+                self.duplicates += seq in held
+                return False
+            held[seq] = (x, y, weights)
+            self.buffered += 1
+            return False
+        self._apply(x, y, weights)
+        self.applied[source] = seq
+        # drain any successors the reorder buffer was holding
+        while self.applied[source] + 1 in held:
+            nxt = self.applied[source] + 1
+            hx, hy, hw = held.pop(nxt)
+            self._apply(hx, hy, hw)
+            self.applied[source] = nxt
+        return True
+
+    def _apply(self, x, y, weights) -> None:
+        self.state = update(self.state, jnp.asarray(x), jnp.asarray(y),
+                            weights=None if weights is None
+                            else jnp.asarray(weights))
+
+    def lag(self) -> int:
+        """Chunks between the lead source and the most lagging one."""
+        return max(self.applied) - min(self.applied)
+
+    def stale_sources(self) -> list[int]:
+        lead = max(self.applied)
+        return [s for s in range(self.n_sources)
+                if lead - self.applied[s] > self.staleness]
+
+    def fresh(self) -> bool:
+        """True while every source is within the staleness window — the
+        running fit weights all sources near-uniformly.  False flags a
+        straggling source; the state still updates regardless."""
+        return not self.stale_sources()

@@ -65,10 +65,17 @@ def group_capacity(cfg: MoEConfig, group: int) -> int:
 def apply(params, cfg: MoEConfig, x):
     """x: (b, s, d) -> (out, aux_loss). Routing in f32 for stability."""
     b, s, d = x.shape
-    n_tok = b * s
-    sg = min(cfg.group_size, n_tok)
-    assert n_tok % sg == 0, (n_tok, sg)
-    g = n_tok // sg
+    # groups tile each row IN ORDER and never straddle batch rows.  Buffer
+    # slots come from a positional cumsum, so a token's slot depends only on
+    # tokens BEFORE it in its own group: row-local groups make capacity
+    # dropping a per-row prefix property — prefill over s-1 tokens drops
+    # exactly the tokens train drops in its first s-1 positions, instead of
+    # batch-row i's drops shifting with row i-1's length (the old flat
+    # (b·s) grouping broke prefill/train consistency whenever an expert ran
+    # near capacity).
+    sg = min(cfg.group_size, s)
+    assert s % sg == 0, (s, sg)
+    g = b * (s // sg)
     cap = group_capacity(cfg, sg)
     from repro.sharding.rules import constrain
     xt = constrain(x.reshape(g, sg, d), "batch", None, None)
@@ -76,7 +83,17 @@ def apply(params, cfg: MoEConfig, x):
     logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
                         params["router"].astype(jnp.float32))
     probs = jax.nn.softmax(logits, axis=-1)                   # (g,s,e)
-    gate_vals, gate_idx = jax.lax.top_k(probs, cfg.top_k)     # (g,s,k)
+    # deterministic near-tie break: SELECT on a coarse quantization of the
+    # probabilities, then gather the EXACT probabilities for the gates.
+    # Routing is a discrete decision riding on continuous inputs: prefill
+    # and decode reach this point through different kernel schedules whose
+    # bf16 rounding can differ by ~1e-2 under global x64 — enough to swap
+    # two near-tied experts between the paths.  Quantizing to 1/16
+    # collapses near-ties into exact ties, and ``lax.top_k`` breaks exact
+    # ties to the lower expert index identically on every path.
+    qsel = jnp.floor(probs * 16.0)
+    _, gate_idx = jax.lax.top_k(qsel, cfg.top_k)              # (g,s,k)
+    gate_vals = jnp.take_along_axis(probs, gate_idx, axis=-1)
     # renormalize the selected gates (dbrx/mixtral convention)
     gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
 

@@ -288,7 +288,8 @@ def _spec_solve_from_state(state, spec, pool_degree: int):
         opts = spec.lspia
         coeffs, cond, conv, _ = lspia_lib.lspia_solve_moments(
             ms.gram, ms.vty, tol=opts.tol, max_iter=opts.max_iter,
-            power_iters=opts.power_iters, step=opts.step)
+            power_iters=opts.power_iters, step=opts.step,
+            momentum=opts.momentum)
         fb = ~conv
     else:
         rung = spec.numerics.solver

@@ -153,6 +153,39 @@ class FleetRequest(fe.FitRequest):
         return self.done_tick - self.admit_tick
 
 
+@dataclasses.dataclass
+class AsyncFitHandle:
+    """Parent handle for one sharded async-LSPIA submission
+    (``FitFleet.submit_async_lspia``).
+
+    Each shard is an ordinary child ``FleetRequest`` riding the existing
+    journal machinery (per-shard chunk sequence numbers, idempotent
+    delivery, snapshot replay); the dispatcher harvests a shard's final
+    journal snapshot the moment its ingest completes — no ``Solve``
+    round-trip — and re-solves the merged moment state with moment-space
+    LSPIA after EVERY harvest.  ``coeffs`` therefore progresses while a
+    chaos-stalled shard's contribution is still missing
+    (``updates_while_partial`` counts those partial re-solves); ``done``
+    only once every shard has landed, so the final answer is exact."""
+
+    uid: int
+    spec: Any
+    n_shards: int
+    shard_uids: list[int] = dataclasses.field(default_factory=list)
+    harvested: int = 0
+    updates: int = 0
+    updates_while_partial: int = 0
+    coeffs: np.ndarray | None = None
+    sse: float | None = None
+    r: float | None = None
+    count: float | None = None
+    condition: float | None = None
+    converged: bool = False
+    failed: str | None = None
+    done: bool = False
+    done_tick: int = -1
+
+
 # ------------------------------------------------------------------- worker
 
 
@@ -374,8 +407,13 @@ class FitFleet:
         self.stats = {"completed": 0, "shed": 0, "degraded": 0,
                       "failed": 0, "replays": 0, "hedges": 0,
                       "resends": 0, "poisoned": 0, "worker_deaths": 0,
-                      "revivals": 0}
+                      "revivals": 0, "async_harvests": 0,
+                      "async_updates": 0}
         self.latencies: list[int] = []
+        # sharded async-LSPIA parents: child uid -> (handle, shard index),
+        # and the per-parent harvested shard snapshots
+        self._async_children: dict[int, tuple[AsyncFitHandle, int]] = {}
+        self._async_snaps: dict[int, dict[int, dict]] = {}
 
     # ------------------------------------------------------------ admission
     @property
@@ -412,6 +450,58 @@ class FitFleet:
             self.stats["degraded"] += 1
         self._queue.append(req)
         return req
+
+    def submit_async_lspia(self, x, y, *, spec=None,
+                           n_shards: int = 2) -> AsyncFitHandle:
+        """Queue one series as ``n_shards`` barrier-free shard ingests
+        (asynchronous LSPIA, arXiv:2211.06556).
+
+        Each shard is an ordinary child request — its chunks carry the
+        journal's per-shard sequence numbers, so retry/replay/idempotence
+        all work unchanged — but the dispatcher intercepts the completed
+        ingest journal instead of sending a ``Solve``: the shard's final
+        moment snapshot is harvested, merged with the other shards'
+        (moments are additive), and the merged state is re-solved with
+        moment-space LSPIA (momentum included) after every harvest.  A
+        chaos-stalled worker therefore delays only its own shard's
+        contribution: the handle's ``coeffs`` keep updating from the
+        shards already in hand, and the exact answer lands when the
+        straggler does.  Requires a ``method="lspia"`` spec (default:
+        the pool spec switched to LSPIA) and a non-forgetting pool
+        (``decay == 1.0`` — shard chunks interleave arbitrarily)."""
+        if self.spec.decay != 1.0:
+            raise ValueError(
+                "sharded async ingest has no global age order: the pool "
+                f"must not decay (decay={self.spec.decay})")
+        if spec is None:
+            spec = dataclasses.replace(self.pool_specs.fixed,
+                                       method="lspia")
+        rspec = fe.resolve_request_spec(self.pool_specs, None, spec)
+        if rspec.method != "lspia":
+            raise ValueError(f"submit_async_lspia needs method='lspia', "
+                             f"got {rspec.method!r}")
+        if rspec.is_search:
+            raise ValueError("async LSPIA serves fixed degrees; use "
+                             "degree='auto' on plain submit")
+        x, y = fe.validate_series(x, y, rspec)
+        if x.shape[0] < n_shards:
+            raise ValueError(f"{x.shape[0]} points cannot fill "
+                             f"{n_shards} shards")
+        handle = AsyncFitHandle(uid=self._uid, spec=rspec,
+                                n_shards=n_shards)
+        self._uid += 1
+        bounds = np.linspace(0, x.shape[0], n_shards + 1).astype(int)
+        for s in range(n_shards):
+            sl = slice(bounds[s], bounds[s + 1])
+            child = self.submit(x[sl], y[sl], spec=rspec)
+            handle.shard_uids.append(child.uid)
+            if child.shed:
+                handle.failed = "shed"
+                handle.done = True
+                return handle
+            self._async_children[child.uid] = (handle, s)
+        self._async_snaps[handle.uid] = {}
+        return handle
 
     def warmup(self) -> int:
         """Compile the default executables (ingest update + fixed solve +
@@ -484,6 +574,16 @@ class FitFleet:
         """Advance one assignment: next chunk, or the solve."""
         req = fl.req
         if asg.acked >= fl.n_chunks:
+            if req.uid in self._async_children:
+                # async-LSPIA shard whose journal lags its ack watermark
+                # (sparse snapshots): re-ask for the last chunk — the
+                # worker's duplicate-ack carries its latest snapshot and
+                # never re-accumulates, so the journal catches up
+                x, y, w_ = fl.chunks[-1]
+                self._send(asg.worker, Ingest(req.uid, fl.n_chunks, x, y,
+                                              w_, req.spec,
+                                              want_snapshot=True))
+                return
             if not asg.solving:
                 asg.solving = True
                 self._send(asg.worker, Solve(req.uid, req.spec))
@@ -531,6 +631,15 @@ class FitFleet:
         fl.req.done_tick = self.tick
         self._flights.pop(fl.req.uid)
         self.stats["failed"] += 1
+        entry = self._async_children.pop(fl.req.uid, None)
+        if entry is not None:
+            # a lost shard makes the parent's exact answer unreachable:
+            # surface the failure, keep the last partial coefficients
+            handle, _ = entry
+            handle.failed = reason
+            handle.done = True
+            handle.done_tick = self.tick
+            self._async_snaps.pop(handle.uid, None)
 
     # ------------------------------------------------------------ the loop
     def step(self) -> None:
@@ -631,7 +740,76 @@ class FitFleet:
         if (ack.seq > fl.journal_seq and ack.snapshot is not None):
             fl.journal_seq = ack.seq
             fl.journal_snap = ack.snapshot
+        entry = self._async_children.get(fl.req.uid)
+        if entry is not None and fl.journal_seq >= fl.n_chunks:
+            # async-LSPIA shard: the completed ingest journal IS the
+            # contribution — harvest it, no Solve round-trip
+            self._harvest_shard(fl, *entry, tick)
+            return
         self._send_next(fl, asg)
+
+    # ------------------------------------------------- async-LSPIA shards
+    def _accum_spec(self, rspec):
+        """Dispatcher-side copy of ``FleetWorker._accum_spec``: snapshots
+        accumulate at the pool degree."""
+        if rspec.max_degree == self.spec.max_degree and not rspec.is_search:
+            return rspec
+        return dataclasses.replace(rspec, degree=self.spec.max_degree)
+
+    def _harvest_shard(self, fl: _Flight, handle: AsyncFitHandle,
+                       shard: int, tick: int) -> None:
+        req = fl.req
+        req.done = True
+        req.done_tick = tick
+        for asg in list(fl.assignments):
+            self._drop_assignment(fl, asg)   # Cancel frees worker state
+        self._flights.pop(req.uid)
+        self._async_children.pop(req.uid, None)
+        snaps = self._async_snaps.get(handle.uid)
+        if snaps is None or handle.done:
+            return
+        if shard not in snaps:
+            snaps[shard] = fl.journal_snap
+            handle.harvested += 1
+            self.stats["async_harvests"] += 1
+        self._async_resolve(handle, tick)
+
+    def _async_resolve(self, handle: AsyncFitHandle, tick: int) -> None:
+        """Merge the harvested shard snapshots (moments are additive) and
+        re-solve with moment-space LSPIA — partial shards give a partial
+        (progressing) answer, the full set the exact one."""
+        snaps = self._async_snaps.get(handle.uid)
+        if not snaps:
+            return
+        parts = list(snaps.values())
+        merged = {k: sum(np.asarray(p[k], np.float64) for p in parts)
+                  .astype(parts[0][k].dtype)
+                  for k in ("gram", "vty", "yty", "count", "weight_sum")}
+        merged["decay"] = parts[0]["decay"]
+        st = streaming.StreamState.restore(
+            merged, spec=self._accum_spec(handle.spec))
+        solved = tuple(np.asarray(a)
+                       for a in self._solve(st, handle.spec))
+        coeffs, sse, r, count, cond, fb = solved
+        if not np.all(np.isfinite(coeffs)):
+            return      # partial state degenerate: keep the last answer
+        d = int(handle.spec.degree)
+        handle.coeffs = coeffs[:d + 1].copy()
+        handle.sse = float(sse)
+        handle.r = float(r)
+        handle.count = float(count)
+        handle.condition = float(cond)
+        handle.converged = not bool(fb)
+        handle.updates += 1
+        self.stats["async_updates"] += 1
+        if handle.harvested < handle.n_shards:
+            handle.updates_while_partial += 1
+        else:
+            handle.done = True
+            handle.done_tick = tick
+            self.fits_done += 1
+            self.stats["completed"] += 1
+            self._async_snaps.pop(handle.uid, None)
 
     def _valid(self, req: FleetRequest) -> bool:
         return (req.coeffs is not None

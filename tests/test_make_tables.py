@@ -1,0 +1,115 @@
+"""Unit tests for the perf-trajectory table loader in benchmarks/make_tables.
+
+Covers the BENCH filename grammar (``BENCH_<rev>[_<mode>].json``), per-rev
+dedupe (newest timestamp wins), graceful handling of unknown / corrupt /
+foreign files, and hash-prefix rev ordering against git history.
+"""
+from __future__ import annotations
+
+import importlib.util
+import json
+import os
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+_spec = importlib.util.spec_from_file_location(
+    "make_tables", os.path.join(_ROOT, "benchmarks", "make_tables.py"))
+mt = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(mt)
+
+
+def _write(d, name, **payload):
+    payload.setdefault("rows", [])
+    with open(os.path.join(d, name), "w") as f:
+        json.dump(payload, f)
+
+
+@pytest.fixture()
+def bench_dir(tmp_path, monkeypatch):
+    # pin history so ordering is deterministic and independent of the repo
+    monkeypatch.setattr(mt, "_git_rev_order",
+                        lambda: {"aaa1111": 0, "bbb2222": 1, "ccc3333": 2})
+    return str(tmp_path)
+
+
+def test_filename_grammar(bench_dir):
+    _write(bench_dir, "BENCH_aaa1111_smoke.json", rev="aaa1111", timestamp="t1")
+    _write(bench_dir, "BENCH_bbb2222.json", rev="bbb2222", timestamp="t2")
+    _write(bench_dir, "BENCH_ccc3333_quick.json", rev="ccc3333", timestamp="t3")
+    # rev containing an underscore still parses (mode matched from known set)
+    _write(bench_dir, "BENCH_no_rev_smoke.json", timestamp="t0")
+    assert [d["rev"] for d in mt.load_trajectory("smoke", bench_dir)] == \
+        ["aaa1111", "no_rev"]
+    assert [d["rev"] for d in mt.load_trajectory("full", bench_dir)] == \
+        ["bbb2222"]
+    assert [d["rev"] for d in mt.load_trajectory("quick", bench_dir)] == \
+        ["ccc3333"]
+
+
+def test_per_rev_dedupe_newest_timestamp_wins(bench_dir):
+    # two files claim rev aaa1111 for the same mode (embedded rev overrides
+    # the filename): only the newer timestamp survives
+    _write(bench_dir, "BENCH_aaa1111_smoke.json", rev="aaa1111",
+           timestamp="2026-01-01T00:00:00", marker="old")
+    _write(bench_dir, "BENCH_zzz9999_smoke.json", rev="aaa1111",
+           timestamp="2026-02-01T00:00:00", marker="new")
+    runs = mt.load_trajectory("smoke", bench_dir)
+    assert len(runs) == 1
+    assert runs[0]["marker"] == "new"
+
+
+def test_mode_isolation(bench_dir):
+    # a smoke file never leaks into the full/quick tables and vice versa
+    _write(bench_dir, "BENCH_aaa1111_smoke.json", rev="aaa1111", timestamp="t")
+    _write(bench_dir, "BENCH_aaa1111_quick.json", rev="aaa1111", timestamp="t")
+    _write(bench_dir, "BENCH_aaa1111.json", rev="aaa1111", timestamp="t")
+    for mode in ("smoke", "quick", "full"):
+        assert len(mt.load_trajectory(mode, bench_dir)) == 1
+
+
+def test_unknown_revs_sort_after_history(bench_dir):
+    _write(bench_dir, "BENCH_bbb2222_smoke.json", rev="bbb2222",
+           timestamp="t5")
+    _write(bench_dir, "BENCH_feature1_smoke.json", rev="feature1",
+           timestamp="t1")
+    _write(bench_dir, "BENCH_feature2_smoke.json", rev="feature2",
+           timestamp="t2")
+    revs = [d["rev"] for d in mt.load_trajectory("smoke", bench_dir)]
+    # known rev first, then unknowns in timestamp order — no KeyError
+    assert revs == ["bbb2222", "feature1", "feature2"]
+
+
+def test_hash_prefix_matching(bench_dir):
+    # the bench writer abbreviated longer than `git log --format=%h` did
+    _write(bench_dir, "BENCH_bbb2222abcd_smoke.json", rev="bbb2222abcd",
+           timestamp="t1")
+    _write(bench_dir, "BENCH_aaa1_smoke.json", rev="aaa1", timestamp="t2")
+    revs = [d["rev"] for d in mt.load_trajectory("smoke", bench_dir)]
+    # aaa1 is a prefix of aaa1111 (pos 0); bbb2222abcd extends bbb2222 (pos 1)
+    assert revs == ["aaa1", "bbb2222abcd"]
+    assert mt._rev_position("aaa1", {"aaa1111": 0}) == 0
+    assert mt._rev_position("aaa1111ff", {"aaa1111": 0}) == 0
+    assert mt._rev_position("dddd", {"aaa1111": 0}) == 1
+
+
+def test_corrupt_and_foreign_files_skipped(bench_dir):
+    _write(bench_dir, "BENCH_aaa1111_smoke.json", rev="aaa1111", timestamp="t")
+    with open(os.path.join(bench_dir, "BENCH_bbb2222_smoke.json"), "w") as f:
+        f.write("{truncated")
+    _write(bench_dir, "baseline.json", rev="x")     # not a BENCH file
+    _write(bench_dir, "BENCHMARK_note.txt.json", rev="x")  # wrong prefix
+    runs = mt.load_trajectory("smoke", bench_dir)
+    assert [d["rev"] for d in runs] == ["aaa1111"]
+
+
+def test_trajectory_table_renders_deduped_runs(bench_dir):
+    _write(bench_dir, "BENCH_aaa1111_smoke.json", rev="aaa1111",
+           timestamp="t1", rows=[{"name": "fit", "us_per_call": 12.5,
+                                  "mpts_per_s": 3.0, "roofline_frac": 0.5}])
+    _write(bench_dir, "BENCH_bbb2222_smoke.json", rev="bbb2222",
+           timestamp="t2", rows=[{"name": "fit", "us_per_call": 10.0,
+                                  "mpts_per_s": 4.0, "roofline_frac": 0.6}])
+    table = mt.trajectory_table(mt.load_trajectory("smoke", bench_dir))
+    assert "| fit | 12.5 | 10.0 |" in table
+    assert "4.00" in table and "60.00%" in table
