@@ -84,7 +84,8 @@ BW: perfgate.Bandwidth | None = None   # measured once per run (main())
 GATED_ROWS = ("moments_jnp", "moments_blocked", "moments_packed",
               "moments_packed_db", "fused_report", "streaming_update",
               "batched_fits", "select_sweep", "api_dispatch", "solve_ge",
-              "serve_fit", "serve_fleet", "lspia_momentum", "lspia_async")
+              "serve_fit", "serve_fleet", "lspia_momentum", "lspia_async",
+              "obs_overhead")
 
 
 def _injected_slowdown(name: str) -> float | None:
@@ -635,6 +636,74 @@ def bench_serve_fleet(quick: bool):
         f"replays={faulted.stats['replays']};lost=0", n_fits=1)
 
 
+def bench_obs_overhead(quick: bool):
+    """The observability tax (PR-9): the serve_fit ragged trace served
+    twice by the same engine config — once with the default ``NULL_OBS``
+    recorders, once with ``Observability.on()`` (live metric registry +
+    trace spans on every request).  All instrumentation is host-side
+    python outside the jitted executables, so the measured gap is pure
+    recording cost.  derived = overhead %; --smoke asserts it stays
+    under 5% (the "observability is free" invariant the README claims).
+    The two paths are timed in interleaved reps (min-of-reps each) so a
+    host-load window skews both sides, not one."""
+    from repro import obs as obs_lib
+    from repro.serve import FitServeConfig, FitServeEngine
+
+    n_req = 32 if SMOKE else 100 if quick else 400
+    # recording cost is fixed per request, so the denominator must be a
+    # *representative* request — multi-step series like the full-run
+    # serve trace, not the smoke-tier 8-point degenerate, where the
+    # percentage would measure dispatch-bound pathology instead
+    lo, hi = (1024, 8192) if SMOKE else (1024, 16384)
+    rng = np.random.default_rng(11)
+    series = []
+    for _ in range(n_req):
+        n = int(np.exp(rng.uniform(np.log(lo), np.log(hi))))
+        x = rng.uniform(-2, 2, n).astype(np.float32)
+        y = (0.3 * x**3 - 0.5 * x + 1.0
+             + rng.normal(0, 0.1, n)).astype(np.float32)
+        series.append((x, y))
+
+    def build(obs):
+        engine = FitServeEngine(FitServeConfig(
+            degree=3, n_slots=8, buckets=(256, 2048), ridge=1e-9), obs=obs)
+        engine.warmup()
+        return engine
+
+    def one_rep(engine):
+        reqs = [engine.submit(x, y) for x, y in series]
+        t0 = time.perf_counter()
+        engine.run()
+        dt = time.perf_counter() - t0
+        assert all(r.done for r in reqs)
+        return dt
+
+    eng_null = build(None)
+    obs = obs_lib.Observability.on()
+    eng_on = build(obs)
+    reps = 7 if SMOKE else 5
+    dt_null = dt_on = float("inf")
+    for _ in range(reps):
+        dt_null = min(dt_null, one_rep(eng_null))
+        dt_on = min(dt_on, one_rep(eng_on))
+    # the enabled side really recorded: full trace chains + live metrics
+    assert obs.metrics.counter("completed").value >= n_req * reps
+    assert obs.metrics.histogram("fit_latency_steps").count >= n_req * reps
+    assert any(e["name"] == "respond" for e in obs.tracer.events)
+    ratio = dt_on / dt_null
+    us = Timed(dt_on / n_req * 1e6, {"stat": "min_of_reps", "reps": reps,
+                                     "iters": n_req, "warmup": 1})
+    row("obs_overhead", us,
+        f"overhead={(ratio - 1) * 100:+.2f}%;"
+        f"null_us={dt_null / n_req * 1e6:.1f};"
+        f"events={len(obs.tracer.events)};n_req={n_req}", n_fits=1)
+    if SMOKE:
+        assert ratio < 1.05, (
+            f"obs-enabled serving is {ratio:.3f}x the null path — the "
+            f"<=5% observability budget is breached "
+            f"({dt_on * 1e3:.1f}ms vs {dt_null * 1e3:.1f}ms)")
+
+
 def bench_e2e_train(quick: bool):
     """Smoke-scale end-to-end train step (framework overhead check).
     derived = tokens/s on this CPU host."""
@@ -672,7 +741,8 @@ def bench_e2e_train(quick: bool):
 BENCHES = [bench_accuracy, bench_speedup, bench_kernel, bench_kernel_packed,
            bench_fused_report, bench_solver_stack, bench_select,
            bench_streaming, bench_batched_fits, bench_api_dispatch,
-           bench_serve_fit, bench_serve_fleet, bench_e2e_train]
+           bench_serve_fit, bench_serve_fleet, bench_obs_overhead,
+           bench_e2e_train]
 
 
 def _git_rev() -> str:

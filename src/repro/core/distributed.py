@@ -545,6 +545,7 @@ class AsyncLSPIAFit:
     grad_norm: float
     step: float
     stats: dict
+    metrics: object | None = None   # the run's obs.MetricsRegistry
 
 
 def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
@@ -554,7 +555,8 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
                     retry_ticks: int = 8,
                     restart_ticks: int = 8,
                     straggler_every: int = 4,
-                    straggler_threshold: float = 3.0) -> AsyncLSPIAFit:
+                    straggler_threshold: float = 3.0,
+                    registry=None) -> AsyncLSPIAFit:
     """Barrier-free distributed LSPIA on the virtual-tick mailbox substrate.
 
     ``spec`` must be ``FitSpec(method="lspia")``; its ``LSPIAOptions``
@@ -667,12 +669,17 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
     died_at: dict[int, int] = {}
     gnorm = gref
     gprev = float("inf")
-    stats = {"n_shards": n_shards, "staleness": staleness,
-             "updates": 0, "updates_during_stall": 0,
-             "stale_rejected": 0, "poisoned": 0, "resends": 0,
-             "duplicates": 0, "crashes": 0, "freezes": 0,
-             "straggler_verdicts": [], "reslice": None,
-             "sweeps_per_shard": None}
+    # counters live in an obs registry (caller-supplied to share one
+    # scrape surface, else private); the returned ``stats`` dict is a
+    # view over it plus the non-counter records below
+    from repro.obs import metrics as obs_metrics
+    reg = registry if registry is not None else obs_metrics.MetricsRegistry()
+    ctr = {k: reg.counter(k) for k in
+           ("updates", "updates_during_stall", "stale_rejected",
+            "poisoned", "resends", "duplicates", "crashes", "freezes")}
+    lag_gauge = reg.gauge("staleness_lag")   # hwm = worst in-window lag
+    straggler_verdicts: list = []
+    reslice = None
     converged = False
     tick = 0
 
@@ -690,7 +697,7 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
             wk.begin_tick(tick)
             if not wk.alive and i not in died_at:
                 died_at[i] = tick
-                stats["crashes"] += 1
+                ctr["crashes"].inc()
             if not wk.alive and tick - died_at.get(i, tick) >= \
                     restart_ticks:
                 wk.revive()
@@ -718,15 +725,15 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
             i = rep.shard
             out = outstanding[i]
             if out is None or rep.seq != out[0]:
-                stats["duplicates"] += 1
+                ctr["duplicates"].inc()
                 continue
             outstanding[i] = None
             last_reply[i] = tick
             if not np.all(np.isfinite(rep.delta)):
-                stats["poisoned"] += 1      # chaos poison: recompute
+                ctr["poisoned"].inc()       # chaos poison: recompute
                 continue
             if version - rep.version > staleness:
-                stats["stale_rejected"] += 1    # outside the bounded-
+                ctr["stale_rejected"].inc()     # outside the bounded-
                 continue                        # delay window: recompute
             latest[i] = np.asarray(rep.delta, np.float64)
             latest_version[i] = rep.version
@@ -737,22 +744,27 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
         in_window = [i for i in range(n_shards)
                      if latest[i] is not None
                      and version - latest_version[i] <= staleness]
+        # worst version lag among contributing shards (hwm = worst seen):
+        # the live "how stale is the slowest voice in the gradient" gauge
+        if in_window:
+            lag_gauge.set(max(version - latest_version[i]
+                              for i in in_window))
         if fresh and in_window:
             gsum = sum(latest[i] for i in in_window) - ridge * c
             gn = float(np.linalg.norm(gsum))
             if not np.isfinite(gn) or gn > cap:
-                stats["freezes"] += 1   # divergence freeze, as eager
+                ctr["freezes"].inc()    # divergence freeze, as eager
             else:
                 upd = c + mu * gsum + beta * (c - c_prev)
                 c_prev, c = c, upd
                 version += 1
                 gprev, gnorm = gnorm, gn
-                stats["updates"] += 1
+                ctr["updates"].inc()
                 if stalled_now:
-                    stats["updates_during_stall"] += 1
+                    ctr["updates_during_stall"].inc()
         # convergence: small combined gradient AND every shard current
         if (len(in_window) == n_shards and gnorm <= tol * gref
-                and stats["updates"] > 0):
+                and ctr["updates"].value > 0):
             converged = True
             break
         # refill / retry sweeps
@@ -761,7 +773,7 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
             if out is None:
                 send_sweep(i)
             elif tick - out[1] > retry_ticks:
-                stats["resends"] += 1   # dropped/lost sweep: resend with
+                ctr["resends"].inc()    # dropped/lost sweep: resend with
                 send_sweep(i)           # a fresh seq (old reply ignored)
         # straggler verdicts from the paper's own LSE on reply gaps
         if tick % straggler_every == 0:
@@ -771,23 +783,26 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
                                   now=float(tick))
             v = detector.verdict(tick // straggler_every, now=float(tick))
             if v["stragglers"]:
-                stats["straggler_verdicts"].append(
+                straggler_verdicts.append(
                     (tick, tuple(v["stragglers"])))
                 try:
-                    stats["reslice"] = straggler_lib.plan_reslice(
+                    reslice = straggler_lib.plan_reslice(
                         detector.steptime, tick // straggler_every,
                         int(x.shape[0]), min_share=1).shares
                 except ValueError:
                     pass
 
-    if stats["updates"] >= 2 and gprev > 0 and np.isfinite(gprev):
+    if ctr["updates"].value >= 2 and gprev > 0 and np.isfinite(gprev):
         rho = gnorm / gprev
     else:
         rho = 0.0
     lam_mu = lam_safe * mu
     cond = (float("inf") if rho >= 1.0
             else max(lam_mu / (1.0 - rho), 1.0))
-    stats["sweeps_per_shard"] = [wk.inner.sweeps_done for wk in workers]
+    stats = {"n_shards": n_shards, "staleness": staleness,
+             **{k: c.value for k, c in ctr.items()},
+             "straggler_verdicts": straggler_verdicts, "reslice": reslice,
+             "sweeps_per_shard": [wk.inner.sweeps_done for wk in workers]}
     dtype = x.dtype
     diag = fit_lib.FitDiagnostics(
         condition=jnp.asarray(cond, dtype),
@@ -799,4 +814,4 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
                               diagnostics=diag)
     return AsyncLSPIAFit(poly=poly, iterations=version, ticks=tick,
                          converged=converged, grad_norm=gnorm, step=mu,
-                         stats=stats)
+                         stats=stats, metrics=reg)

@@ -345,7 +345,8 @@ class AsyncChunkIngestor:
     the γ-weighting depend on arrival races."""
 
     def __init__(self, state: StreamState, n_sources: int,
-                 staleness: int = 4, reorder_window: int = 8):
+                 staleness: int = 4, reorder_window: int = 8,
+                 metrics=None):
         if n_sources < 1:
             raise ValueError(f"n_sources must be >= 1, got {n_sources}")
         if staleness < 0:
@@ -364,6 +365,17 @@ class AsyncChunkIngestor:
         self.duplicates = 0
         self.buffered = 0
         self.overflowed = 0
+        # optional obs.MetricsRegistry: mirrors the attribute counters
+        # and keeps a per-readout source-lag gauge (hwm = worst lag seen)
+        if metrics is None:
+            from repro.obs.metrics import NULL_REGISTRY
+            metrics = NULL_REGISTRY
+        self.metrics = metrics
+        self._m_applied = metrics.counter("chunks_applied")
+        self._m_duplicates = metrics.counter("chunks_duplicate")
+        self._m_buffered = metrics.counter("chunks_buffered")
+        self._m_overflowed = metrics.counter("chunks_overflowed")
+        self._g_lag = metrics.gauge("source_lag")
 
     def offer(self, source: int, seq: int, x, y, *,
               weights=None) -> bool:
@@ -378,24 +390,31 @@ class AsyncChunkIngestor:
         mark = self.applied[source]
         if seq <= mark:
             self.duplicates += 1
+            self._m_duplicates.inc()
             return False
         held = self._held[source]
         if seq > mark + 1:
             if seq - mark > self.reorder_window or seq in held:
                 self.overflowed += seq not in held
                 self.duplicates += seq in held
+                (self._m_overflowed if seq not in held
+                 else self._m_duplicates).inc()
                 return False
             held[seq] = (x, y, weights)
             self.buffered += 1
+            self._m_buffered.inc()
             return False
         self._apply(x, y, weights)
+        self._m_applied.inc()
         self.applied[source] = seq
         # drain any successors the reorder buffer was holding
         while self.applied[source] + 1 in held:
             nxt = self.applied[source] + 1
             hx, hy, hw = held.pop(nxt)
             self._apply(hx, hy, hw)
+            self._m_applied.inc()
             self.applied[source] = nxt
+        self._g_lag.set(self.lag())
         return True
 
     def _apply(self, x, y, weights) -> None:

@@ -25,12 +25,14 @@ import numpy as np
 
 
 def serve_fits(args) -> None:
+    from repro import obs as obs_lib
     from repro.serve import FitServeConfig, FitServeEngine
 
     cfg = FitServeConfig(degree=args.degree, n_slots=args.slots,
                          buckets=tuple(args.buckets), ridge=1e-9,
                          engine=args.engine)
-    engine = FitServeEngine(cfg)
+    obs = obs_lib.Observability.on() if args.obs else obs_lib.NULL_OBS
+    engine = FitServeEngine(cfg, obs=obs)
 
     rng = np.random.default_rng(7)
     coef = rng.normal(0, 1, args.degree + 1)
@@ -60,12 +62,26 @@ def serve_fits(args) -> None:
               f"coeffs={np.round(r.coeffs, 3)}")
     assert done == len(reqs)
     assert recompiles == 0, f"{recompiles} recompiles during steady state"
+    if args.obs:
+        snap = obs.metrics.snapshot()
+        lat = obs.metrics.histogram("fit_latency_steps")
+        print(f"[serve-fits] obs: submitted="
+              f"{snap['counters']['submitted']} completed="
+              f"{snap['counters']['completed']} latency p50/p99 = "
+              f"{lat.quantile(0.5):.0f}/{lat.quantile(0.99):.0f} steps")
+        print(obs.metrics.render_prometheus(), end="")
 
 
 def serve_fleet(args) -> None:
     """Drive the fault-tolerant fleet twice — fault-free, then under the
     requested chaos schedule — and report recovery numbers (and, with
-    ``--assert-parity``, enforce the bitwise chaos-parity invariant)."""
+    ``--assert-parity``, enforce the bitwise chaos-parity invariant).
+
+    ``--obs`` turns on the observability layer for the chaos run: trace
+    spans on the virtual tick clock, a live summary every ``--obs-every``
+    ticks (mid-run sketch quantiles + SLO breach forecast), event-log
+    invariant assertions, JSONL + Chrome-trace artifacts under
+    ``--obs-dir``, and a Prometheus text exposition."""
     from repro.runtime.chaos import ChaosSchedule
     from repro.serve import FitServeConfig, FleetConfig, FitFleet
 
@@ -79,14 +95,25 @@ def serve_fleet(args) -> None:
              + rng.normal(0, 0.1, n)).astype(np.float32)
         series.append((x, y))
 
-    def run(chaos):
+    def run(chaos, obs=False):
         cfg = FleetConfig(fit=FitServeConfig(degree=args.degree),
                           n_workers=args.workers, chaos=chaos,
-                          straggler_threshold=2.0)
+                          straggler_threshold=2.0, trace=obs,
+                          slo_p99=args.slo_p99 if obs else None)
         fleet = FitFleet(cfg)
         t0 = time.perf_counter()
         reqs = [fleet.submit(x, y) for x, y in series]
-        fleet.run(max_ticks=50_000)
+        if obs:
+            for _ in range(50_000):
+                if not fleet.pending:
+                    break
+                fleet.step()
+                if fleet.tick % args.obs_every == 0:
+                    _obs_live_line(fleet)
+            else:
+                raise RuntimeError(f"{fleet.pending} requests pending")
+        else:
+            fleet.run(max_ticks=50_000)
         dt = time.perf_counter() - t0
         return fleet, reqs, dt
 
@@ -98,7 +125,7 @@ def serve_fleet(args) -> None:
 
     chaos = ChaosSchedule.parse(args.chaos, args.chaos_seed, args.workers,
                                 horizon=args.chaos_horizon)
-    fleet, reqs, dt = run(chaos)
+    fleet, reqs, dt = run(chaos, obs=args.obs)
     s, q = fleet.stats, fleet.latency_quantiles()
     lost = [r.uid for r in reqs if not r.done or r.failed]
     print(f"[fleet] chaos '{args.chaos}' (seed {args.chaos_seed}): "
@@ -106,9 +133,13 @@ def serve_fleet(args) -> None:
           f"{fleet.tick} ticks (p50 {q['p50']:.0f} / p99 {q['p99']:.0f})")
     print(f"[fleet]   lost={len(lost)} deaths={s['worker_deaths']} "
           f"revivals={s['revivals']} replays={s['replays']} "
-          f"hedges={s['hedges']} resends={s['resends']} "
-          f"poisoned={s['poisoned']} shed={s['shed']}")
+          f"hedges={s['hedges']} ({s['hedge_wins']}W/{s['hedge_losses']}L) "
+          f"resends={s['resends']} poisoned={s['poisoned']} "
+          f"shed={s['shed']} queue_hwm="
+          f"{fleet.metrics.gauge('queue_depth').hwm:.0f}")
     assert not lost, f"lost requests: {lost}"
+    if args.obs:
+        _obs_finish(args, fleet, reqs)
     if args.assert_parity:
         for b, c in zip(base, reqs):
             assert c.count == b.count, (c.uid, c.count, b.count)
@@ -116,6 +147,49 @@ def serve_fleet(args) -> None:
                                           np.asarray(b.coeffs))
         print(f"[fleet] parity OK: {len(reqs)} requests bit-identical "
               "to the fault-free run")
+
+
+def _obs_live_line(fleet) -> None:
+    q = fleet.latency_quantiles()
+    line = (f"[obs] tick {fleet.tick:>5}  completed="
+            f"{fleet.stats['completed']:<4} pending={fleet.pending:<4} "
+            f"p50/p99={q['p50']:.0f}/{q['p99']:.0f}")
+    for ref, rep in fleet.slo.report(fleet.tick).items():
+        eta = rep["breach_eta_ticks"]
+        line += (f"  slo[{ref}<{rep['threshold']:g}]: "
+                 f"eta={'-' if eta is None else eta}")
+    print(line)
+
+
+def _obs_finish(args, fleet, reqs) -> None:
+    """Assert the trace invariants, write the artifacts, print the
+    exposition — the obs-smoke CI job's contract."""
+    import os
+
+    from repro import obs as obs_lib
+
+    events = fleet.tracer.events
+    obs_lib.assert_valid(events)
+    # every replay the request surfaced is annotated in its span chain
+    for r in reqs:
+        names = fleet.tracer.names_for(r.uid)
+        assert names.count("replay") == r.replays, \
+            (r.uid, r.replays, names)
+        if r.hedged:
+            assert "hedge" in names, (r.uid, names)
+    terminal = sum(1 for e in events
+                   if e["ph"] == "i" and e["name"] in obs_lib.trace.TERMINAL)
+    print(f"[obs] trace OK: {len(events)} events, {terminal} terminal "
+          f"spans, invariants hold")
+    os.makedirs(args.obs_dir, exist_ok=True)
+    jsonl = os.path.join(args.obs_dir, "fleet_trace.jsonl")
+    chrome = os.path.join(args.obs_dir, "fleet_trace.chrome.json")
+    fleet.tracer.export_jsonl(jsonl)
+    fleet.tracer.export_chrome(chrome)
+    with open(os.path.join(args.obs_dir, "fleet_metrics.prom"), "w") as f:
+        f.write(fleet.metrics.render_prometheus())
+    print(f"[obs] artifacts: {jsonl}, {chrome}")
+    print(fleet.metrics.render_prometheus(), end="")
 
 
 def serve_tokens(args) -> None:
@@ -177,6 +251,17 @@ def main(argv=None):
                          "below the run length or nothing fires")
     ap.add_argument("--assert-parity", action="store_true",
                     help="require bitwise parity with the fault-free run")
+    # observability knobs
+    ap.add_argument("--obs", action="store_true",
+                    help="metrics + trace spans + SLO board: live summary,"
+                         " invariant assertions, JSONL/Chrome artifacts")
+    ap.add_argument("--obs-dir", default="obs_artifacts",
+                    help="where --obs writes trace/exposition artifacts")
+    ap.add_argument("--obs-every", type=int, default=64,
+                    help="live summary cadence in virtual ticks")
+    ap.add_argument("--slo-p99", type=float, default=200.0,
+                    help="latency p99 SLO threshold (ticks) the SLO "
+                         "monitor forecasts breaches against")
     # token-serving knobs
     ap.add_argument("--arch", default="internlm2-1.8b")
     ap.add_argument("--smoke", action="store_true")

@@ -48,6 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import select as select_lib
+from repro import obs as obs_lib
 from repro.core import basis as basis_lib
 from repro.core import fit as fit_lib
 from repro.core import lspia as lspia_lib
@@ -501,9 +502,21 @@ class _Bucket:
 class FitServeEngine:
     """Host-side continuous batching around compiled moment-ingest steps."""
 
-    def __init__(self, cfg: FitServeConfig | None = None):
+    def __init__(self, cfg: FitServeConfig | None = None,
+                 obs: "obs_lib.Observability | None" = None):
         from repro.api import spec as spec_lib
         self.cfg = cfg = cfg or FitServeConfig()
+        # observability is injected and OFF by default: the null bundle
+        # makes every record below an empty method call (the perf gate's
+        # ``obs_overhead`` row holds enabled-vs-null to <= 5%)
+        self.obs = obs or obs_lib.NULL_OBS
+        self._m_submitted = self.obs.metrics.counter("submitted")
+        self._m_completed = self.obs.metrics.counter("completed")
+        self._g_queue = self.obs.metrics.gauge("queue_depth")
+        self._h_points = self.obs.metrics.histogram("points_per_fit")
+        self._h_latency = self.obs.metrics.histogram("fit_latency_steps")
+        self._step_no = 0
+        self._admit_step: dict[int, int] = {}
         if tuple(sorted(cfg.buckets)) != tuple(cfg.buckets):
             raise ValueError(f"buckets must ascend: {cfg.buckets}")
         specs = self.pool_specs = derive_pool_specs(cfg)
@@ -552,6 +565,9 @@ class FitServeEngine:
         x, y = validate_series(x, y, rspec)
         req = FitRequest(self._uid, x, y, spec=rspec, auto=auto)
         self._uid += 1
+        self._m_submitted.inc()
+        self.obs.tracer.instant(req.uid, "submit", self._step_no,
+                                n=req.n, auto=bool(auto))
         for b in self.buckets[:-1]:
             if req.n <= b.width:
                 b.queue.append(req)
@@ -614,6 +630,12 @@ class FitServeEngine:
                 b.slot_req[slot] = b.queue.pop(0)
                 b.slot_pos[slot] = 0
                 b.reset[slot] = True
+                if self.obs.enabled:
+                    uid = b.slot_req[slot].uid
+                    self._admit_step[uid] = self._step_no
+                    self.obs.tracer.instant(uid, "admit", self._step_no,
+                                            bucket=b.width, slot=slot)
+                    self.obs.tracer.begin(uid, "serve", self._step_no)
         active = [s for s, r in enumerate(b.slot_req) if r is not None]
         if not active:
             return
@@ -669,23 +691,38 @@ class FitServeEngine:
                    else self._solve(b.state, spec))
             solved = tuple(np.asarray(a) for a in out)
             for s in slots:
-                fill_fixed_result(b.slot_req[s], spec, solved, s)
+                req = b.slot_req[s]
+                fill_fixed_result(req, spec, solved, s)
                 b.slot_req[s] = None
-                self.fits_done += 1
+                self._done(req)
         for spec, slots in auto_groups.items():
             outs = auto_outputs(*self._sweep(b.state, spec))
             crit = spec.degree.criterion or self.cfg.select_criterion
             for s in slots:
-                fill_auto_result(b.slot_req[s], spec, outs, crit, s)
+                req = b.slot_req[s]
+                fill_auto_result(req, spec, outs, crit, s)
                 b.slot_req[s] = None
-                self.fits_done += 1
+                self._done(req)
+
+    def _done(self, req: FitRequest) -> None:
+        self.fits_done += 1
+        self._m_completed.inc()
+        self._h_points.observe(req.n)
+        if self.obs.enabled:
+            t0 = self._admit_step.pop(req.uid, self._step_no)
+            self._h_latency.observe(self._step_no - t0)
+            self.obs.tracer.end(req.uid, "serve", self._step_no)
+            self.obs.tracer.instant(req.uid, "respond", self._step_no,
+                                    steps=self._step_no - t0)
 
     def step(self) -> None:
         """One engine iteration: admit + one compiled fused ingest+solve
         per non-empty bucket (+ one compiled solve per distinct ready
         NON-default spec)."""
+        self._step_no += 1
         for b in self.buckets:
             self._step_bucket(b)
+        self._g_queue.set(sum(len(b.queue) for b in self.buckets))
 
     def run(self, max_steps: int = 1_000_000) -> None:
         """Drive until every queued request is served (or max_steps)."""

@@ -52,9 +52,21 @@ import numpy as np
 
 from repro.api.spec import ServicePolicy
 from repro.core import streaming
+from repro.obs import metrics as obs_metrics
+from repro.obs import slo as slo_lib
+from repro.obs import trace as trace_lib
 from repro.runtime import chaos as chaos_lib
 from repro.runtime.fault_tolerance import FailureDetector, RestartPolicy
 from repro.serve import fit_engine as fe
+
+# every fleet counter, predefined so ``stats`` always exposes the full
+# vocabulary (a zero count is an assertable fact, not a missing key)
+_STAT_KEYS = (
+    "completed", "shed", "degraded", "failed", "replays", "hedges",
+    "hedge_wins", "hedge_losses", "resends", "retries_timeout",
+    "retries_invalid", "poisoned", "worker_deaths", "revivals",
+    "async_harvests", "async_updates",
+)
 
 # ----------------------------------------------------------------- protocol
 
@@ -312,6 +324,9 @@ class FleetConfig:
     parallel_pump: bool = False     # pump worker mailboxes in threads
     seed: int = 0                   # restart-jitter determinism
     chaos: chaos_lib.ChaosSchedule | None = None
+    trace: bool = False             # record per-request trace spans
+    slo_p99: float | None = None    # watch latency_ticks:p99 vs this SLO
+    slo_every: int = 8              # SLO observation cadence in ticks
 
     def __post_init__(self):
         if self.n_workers < 1:
@@ -328,6 +343,9 @@ class FleetConfig:
         if dw is not None and not 0 <= dw <= self.max_queue:
             raise ValueError(f"degrade_watermark={dw} must lie in "
                              f"[0, max_queue={self.max_queue}]")
+        if self.slo_every < 1:
+            raise ValueError(f"slo_every must be >= 1, got "
+                             f"{self.slo_every}")
 
 
 @dataclasses.dataclass
@@ -349,6 +367,7 @@ class _Flight:
     journal_seq: int = 0
     journal_snap: dict | None = None
     assignments: list[_Assignment] = dataclasses.field(default_factory=list)
+    hedge_workers: set[int] = dataclasses.field(default_factory=set)
 
     @property
     def n_chunks(self) -> int:
@@ -404,12 +423,18 @@ class FitFleet:
         if cfg.parallel_pump:
             from concurrent.futures import ThreadPoolExecutor
             self._pool = ThreadPoolExecutor(max_workers=cfg.n_workers)
-        self.stats = {"completed": 0, "shed": 0, "degraded": 0,
-                      "failed": 0, "replays": 0, "hedges": 0,
-                      "resends": 0, "poisoned": 0, "worker_deaths": 0,
-                      "revivals": 0, "async_harvests": 0,
-                      "async_updates": 0}
-        self.latencies: list[int] = []
+        # observability: the registry is always live (counter increments
+        # cost what the old dict increments cost, and the stats contract
+        # below reads from it); the tracer is opt-in via cfg.trace
+        self.metrics = obs_metrics.MetricsRegistry()
+        self._counters = {k: self.metrics.counter(k) for k in _STAT_KEYS}
+        self._lat = self.metrics.histogram("latency_ticks")
+        self._queue_depth = self.metrics.gauge("queue_depth")
+        self.tracer = (trace_lib.Tracer() if cfg.trace
+                       else trace_lib.NULL_TRACER)
+        self.slo = slo_lib.SLOBoard(self.metrics)
+        if cfg.slo_p99 is not None:
+            self.slo.watch("latency_ticks:p99", cfg.slo_p99)
         # sharded async-LSPIA parents: child uid -> (handle, shard index),
         # and the per-parent harvested shard snapshots
         self._async_children: dict[int, tuple[AsyncFitHandle, int]] = {}
@@ -436,19 +461,28 @@ class FitFleet:
                            service=service or self.cfg.service)
         self._uid += 1
         backlog = len(self._queue)
+        self.tracer.instant(req.uid, "submit", self.tick, n=int(req.n),
+                            auto=bool(req.auto))
         if backlog >= self.cfg.max_queue:
             req.shed = True
             req.failed = "shed"
             req.done = True
-            self.stats["shed"] += 1
+            self._counters["shed"].inc()
+            self.tracer.instant(req.uid, "shed", self.tick,
+                                backlog=backlog)
             return req
         if backlog >= self.degrade_watermark and rspec.is_search:
             req.spec = dataclasses.replace(rspec,
                                            degree=rspec.max_degree)
             req.auto = False
             req.degraded = "degree_search->fixed"
-            self.stats["degraded"] += 1
+            self._counters["degraded"].inc()
+            self.tracer.instant(req.uid, "degrade", self.tick,
+                                what="degree_search->fixed",
+                                backlog=backlog)
         self._queue.append(req)
+        self.tracer.begin(req.uid, "queue", self.tick)
+        self._queue_depth.set(len(self._queue))
         return req
 
     def submit_async_lspia(self, x, y, *, spec=None,
@@ -527,6 +561,12 @@ class FitFleet:
     def pending(self) -> int:
         return len(self._queue) + len(self._flights)
 
+    @property
+    def stats(self) -> dict:
+        """Event counts, read live from the metrics registry (the old
+        ad-hoc dict's contract, now one view over first-class metrics)."""
+        return {k: c.value for k, c in self._counters.items()}
+
     # ------------------------------------------------------------- helpers
     def _split_chunks(self, req: FleetRequest):
         w = self.cfg.chunk_width
@@ -586,6 +626,9 @@ class FitFleet:
                 return
             if not asg.solving:
                 asg.solving = True
+                self.tracer.end(req.uid, "ingest", self.tick)
+                self.tracer.begin(req.uid, "solve", self.tick,
+                                  worker=asg.worker)
                 self._send(asg.worker, Solve(req.uid, req.spec))
             return
         seq = asg.acked + 1
@@ -620,7 +663,9 @@ class FitFleet:
         if w is None:
             return      # retried next tick (flight has no assignment)
         fl.req.replays += 1
-        self.stats["replays"] += 1
+        self._counters["replays"].inc()
+        self.tracer.instant(fl.req.uid, "replay", self.tick, worker=w,
+                            from_seq=fl.journal_seq)
         self._assign(fl, w)
 
     def _fail(self, fl: _Flight, reason: str) -> None:
@@ -630,7 +675,11 @@ class FitFleet:
         fl.req.done = True
         fl.req.done_tick = self.tick
         self._flights.pop(fl.req.uid)
-        self.stats["failed"] += 1
+        self._counters["failed"].inc()
+        self.tracer.end(fl.req.uid, "ingest", self.tick)
+        self.tracer.end(fl.req.uid, "solve", self.tick)
+        self.tracer.instant(fl.req.uid, "failed", self.tick,
+                            reason=reason)
         entry = self._async_children.pop(fl.req.uid, None)
         if entry is not None:
             # a lost shard makes the parent's exact answer unreachable:
@@ -656,7 +705,9 @@ class FitFleet:
                 # mail targets state it no longer holds
                 self._down.discard(w)
                 self.detector.hb.beat(w, float(tick))
-                self.stats["revivals"] += 1
+                self._counters["revivals"].inc()
+                self.tracer.instant(trace_lib.FLEET_UID, "revival", tick,
+                                    worker=w)
         for w, wk in enumerate(self.workers):
             wk.begin_tick(tick)
             if wk.alive:
@@ -668,13 +719,19 @@ class FitFleet:
                 break
             req = self._queue.pop(0)
             req.admit_tick = tick
+            self.tracer.end(req.uid, "queue", tick)
+            self.tracer.instant(req.uid, "admit", tick, worker=w)
+            self.tracer.begin(req.uid, "ingest", tick, worker=w)
             fl = _Flight(req=req, chunks=self._split_chunks(req))
             self._flights[req.uid] = fl
             self._assign(fl, w)
+        self._queue_depth.set(len(self._queue))
         self._pump(tick)
         self._handle_replies(tick)
         self._verdicts(tick)
         self._timeouts(tick)
+        if self.slo.monitors and tick % cfg.slo_every == 0:
+            self.slo.update(tick)
 
     def _pump_one(self, w: int, tick: int) -> list[tuple[int, Any]]:
         wk = self.workers[w]
@@ -771,7 +828,11 @@ class FitFleet:
         if shard not in snaps:
             snaps[shard] = fl.journal_snap
             handle.harvested += 1
-            self.stats["async_harvests"] += 1
+            self._counters["async_harvests"].inc()
+        self.tracer.end(req.uid, "ingest", tick)
+        self.tracer.instant(req.uid, "respond", tick,
+                            kind="async_harvest", shard=shard,
+                            parent=handle.uid)
         self._async_resolve(handle, tick)
 
     def _async_resolve(self, handle: AsyncFitHandle, tick: int) -> None:
@@ -801,14 +862,14 @@ class FitFleet:
         handle.condition = float(cond)
         handle.converged = not bool(fb)
         handle.updates += 1
-        self.stats["async_updates"] += 1
+        self._counters["async_updates"].inc()
         if handle.harvested < handle.n_shards:
             handle.updates_while_partial += 1
         else:
             handle.done = True
             handle.done_tick = tick
             self.fits_done += 1
-            self.stats["completed"] += 1
+            self._counters["completed"].inc()
             self._async_snaps.pop(handle.uid, None)
 
     def _valid(self, req: FleetRequest) -> bool:
@@ -826,12 +887,20 @@ class FitFleet:
             fe.fill_auto_result(req, req.spec, rep.auto, crit)
         if self._valid(req):
             req.done_tick = tick
-            self.latencies.append(req.latency_ticks)
+            self._lat.observe(req.latency_ticks)
+            if req.hedged:
+                won = ("hedge_wins" if rep.worker in fl.hedge_workers
+                       else "hedge_losses")
+                self._counters[won].inc()
             for asg in list(fl.assignments):
                 self._drop_assignment(fl, asg)
             self._flights.pop(req.uid)
             self.fits_done += 1
-            self.stats["completed"] += 1
+            self._counters["completed"].inc()
+            self.tracer.end(req.uid, "solve", tick, worker=rep.worker)
+            self.tracer.instant(req.uid, "respond", tick,
+                                worker=rep.worker,
+                                latency_ticks=int(req.latency_ticks))
             return
         # poisoned / corrupt reply: quarantine the producer, scrub the
         # request, and re-solve from the journal on someone else
@@ -840,7 +909,12 @@ class FitFleet:
         req.sse = req.r = req.condition = None
         req.degree = None
         req.scores = req.condition_ladder = None
-        self.stats["poisoned"] += 1
+        self._counters["poisoned"].inc()
+        self._counters["retries_invalid"].inc()
+        self.tracer.instant(req.uid, "poisoned", tick, worker=rep.worker)
+        self.tracer.instant(req.uid, "retry", tick,
+                            cause="invalid-result", worker=rep.worker)
+        self.tracer.end(req.uid, "solve", tick)
         req.retries += 1
         self._quarantined_until[rep.worker] = (
             tick + self.cfg.quarantine_ticks)
@@ -875,7 +949,9 @@ class FitFleet:
             if w in self._down:
                 continue
             self._down.add(w)
-            self.stats["worker_deaths"] += 1
+            self._counters["worker_deaths"].inc()
+            self.tracer.instant(trace_lib.FLEET_UID, "worker_death", tick,
+                                worker=w)
             backoff = self._restart[w].next_backoff()
             if backoff is not None:
                 self._revive_at[w] = tick + int(np.ceil(backoff))
@@ -895,7 +971,11 @@ class FitFleet:
                         | {fl.assignments[0].worker})
                     if w is not None:
                         fl.req.hedged = True
-                        self.stats["hedges"] += 1
+                        fl.hedge_workers.add(w)
+                        self._counters["hedges"].inc()
+                        self.tracer.instant(
+                            fl.req.uid, "hedge", tick, worker=w,
+                            straggler=fl.assignments[0].worker)
                         self._assign(fl, w)
 
     def _timeouts(self, tick: int) -> None:
@@ -918,7 +998,11 @@ class FitFleet:
                     # the outstanding message — idempotent on the worker
                     asg.resends += 1
                     req.retries += 1
-                    self.stats["resends"] += 1
+                    self._counters["resends"].inc()
+                    self._counters["retries_timeout"].inc()
+                    self.tracer.instant(req.uid, "retry", tick,
+                                        cause="timeout",
+                                        worker=asg.worker)
                     asg.last_progress = tick
                     if asg.solving:
                         asg.solving = False
@@ -945,8 +1029,16 @@ class FitFleet:
 
     # ------------------------------------------------------------- metrics
     def latency_quantiles(self) -> dict:
-        if not self.latencies:
-            return {"p50": 0.0, "p99": 0.0}
-        lat = np.asarray(self.latencies)
-        return {"p50": float(np.percentile(lat, 50)),
-                "p99": float(np.percentile(lat, 99))}
+        """p50/p99 of completed-request latency, read from the streaming
+        histogram sketch: available mid-run, identical at every call site
+        (``launch.serve`` prints exactly this), no sample retention."""
+        return {"p50": self._lat.quantile(0.5),
+                "p99": self._lat.quantile(0.99)}
+
+    def snapshot(self) -> dict:
+        """One deterministic observability snapshot: tick, every metric
+        (counters / gauges+hwm / histogram sketches), and the SLO board's
+        per-monitor report (fitted level, slope, breach ETA)."""
+        return {"tick": self.tick,
+                "metrics": self.metrics.snapshot(),
+                "slo": self.slo.report(self.tick)}
