@@ -1,0 +1,18 @@
+"""reprolint: repo-aware static analysis + runtime sanitizers.
+
+Run ``python -m repro.analysis`` (or see README §Static analysis)."""
+from repro.analysis.core import (ALL_CODES, CODE_SUPPRESS, SCHEMA_VERSION,
+                                 Checker, FileContext, Finding, Report,
+                                 Suppression, default_checkers,
+                                 discover_files, fixture_scope_path,
+                                 lint_file, run_lint)
+from repro.analysis.sanitizers import (CompileCounter, NaNOriginError,
+                                       assert_no_recompiles, nan_origin)
+
+__all__ = [
+    "ALL_CODES", "CODE_SUPPRESS", "SCHEMA_VERSION", "Checker",
+    "FileContext", "Finding", "Report", "Suppression", "default_checkers",
+    "discover_files", "fixture_scope_path", "lint_file", "run_lint",
+    "CompileCounter", "NaNOriginError", "assert_no_recompiles",
+    "nan_origin",
+]

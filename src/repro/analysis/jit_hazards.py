@@ -1,0 +1,387 @@
+"""RL-RECOMPILE and RL-TRACERLEAK: the jit compile-cache hazard passes.
+
+The serving stack's headline invariant is *zero recompiles across request
+churn* (warmup compiles a fixed executable set; every later step reuses
+it).  That invariant dies in two ways nothing type-checks:
+
+* **RL-RECOMPILE** — something non-static reaches a compile-cache key: a
+  mutable literal passed to a ``static_argnames`` position (jit retraces
+  per call, or throws ``unhashable``), a mutable default on a dataclass
+  that rides into specs/plans (silently shared state AND an unhashable
+  static arg), an f-string or ``id()``-derived key in a compile-cache dict
+  (cache misses forever / keys unstable across runs), or a
+  ``static_argnames`` entry naming a parameter the function doesn't have
+  (jit fails only at first call).
+* **RL-TRACERLEAK** — Python control flow on traced values inside code
+  reachable from a ``jax.jit`` or ``pallas_call``: ``if``/``while``/
+  ``bool()`` on a ``jnp`` expression raises ``TracerBoolConversionError``
+  at trace time *on the paths a test happens to trace* — the others wait
+  in ambush; host callbacks inside ``lax.scan``/``fori_loop``/
+  ``while_loop`` bodies force a host sync per iteration (the
+  zero-recompile serving loop's silent performance killer).
+
+Reachability is per-module: jit/pallas roots are functions decorated with
+``jax.jit`` (bare or via ``functools.partial``) or passed (possibly
+through ``functools.partial``) into a ``pallas_call``; the call graph is
+then closed over bare-name calls within the module.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Checker, FileContext, Finding, call_name,
+                                 dotted_name, iter_decorators)
+
+MUTABLE_CALLS = {"list", "dict", "set", "bytearray"}
+# jnp helpers that return static Python values — safe in `if` tests
+STATIC_SAFE_JNP = {"dtype", "finfo", "iinfo", "result_type", "issubdtype",
+                   "zeros", "ones"}
+HOST_CALLBACKS = {"print", "jax.debug.print", "jax.debug.callback",
+                  "jax.debug.breakpoint", "io_callback",
+                  "jax.experimental.io_callback", "pure_callback",
+                  "jax.pure_callback", "jax.experimental.host_callback.call"}
+SCAN_FAMILY = {"jax.lax.scan", "lax.scan", "jax.lax.fori_loop",
+               "lax.fori_loop", "jax.lax.while_loop", "lax.while_loop"}
+
+
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and call_name(node) in MUTABLE_CALLS:
+        return True
+    return False
+
+
+def _jit_static_names(fn: ast.FunctionDef | ast.AsyncFunctionDef
+                      ) -> tuple[bool, tuple[str, ...]]:
+    """(is_jitted, static_argnames) from the decorator list."""
+    for dec, name in iter_decorators(fn):
+        base = name.split(".")[-1] if name else ""
+        if name in ("jax.jit", "jit") or base == "jit":
+            return True, ()
+        if isinstance(dec, ast.Call):
+            inner = ""
+            if name.endswith("partial") and dec.args:
+                inner = dotted_name(dec.args[0])
+            if inner in ("jax.jit", "jit") or name in ("jax.jit", "jit"):
+                statics: list[str] = []
+                for kw in dec.keywords:
+                    if kw.arg in ("static_argnames", "static_argnums") \
+                            and isinstance(kw.value, (ast.Tuple, ast.List)):
+                        for elt in kw.value.elts:
+                            if isinstance(elt, ast.Constant) \
+                                    and isinstance(elt.value, str):
+                                statics.append(elt.value)
+                    elif kw.arg == "static_argnames" \
+                            and isinstance(kw.value, ast.Constant) \
+                            and isinstance(kw.value.value, str):
+                        statics.append(kw.value.value)
+                return True, tuple(statics)
+    return False, ()
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+class RecompileChecker(Checker):
+    name = "recompile"
+    codes = ("RL-RECOMPILE",)
+    scope = None
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        self._check_dataclasses(tree, ctx, out)
+        jit_statics = self._check_jit_defs(tree, ctx, out)
+        self._check_static_callsites(tree, ctx, jit_statics, out)
+        self._check_cache_keys(tree, ctx, out)
+        return out
+
+    # -- mutable defaults on (FitSpec-adjacent) dataclasses ---------------
+    def _check_dataclasses(self, tree, ctx, out):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            is_dc = any(n and n.split(".")[-1] == "dataclass"
+                        for _, n in _class_decorators(node))
+            if not is_dc:
+                continue
+            for stmt in node.body:
+                if isinstance(stmt, ast.AnnAssign) and stmt.value is not None:
+                    default = stmt.value
+                    if (isinstance(default, ast.Call)
+                            and call_name(default).split(".")[-1] == "field"):
+                        default = next(
+                            (kw.value for kw in default.keywords
+                             if kw.arg == "default"), None)
+                    if default is not None and _is_mutable_literal(default):
+                        tgt = getattr(stmt.target, "id", "?")
+                        out.append(Finding(
+                            "RL-RECOMPILE", ctx.display_path, stmt.lineno,
+                            f"dataclass field {tgt!r} has a mutable default "
+                            "— shared across instances, and unhashable if "
+                            "the class ever rides a jit static arg; use "
+                            "field(default_factory=...)",
+                            col=stmt.col_offset, symbol=node.name))
+
+    # -- jit decorations --------------------------------------------------
+    def _check_jit_defs(self, tree, ctx, out) -> dict[str, tuple[str, ...]]:
+        statics_by_fn: dict[str, tuple[str, ...]] = {}
+        for node in ast.walk(tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            jitted, statics = _jit_static_names(node)
+            if not jitted:
+                continue
+            params = _param_names(node)
+            statics_by_fn[node.name] = statics
+            for s in statics:
+                if s not in params:
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, node.lineno,
+                        f"static_argnames names {s!r} but "
+                        f"{node.name}() has no such parameter — jit "
+                        "fails only at first call",
+                        col=node.col_offset, symbol=node.name))
+            for p, default in _defaults_of(node):
+                if p in statics and _is_mutable_literal(default):
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, default.lineno,
+                        f"static parameter {p!r} of {node.name}() defaults "
+                        "to a mutable (unhashable) value — every defaulted "
+                        "call throws or retraces",
+                        col=default.col_offset, symbol=node.name))
+        return statics_by_fn
+
+    def _check_static_callsites(self, tree, ctx, statics_by_fn, out):
+        if not statics_by_fn:
+            return
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fn = call_name(node).split(".")[-1]
+            statics = statics_by_fn.get(fn)
+            if not statics:
+                continue
+            for kw in node.keywords:
+                if kw.arg in statics and _is_mutable_literal(kw.value):
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, kw.value.lineno,
+                        f"mutable value passed to static arg "
+                        f"{kw.arg!r} of jitted {fn}() — unhashable at "
+                        "the compile-cache key",
+                        col=kw.value.col_offset,
+                        symbol=ctx.symbol_at(tree, node.lineno)))
+
+    # -- compile-cache key hygiene ----------------------------------------
+    def _check_cache_keys(self, tree, ctx, out):
+        for node in ast.walk(tree):
+            key = None
+            if isinstance(node, ast.Subscript) \
+                    and _is_cache_name(dotted_name(node.value)):
+                key = node.slice
+            elif isinstance(node, ast.Call):
+                nm = call_name(node)
+                if (nm.endswith((".get", ".setdefault", ".pop"))
+                        and _is_cache_name(nm.rsplit(".", 1)[0])
+                        and node.args):
+                    key = node.args[0]
+            if key is None:
+                continue
+            for bad in ast.walk(key):
+                if isinstance(bad, ast.JoinedStr):
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, bad.lineno,
+                        "f-string used as a compile-cache key — embeds "
+                        "reprs that differ across processes/objects; key "
+                        "on a tuple of hashable statics instead",
+                        col=bad.col_offset,
+                        symbol=ctx.symbol_at(tree, bad.lineno)))
+                    break
+                if isinstance(bad, ast.Call) and call_name(bad) == "id":
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, bad.lineno,
+                        "id() used in a compile-cache key — object "
+                        "identity is not stable across runs (or after "
+                        "GC reuse); key on value equality instead",
+                        col=bad.col_offset,
+                        symbol=ctx.symbol_at(tree, bad.lineno)))
+                    break
+                if _is_mutable_literal(bad):
+                    out.append(Finding(
+                        "RL-RECOMPILE", ctx.display_path, bad.lineno,
+                        "mutable (unhashable) compile-cache key",
+                        col=bad.col_offset,
+                        symbol=ctx.symbol_at(tree, bad.lineno)))
+                    break
+
+
+def _is_cache_name(name: str) -> bool:
+    return "cache" in name.rsplit(".", 1)[-1].lower()
+
+
+def _class_decorators(node: ast.ClassDef):
+    for dec in node.decorator_list:
+        yield dec, (call_name(dec) if isinstance(dec, ast.Call)
+                    else dotted_name(dec))
+
+
+def _defaults_of(fn):
+    a = fn.args
+    pos = a.posonlyargs + a.args
+    for p, d in zip(pos[len(pos) - len(a.defaults):], a.defaults):
+        yield p.arg, d
+    for p, d in zip(a.kwonlyargs, a.kw_defaults):
+        if d is not None:
+            yield p.arg, d
+
+
+# ------------------------------------------------------------ tracer leaks
+class TracerLeakChecker(Checker):
+    name = "tracerleak"
+    codes = ("RL-TRACERLEAK",)
+    scope = None
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        roots = self._trace_roots(tree)
+        funcs = {n.name: n for n in ast.walk(tree)
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+        reachable = self._close_reachable(roots, funcs)
+        for name in sorted(reachable):
+            fn = funcs[name]
+            self._check_control_flow(fn, ctx, out)
+        # host callbacks inside lax control-flow bodies: anywhere in the
+        # module (a scan body is traced whether or not its parent is)
+        self._check_scan_callbacks(tree, ctx, funcs, out)
+        return out
+
+    def _trace_roots(self, tree) -> set[str]:
+        roots: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                jitted, _ = _jit_static_names(node)
+                if jitted:
+                    roots.add(node.name)
+            if isinstance(node, ast.Call):
+                nm = call_name(node)
+                if nm.split(".")[-1] == "pallas_call":
+                    for arg in node.args[:1]:
+                        roots.update(_referenced_fn_names(arg))
+        return roots
+
+    def _close_reachable(self, roots: set[str], funcs: dict) -> set[str]:
+        seen = {r for r in roots if r in funcs}
+        frontier = list(seen)
+        while frontier:
+            fn = funcs[frontier.pop()]
+            for node in ast.walk(fn):
+                if isinstance(node, ast.Call):
+                    callee = call_name(node)
+                    if callee in funcs and callee not in seen:
+                        seen.add(callee)
+                        frontier.append(callee)
+        return seen
+
+    def _check_control_flow(self, fn, ctx, out):
+        for node in ast.walk(fn):
+            test = None
+            what = ""
+            if isinstance(node, (ast.If, ast.While)):
+                test = node.test
+                what = "if" if isinstance(node, ast.If) else "while"
+            elif isinstance(node, ast.IfExp):
+                test = node.test
+                what = "conditional expression"
+            elif isinstance(node, ast.Assert):
+                test = node.test
+                what = "assert"
+            elif (isinstance(node, ast.Call)
+                    and call_name(node) in ("bool", "float", "int")
+                    and node.args):
+                leak = _find_traced_call(node.args[0])
+                if leak is not None:
+                    out.append(Finding(
+                        "RL-TRACERLEAK", ctx.display_path, node.lineno,
+                        f"{call_name(node)}() on traced expression "
+                        f"{leak!r} inside jit-reachable "
+                        f"{fn.name}() — concretization error at trace "
+                        "time; keep it as an array op",
+                        col=node.col_offset, symbol=fn.name))
+                continue
+            if test is None:
+                continue
+            leak = _find_traced_call(test)
+            if leak is not None:
+                out.append(Finding(
+                    "RL-TRACERLEAK", ctx.display_path, node.lineno,
+                    f"Python {what} on traced expression {leak!r} inside "
+                    f"jit-reachable {fn.name}() — raises "
+                    "TracerBoolConversionError on the traced path; use "
+                    "jnp.where / jax.lax.cond / jax.lax.while_loop",
+                    col=node.col_offset, symbol=fn.name))
+
+    def _check_scan_callbacks(self, tree, ctx, funcs, out):
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if call_name(node) not in SCAN_FAMILY:
+                continue
+            bodies: list[ast.AST] = []
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    bodies.append(arg)
+                else:
+                    for name in _referenced_fn_names(arg):
+                        if name in funcs:
+                            bodies.append(funcs[name])
+            for body in bodies:
+                for inner in ast.walk(body):
+                    if isinstance(inner, ast.Call) \
+                            and _is_host_callback(call_name(inner)):
+                        out.append(Finding(
+                            "RL-TRACERLEAK", ctx.display_path,
+                            inner.lineno,
+                            f"host callback {call_name(inner)}() inside a "
+                            f"{call_name(node)} body — forces a host "
+                            "round-trip per iteration",
+                            col=inner.col_offset,
+                            symbol=ctx.symbol_at(tree, inner.lineno)))
+
+
+def _is_host_callback(name: str) -> bool:
+    return (name in HOST_CALLBACKS
+            or name.split(".")[-1] in ("io_callback", "pure_callback"))
+
+
+def _referenced_fn_names(node: ast.AST) -> set[str]:
+    """Function names referenced by ``node`` — a bare Name, or inside a
+    ``functools.partial(...)`` first argument."""
+    names: set[str] = set()
+    if isinstance(node, ast.Name):
+        names.add(node.id)
+    elif isinstance(node, ast.Call) \
+            and call_name(node).split(".")[-1] == "partial" and node.args:
+        names.update(_referenced_fn_names(node.args[0]))
+    return names
+
+
+def _find_traced_call(test: ast.AST) -> str | None:
+    """The first ``jnp.*`` (array-returning) call inside ``test``."""
+    for node in ast.walk(test):
+        if not isinstance(node, ast.Call):
+            continue
+        nm = call_name(node)
+        head, _, tail = nm.partition(".")
+        if head in ("jnp", "jaxnp") or nm.startswith("jax.numpy."):
+            fn = nm.rsplit(".", 1)[-1]
+            if fn not in STATIC_SAFE_JNP:
+                return nm
+    return None

@@ -1,0 +1,224 @@
+"""RL-DTYPE and RL-VMEM: numeric-width and kernel-resource hygiene.
+
+* **RL-DTYPE** — the moment/Gram paths are an f32 contract: the paper's
+  matricization keeps every accumulator in f32 (compensated where it
+  matters) and the serving stack round-trips snapshots through numpy.
+  One ``np.float64`` touch silently upcasts the whole chain (2× memory
+  and DMA bytes on TPU, and a result that differs bitwise from the f32
+  kernels).  Flagged: explicit ``float64``/``double`` dtypes,
+  ``astype(float)`` / ``dtype=float`` (Python ``float`` IS f64), and
+  dtype-less ``jnp.array(<float literal>)`` materializations whose width
+  silently follows the x64 flag rather than the pipeline (weak-type
+  hazard).  Deliberate f64 (e.g. a journal merge accumulating in f64
+  before casting back) must carry a reasoned suppression.
+* **RL-VMEM** — the packed moments kernel's multi-buffered VMEM ring is
+  budgeted by the model in ``kernels/tune.py`` (``ring_vmem_bytes`` vs
+  ``VMEM_BUDGET``).  The checker recomputes that model statically: a
+  literal ``block_n`` that cannot fit the budget under ANY packing factor
+  is dead-on-arrival config.  It also checks DMA discipline: a kernel
+  that issues ``make_async_copy`` must both ``.start()`` and ``.wait()``
+  (an unwaited copy races the matmul on the destination buffer), every
+  copy must carry its semaphore slot, and a DMA-issuing kernel must
+  allocate ``SemaphoreType.DMA`` scoped storage.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (Checker, FileContext, Finding, call_name,
+                                 dotted_name)
+
+MOMENT_PATHS = ("core/moments.py", "core/streaming.py",
+                "kernels/moments.py", "engine/plan.py", "serve/fleet.py",
+                "core/distributed.py")
+
+F64_ATTRS = {"np.float64", "numpy.float64", "jnp.float64", "np.double",
+             "numpy.double", "jnp.double"}
+
+
+class DtypeChecker(Checker):
+    name = "dtype"
+    codes = ("RL-DTYPE",)
+    scope = MOMENT_PATHS
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute):
+                nm = dotted_name(node)
+                if nm in F64_ATTRS:
+                    out.append(Finding(
+                        "RL-DTYPE", ctx.display_path, node.lineno,
+                        f"explicit {nm} on a moment/Gram path — the "
+                        "accumulation contract is f32 (compensated where "
+                        "needed); an f64 touch silently upcasts the chain",
+                        col=node.col_offset,
+                        symbol=ctx.symbol_at(tree, node.lineno)))
+            elif isinstance(node, ast.Call):
+                self._check_call(node, tree, ctx, out)
+            elif isinstance(node, ast.keyword):
+                if (node.arg == "dtype" and isinstance(node.value, ast.Name)
+                        and node.value.id == "float"):
+                    out.append(Finding(
+                        "RL-DTYPE", ctx.display_path, node.value.lineno,
+                        "dtype=float — Python float IS float64; name the "
+                        "width (np.float32) on a moment path",
+                        col=node.value.col_offset,
+                        symbol=ctx.symbol_at(tree, node.value.lineno)))
+        return out
+
+    def _check_call(self, node: ast.Call, tree, ctx, out):
+        nm = call_name(node)
+        if nm.rsplit(".", 1)[-1] == "astype" and node.args:
+            a = node.args[0]
+            if isinstance(a, ast.Name) and a.id == "float":
+                out.append(Finding(
+                    "RL-DTYPE", ctx.display_path, node.lineno,
+                    "astype(float) upcasts to float64 — name the width "
+                    "(np.float32) on a moment path",
+                    col=node.col_offset,
+                    symbol=ctx.symbol_at(tree, node.lineno)))
+            return
+        if nm in ("jnp.array", "jnp.asarray", "jax.numpy.array",
+                  "jax.numpy.asarray"):
+            if (len(node.args) == 1
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, float)
+                    and not any(kw.arg == "dtype" for kw in node.keywords)):
+                out.append(Finding(
+                    "RL-DTYPE", ctx.display_path, node.lineno,
+                    f"{nm}({node.args[0].value}) without dtype — a weak-"
+                    "typed float literal whose width follows the x64 "
+                    "flag, not the pipeline; pass dtype explicitly",
+                    col=node.col_offset,
+                    symbol=ctx.symbol_at(tree, node.lineno)))
+
+
+# --------------------------------------------------------------------- VMEM
+# Static mirror of kernels/tune.py's model.  K_PAD/VMEM_BUDGET are read
+# from the scanned file when it defines them, so tune.py lints against its
+# own constants; the fallbacks below match the committed model.
+K_PAD_DEFAULT = 128
+VMEM_BUDGET_DEFAULT = 8 << 20
+NBUF_DEFAULT = 2
+
+
+def min_ring_vmem_bytes(block_n: int, *, k_pad: int = K_PAD_DEFAULT,
+                        nbuf: int = NBUF_DEFAULT) -> int:
+    """The packed kernel's VMEM need at tile width ``block_n`` under the
+    MOST favourable packing (P = 1, plain f32 accumulator) — a lower
+    bound over every (degree, compensated) configuration.  A ``block_n``
+    whose lower bound exceeds the budget fits no configuration at all."""
+    ring = 3 * nbuf * 1 * block_n * 4
+    wmat = 2 * k_pad * block_n * 4
+    acc = k_pad * k_pad * 4
+    return ring + wmat + acc
+
+
+class VmemChecker(Checker):
+    name = "vmem"
+    codes = ("RL-VMEM",)
+    scope = ("kernels/moments.py", "kernels/tune.py")
+
+    def check(self, tree: ast.Module, ctx: FileContext) -> list[Finding]:
+        out: list[Finding] = []
+        k_pad, budget = self._model_constants(tree)
+        self._check_block_literals(tree, ctx, k_pad, budget, out)
+        self._check_dma_pairing(tree, ctx, out)
+        return out
+
+    @staticmethod
+    def _model_constants(tree) -> tuple[int, int]:
+        k_pad, budget = K_PAD_DEFAULT, VMEM_BUDGET_DEFAULT
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                name = node.targets[0].id
+                try:
+                    val = ast.literal_eval(node.value)
+                except ValueError:
+                    continue
+                if name == "K_PAD" and isinstance(val, int):
+                    k_pad = val
+                elif name == "VMEM_BUDGET" and isinstance(val, int):
+                    budget = val
+        return k_pad, budget
+
+    def _check_block_literals(self, tree, ctx, k_pad, budget, out):
+        sites: list[tuple[int, int, int, str]] = []   # (line, col, bn, how)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Assign):
+                for tgt in node.targets:
+                    if (isinstance(tgt, ast.Name)
+                            and "block_n" in tgt.id.lower()
+                            and isinstance(node.value, ast.Constant)
+                            and isinstance(node.value.value, int)):
+                        sites.append((node.lineno, node.col_offset,
+                                      node.value.value, tgt.id))
+            elif isinstance(node, ast.keyword):
+                if (node.arg == "block_n"
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, int)):
+                    sites.append((node.value.lineno, node.value.col_offset,
+                                  node.value.value, "block_n="))
+        for line, col, bn, how in sites:
+            need = min_ring_vmem_bytes(bn, k_pad=k_pad)
+            if need > budget:
+                out.append(Finding(
+                    "RL-VMEM", ctx.display_path, line,
+                    f"{how} {bn}: the multi-buffered ring needs >= "
+                    f"{need} bytes even at packing factor 1, over the "
+                    f"{budget}-byte VMEM budget for every configuration",
+                    col=col, symbol=ctx.symbol_at(tree, line)))
+
+    def _check_dma_pairing(self, tree, ctx, out):
+        for fn in [n for n in ast.walk(tree)
+                   if isinstance(n, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))]:
+            copies = [n for n in ast.walk(fn)
+                      if isinstance(n, ast.Call)
+                      and call_name(n).rsplit(".", 1)[-1]
+                      == "make_async_copy"]
+            if not copies:
+                continue
+            # only inspect outermost DMA-issuing functions: nested helpers
+            # (the `dmas`/`body` closures) share the parent's pairing
+            if any(fn is not p and fn in set(ast.walk(p))
+                   for p in ast.walk(tree)
+                   if isinstance(p, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef))
+                   and any(isinstance(c, ast.Call)
+                           and call_name(c).rsplit(".", 1)[-1]
+                           == "make_async_copy"
+                           for c in ast.walk(p))):
+                continue
+            for cp in copies:
+                if len(cp.args) < 3 and not any(
+                        kw.arg == "sem" for kw in cp.keywords):
+                    out.append(Finding(
+                        "RL-VMEM", ctx.display_path, cp.lineno,
+                        "make_async_copy without a semaphore argument — "
+                        "the copy cannot be waited on",
+                        col=cp.col_offset, symbol=fn.name))
+            methods = {call_name(n).rsplit(".", 1)[-1]
+                       for n in ast.walk(fn)
+                       if isinstance(n, ast.Call)}
+            for need in ("start", "wait"):
+                if need not in methods:
+                    out.append(Finding(
+                        "RL-VMEM", ctx.display_path, fn.lineno,
+                        f"{fn.name}() issues make_async_copy but never "
+                        f"calls .{need}() — an un{need}ed DMA "
+                        + ("never moves the bytes" if need == "start"
+                           else "races the consumer on the destination "
+                                "buffer"),
+                        col=fn.col_offset, symbol=fn.name))
+            has_sem_alloc = any(
+                "SemaphoreType" in dotted_name(n)
+                for n in ast.walk(fn) if isinstance(n, ast.Attribute))
+            if not has_sem_alloc:
+                out.append(Finding(
+                    "RL-VMEM", ctx.display_path, fn.lineno,
+                    f"{fn.name}() issues DMAs but allocates no "
+                    "SemaphoreType.DMA scoped storage",
+                    col=fn.col_offset, symbol=fn.name))

@@ -1,0 +1,174 @@
+"""Runtime sanitizer companions to the static checkers.
+
+Two dynamic tripwires for the hazards the AST passes can only
+approximate:
+
+* :class:`CompileCounter` / :func:`assert_no_recompiles` — the dynamic
+  twin of RL-RECOMPILE.  The serve engines commit to a *zero recompiles
+  after warmup* invariant; this generalizes it to any code region: count
+  XLA executable compiles inside a ``with`` block and fail if any happen.
+  Counting rides ``jax_log_compiles`` — JAX already logs one "Compiling
+  <name> ..." record per executable build, so attaching a logging handler
+  observes exactly the events the compile cache misses on, with no
+  version-fragile internal patching.  The pytest wiring
+  (``tests/conftest.py``, env flag ``REPRO_RECOMPILE_TRIPWIRE=1``) arms
+  an autouse fixture that fails any test marked
+  ``@pytest.mark.no_recompile`` that still triggers a compile.
+* :func:`nan_origin` — the dynamic twin of RL-DTYPE's "where did the
+  NaN come from" question.  Opt-in context manager that wraps the solver
+  entry points (``repro.core.solve.solve`` /
+  ``solve_with_fallback``) with eager finiteness checks on inputs and
+  outputs, raising :class:`NaNOriginError` naming the entry point and
+  argument the first moment a non-finite value crosses a solver
+  boundary — instead of the NaN surfacing three layers later in a
+  fit result.
+"""
+from __future__ import annotations
+
+import contextlib
+import logging
+import re
+
+import numpy as np
+
+_FINISHED_RE = re.compile(r"Finished XLA compilation of (.+?) in ")
+
+
+class _CompileLogHandler(logging.Handler):
+    def __init__(self, counter: "CompileCounter"):
+        super().__init__(level=logging.DEBUG)
+        self.counter = counter
+
+    def emit(self, record: logging.LogRecord) -> None:
+        try:
+            msg = record.getMessage()
+        except Exception:
+            return
+        m = _FINISHED_RE.search(msg)
+        if m:
+            self.counter._record(m.group(1))
+
+
+class CompileCounter:
+    """Counts XLA executable compiles while active (re-entrant safe:
+    one logging handler per instance)."""
+
+    def __init__(self):
+        self.names: list[str] = []
+        self._handler = _CompileLogHandler(self)
+        self._saved_flag = None
+
+    @property
+    def count(self) -> int:
+        return len(self.names)
+
+    def _record(self, name: str) -> None:
+        self.names.append(name)
+
+    def __enter__(self) -> "CompileCounter":
+        import jax
+        self._saved_flag = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        log = logging.getLogger("jax")
+        self._saved_propagate = log.propagate
+        log.propagate = False         # count quietly: no stderr spray
+        log.addHandler(self._handler)
+        return self
+
+    def __exit__(self, *exc) -> None:
+        import jax
+        log = logging.getLogger("jax")
+        log.removeHandler(self._handler)
+        log.propagate = self._saved_propagate
+        if self._saved_flag is not None:
+            jax.config.update("jax_log_compiles", self._saved_flag)
+        return None
+
+
+@contextlib.contextmanager
+def assert_no_recompiles(what: str = "region"):
+    """Fail if any XLA executable is compiled inside the block — the
+    serve warmup invariant, portable to any code region."""
+    with CompileCounter() as counter:
+        yield counter
+    if counter.count:
+        raise AssertionError(
+            f"{what}: expected zero executable compiles, got "
+            f"{counter.count}: {counter.names}")
+
+
+# ------------------------------------------------------------- NaN origin
+class NaNOriginError(FloatingPointError):
+    """A non-finite value crossed a solver entry point; ``where`` names
+    the boundary, ``argument`` what carried it."""
+
+    def __init__(self, where: str, argument: str, detail: str = ""):
+        self.where = where
+        self.argument = argument
+        super().__init__(
+            f"non-finite value at {where} ({argument})"
+            + (f": {detail}" if detail else ""))
+
+
+def _check_finite(where: str, argument: str, value) -> None:
+    arr = np.asarray(value)
+    if arr.dtype.kind not in "fc":
+        return
+    if not bool(np.all(np.isfinite(arr))):
+        bad = int(arr.size - np.count_nonzero(np.isfinite(arr)))
+        raise NaNOriginError(where, argument,
+                             f"{bad}/{arr.size} non-finite entries")
+
+
+def _wrap_entry(module, name: str, arg_names: tuple[str, ...]):
+    orig = getattr(module, name)
+
+    def wrapped(*args, **kwargs):
+        where = f"{module.__name__}.{name}"
+        for label, val in list(zip(arg_names, args)) + list(kwargs.items()):
+            if isinstance(label, str) and not isinstance(val, (str, type)):
+                try:
+                    _check_finite(where + " input", label, val)
+                except (TypeError, ValueError):
+                    pass      # non-array argument (spec, method string)
+        out = orig(*args, **kwargs)
+        try:
+            if isinstance(out, tuple):
+                for i, o in enumerate(out):
+                    _check_finite(where + " output", f"[{i}]", o)
+            else:
+                _check_finite(where + " output", "result", out)
+        except (TypeError, ValueError):
+            pass
+        return out
+
+    wrapped.__wrapped__ = orig
+    wrapped.__name__ = name
+    return orig, wrapped
+
+
+@contextlib.contextmanager
+def nan_origin():
+    """Opt-in NaN-origin mode: while active, the solver entry points
+    (``repro.core.solve.solve`` / ``solve_with_fallback``) eagerly check
+    argument and output finiteness and raise :class:`NaNOriginError`
+    naming the boundary — NaNs are caught where they enter the solve, not
+    three layers later in a fit result.
+
+    Note: ``solve_with_fallback``'s *outputs* are exempt from the output
+    check only in that a deliberate fallback still returns finite
+    coefficients; its inputs are checked like any other boundary.
+    """
+    from repro.core import solve as solve_mod
+    entries = (("solve", ("a", "b", "method")),
+               ("solve_with_fallback", ("a", "b")))
+    saved = []
+    try:
+        for name, argnames in entries:
+            orig, wrapped = _wrap_entry(solve_mod, name, argnames)
+            saved.append((name, orig))
+            setattr(solve_mod, name, wrapped)
+        yield
+    finally:
+        for name, orig in saved:
+            setattr(solve_mod, name, orig)

@@ -636,6 +636,7 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
     mu = mu_sync / (1.0 + 0.5 * staleness)
 
     bvec = np.asarray(lspia_lib.vt_apply(xt, w * y, degree, basis=basis),
+                      # reprolint: disable=RL-DTYPE — f64 LSPIA iterate
                       np.float64)
     gref = max(float(np.linalg.norm(bvec)), tiny)
     tol = max(float(opts.tol), 25.0 * float(jnp.finfo(x.dtype).eps))
@@ -654,7 +655,7 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
                                straggler_threshold=straggler_threshold)
 
     m1 = degree + 1
-    c = np.zeros(m1, np.float64)
+    c = np.zeros(m1, np.float64)  # reprolint: disable=RL-DTYPE — f64 iterate
     c_prev = c.copy()
     version = 0
     latest: list[np.ndarray | None] = [None] * n_shards
@@ -735,6 +736,7 @@ def async_lspia_fit(x, y, spec, *, n_shards: int = 4,
             if version - rep.version > staleness:
                 ctr["stale_rejected"].inc()     # outside the bounded-
                 continue                        # delay window: recompute
+            # reprolint: disable=RL-DTYPE — deltas join the f64 iterate
             latest[i] = np.asarray(rep.delta, np.float64)
             latest_version[i] = rep.version
             fresh = True

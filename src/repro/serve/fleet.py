@@ -71,6 +71,19 @@ _STAT_KEYS = (
 # ----------------------------------------------------------------- protocol
 
 
+class ProtocolError(RuntimeError):
+    """A message whose ``kind`` no dispatcher branch claims.  The mailbox
+    vocabulary is closed-world — ``repro.analysis``'s RL-PROTOCOL checker
+    verifies every constructed kind has a handler and every dispatcher
+    raises this instead of silently dropping (a dropped *reply* is
+    unrecoverable: no timeout fires on it)."""
+
+    def __init__(self, where: str, kind):
+        self.where = where
+        self.kind = kind
+        super().__init__(f"{where}: unknown message kind {kind!r}")
+
+
 @dataclasses.dataclass
 class Ingest:
     """Chunk ``seq`` (1-based) of request ``key``; ``w`` masks padding."""
@@ -292,7 +305,7 @@ class FleetWorker:
             self.applied.pop(key, None)
             self.snaps.pop(key, None)
             return []
-        raise ValueError(f"unknown message kind {msg.kind!r}")
+        raise ProtocolError(f"worker {self.worker_id}", msg.kind)
 
 
 # --------------------------------------------------------------- dispatcher
@@ -781,6 +794,8 @@ class FitFleet:
                 self._on_ack(fl, rep, tick)
             elif rep.kind == "result":
                 self._on_result(fl, rep, tick)
+            else:
+                raise ProtocolError("dispatcher", rep.kind)
 
     def _on_ack(self, fl: _Flight, ack: Ack, tick: int) -> None:
         asg = next((a for a in fl.assignments if a.worker == ack.worker),
@@ -843,6 +858,7 @@ class FitFleet:
         if not snaps:
             return
         parts = list(snaps.values())
+        # reprolint: disable=RL-DTYPE — shard merge sums in f64, then casts
         merged = {k: sum(np.asarray(p[k], np.float64) for p in parts)
                   .astype(parts[0][k].dtype)
                   for k in ("gram", "vty", "yty", "count", "weight_sum")}

@@ -6,12 +6,19 @@
 * Installs ``tests/_hypothesis_compat.py`` as the ``hypothesis`` module when
   the real package is unavailable (hermetic/offline environments), so the
   seven property-test modules collect and run on fixed example sets.
+* Arms the recompile-counter tripwire (``repro.analysis.sanitizers``) when
+  ``REPRO_RECOMPILE_TRIPWIRE=1``: any test marked ``no_recompile`` fails if
+  it triggers an XLA executable compile — the serve warmup invariant,
+  generalized to any test.  CI's ``lint-static`` job runs one pytest leg
+  with the flag set.
 """
 from __future__ import annotations
 
 import importlib.util
 import os
 import sys
+
+import pytest
 
 _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 _SRC = os.path.join(_ROOT, "src")
@@ -30,3 +37,25 @@ except ImportError:
     # `from hypothesis import strategies as st` resolves via attribute, but
     # register the submodule path too for plain `import hypothesis.strategies`.
     sys.modules["hypothesis.strategies"] = _mod.strategies
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "no_recompile: with REPRO_RECOMPILE_TRIPWIRE=1, fail this test if "
+        "it triggers any XLA executable compile")
+
+
+@pytest.fixture(autouse=True)
+def _recompile_tripwire(request):
+    if (os.environ.get("REPRO_RECOMPILE_TRIPWIRE") != "1"
+            or request.node.get_closest_marker("no_recompile") is None):
+        yield
+        return
+    from repro.analysis.sanitizers import CompileCounter
+    with CompileCounter() as counter:
+        yield
+    if counter.count:
+        pytest.fail(
+            f"no_recompile test compiled {counter.count} executable(s): "
+            f"{counter.names}")

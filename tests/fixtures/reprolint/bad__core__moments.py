@@ -1,0 +1,20 @@
+"""Known-bad corpus for RL-DTYPE (opts into the core/moments.py scope
+via its name): silent f32->f64 promotion on the moment path."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def gram_accumulate(gram, update):
+    return gram + np.asarray(update, np.float64)    # explicit f64
+
+
+def normalize(vty):
+    return vty.astype(float)                        # Python float IS f64
+
+
+def init_weight():
+    return jnp.asarray(0.5)                         # weak-typed literal
+
+
+def scale(count):
+    return np.zeros(8, dtype=float)                 # dtype=float

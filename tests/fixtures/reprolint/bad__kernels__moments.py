@@ -1,0 +1,28 @@
+"""Known-bad corpus for RL-VMEM (opts into the kernels/moments.py scope
+via its name): a tile width no configuration can fit, and a DMA that is
+started but never waited on."""
+import jax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+K_PAD = 128
+DEFAULT_BLOCK_N = 16384          # ring needs >17 MB even at packing 1
+
+
+def leaky_db_kernel(x_hbm, g_ref, *, block_n, n_blocks, nbuf):
+    def body(xs, sem):
+        def dmas(slot, i):
+            sl = pl.ds(i * block_n, block_n)
+            return (pltpu.make_async_copy(x_hbm.at[sl], xs.at[slot],
+                                          sem.at[slot]),)
+
+        for d in dmas(0, 0):
+            d.start()            # started, never waited: races the MXU
+
+        def step(i, _):
+            return 0
+
+        jax.lax.fori_loop(0, n_blocks, step, 0)
+
+    pl.run_scoped(body, xs=pltpu.VMEM((nbuf, 1, block_n), x_hbm.dtype),
+                  sem=pltpu.SemaphoreType.DMA((nbuf,)))

@@ -1,0 +1,27 @@
+"""Known-bad corpus for RL-DETERMINISM (opts into the runtime/chaos.py
+scope via its name): wall clock, unseeded RNG, set-iteration order."""
+import time
+
+import numpy as np
+
+
+def jitter_backoff(attempt):
+    rng = np.random.default_rng()        # unseeded: OS entropy
+    return rng.uniform() * attempt
+
+
+def now_tick():
+    return time.time()                   # wall clock in the tick domain
+
+
+def drain(pending):
+    for item in set(pending):            # hash-order iteration
+        handle(item)
+
+
+def handle(item):
+    return item
+
+
+def shuffle_faults(kinds):
+    return np.random.permutation(kinds)  # global RNG stream

@@ -1,0 +1,35 @@
+"""Known-bad corpus for RL-RECOMPILE: every compile-cache hazard class."""
+import dataclasses
+import functools
+
+import jax
+
+_CACHE = {}
+
+
+@dataclasses.dataclass
+class SpecLike:
+    name: str = "fit"
+    knobs: dict = {}            # mutable dataclass default
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def solve(state, spec=[]):      # mutable default on a static parameter
+    return state
+
+
+@functools.partial(jax.jit, static_argnames=("degree",))
+def sweep(state):               # static_argnames names a missing parameter
+    return state
+
+
+def lookup(spec):
+    return _CACHE[f"{spec}"]    # f-string compile-cache key
+
+
+def lookup_by_identity(spec):
+    return _CACHE.get((id(spec), "x"))   # id() compile-cache key
+
+
+def call_it(state):
+    return solve(state, spec=["a"])      # mutable value at a static position

@@ -1,0 +1,12 @@
+"""Known-bad corpus for RL-SUPPRESS: the suppression policy itself."""
+import numpy as np
+
+
+def sneaky():
+    # reprolint: disable=RL-DTYPE
+    return np.float64(1.0)       # reasonless disable does NOT suppress
+
+
+def bogus():
+    # reprolint: disable=RL-BOGUS — naming a code the suite doesn't define
+    return 1.0

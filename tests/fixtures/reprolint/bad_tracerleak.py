@@ -1,0 +1,23 @@
+"""Known-bad corpus for RL-TRACERLEAK: concretization + host callbacks."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fit_step(state, x):
+    if jnp.any(jnp.isnan(x)):            # Python if on a traced value
+        return state
+    return helper(state, x)
+
+
+def helper(state, x):
+    while jnp.sum(x) > 0:                # Python while, jit-reachable
+        x = x - 1.0
+    return state
+
+
+def scan_me(xs):
+    def body(carry, x):
+        print("step", x)                 # host callback inside a scan body
+        return carry + x, x
+    return jax.lax.scan(body, 0.0, xs)

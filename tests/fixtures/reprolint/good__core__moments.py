@@ -1,0 +1,19 @@
+"""Known-good corpus for RL-DTYPE: every width named, f32 throughout."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def gram_accumulate(gram, update):
+    return gram + np.asarray(update, np.float32)
+
+
+def normalize(vty):
+    return vty.astype(np.float32)
+
+
+def init_weight():
+    return jnp.asarray(0.5, dtype=jnp.float32)
+
+
+def scale(count):
+    return np.zeros(8, dtype=np.float32)

@@ -1,0 +1,40 @@
+"""Known-good corpus for RL-VMEM: the committed double-buffered ring —
+feasible tile width, start/wait paired, semaphores scoped."""
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+K_PAD = 128
+DEFAULT_BLOCK_N = 4096
+
+
+def ring_db_kernel(x_hbm, g_ref, *, block_n, n_blocks, nbuf):
+    def body(xs, sem):
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+        def dmas(slot, i):
+            sl = pl.ds(i * block_n, block_n)
+            return (pltpu.make_async_copy(x_hbm.at[sl], xs.at[slot],
+                                          sem.at[slot]),)
+
+        for d in dmas(0, 0):
+            d.start()
+
+        def step(i, _):
+            slot = jax.lax.rem(i, nbuf)
+            nxt = jax.lax.rem(i + 1, nbuf)
+
+            @pl.when(i + 1 < n_blocks)
+            def _prefetch():
+                for d in dmas(nxt, i + 1):
+                    d.start()
+
+            for d in dmas(slot, i):
+                d.wait()
+            return 0
+
+        jax.lax.fori_loop(0, n_blocks, step, 0)
+
+    pl.run_scoped(body, xs=pltpu.VMEM((nbuf, 1, block_n), x_hbm.dtype),
+                  sem=pltpu.SemaphoreType.DMA((nbuf,)))

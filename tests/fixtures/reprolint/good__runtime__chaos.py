@@ -1,0 +1,20 @@
+"""Known-good corpus for RL-DETERMINISM: seeded, tick-driven, sorted."""
+import numpy as np
+
+
+def jitter_backoff(attempt, seed):
+    rng = np.random.default_rng(seed)    # explicit seed threads through
+    return rng.uniform() * attempt
+
+
+def now_tick(tick):
+    return tick                          # time is the injected tick
+
+
+def drain(pending):
+    for item in sorted(pending):         # deterministic order
+        handle(item)
+
+
+def handle(item):
+    return item

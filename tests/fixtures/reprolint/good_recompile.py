@@ -1,0 +1,28 @@
+"""Known-good corpus for RL-RECOMPILE: the hashable-statics discipline."""
+import dataclasses
+import functools
+
+import jax
+
+_CACHE = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecLike:
+    name: str = "fit"
+    knobs: tuple = ()
+    tags: tuple = dataclasses.field(default=())
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def solve(state, spec=None):
+    return state
+
+
+def lookup(spec):
+    key = (spec.name, spec.knobs)        # tuple of hashable statics
+    return _CACHE[key]
+
+
+def call_it(state, spec):
+    return solve(state, spec=spec)

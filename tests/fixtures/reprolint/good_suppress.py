@@ -1,0 +1,6 @@
+"""Known-good corpus for RL-SUPPRESS: a well-formed reasoned disable."""
+
+
+def fine():
+    # reprolint: disable=RL-DTYPE — demo: reasoned disables are welcome
+    return 1.0

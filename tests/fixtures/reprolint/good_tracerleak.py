@@ -1,0 +1,20 @@
+"""Known-good corpus for RL-TRACERLEAK: traced control flow stays traced."""
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def fit_step(state, x):
+    ok = jnp.logical_not(jnp.any(jnp.isnan(x)))
+    return jax.lax.cond(ok, lambda s: helper(s, x), lambda s: s, state)
+
+
+def helper(state, x):
+    total = jnp.sum(x)
+    return state + jnp.where(total > 0, total, 0.0)
+
+
+def scan_me(xs):
+    def body(carry, x):
+        return carry + x, x
+    return jax.lax.scan(body, 0.0, xs)

@@ -1,0 +1,5 @@
+"""Companion terminal vocabulary for the protocol fixtures — the same
+shape as ``repro.obs.trace``, resolved by the RL-PROTOCOL checker's
+sibling-file fallback."""
+
+TERMINAL = ("respond", "failed")

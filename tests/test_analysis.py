@@ -1,0 +1,247 @@
+"""reprolint: fixture corpus, suppression semantics, JSON schema,
+repo-cleanliness meta-test, and the runtime sanitizers.
+
+The corpus contract (ISSUE 10): every checker code detects >= 1 finding
+on its known-bad fixture, with zero false positives on the known-good
+twins — and the committed repo itself lints clean.
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import (ALL_CODES, CODE_SUPPRESS, CompileCounter,
+                            Finding, NaNOriginError, Report,
+                            assert_no_recompiles, lint_file, nan_origin,
+                            run_lint)
+
+REPO = Path(__file__).resolve().parent.parent
+FIXDIR = REPO / "tests" / "fixtures" / "reprolint"
+
+# (code, bad fixture, good fixture) — one pinned pair per checker code
+CORPUS = [
+    ("RL-RECOMPILE", "bad_recompile.py", "good_recompile.py"),
+    ("RL-TRACERLEAK", "bad_tracerleak.py", "good_tracerleak.py"),
+    ("RL-DETERMINISM", "bad__runtime__chaos.py", "good__runtime__chaos.py"),
+    ("RL-PROTOCOL", "bad__serve__fleet.py", "good__serve__fleet.py"),
+    ("RL-DTYPE", "bad__core__moments.py", "good__core__moments.py"),
+    ("RL-VMEM", "bad__kernels__moments.py", "good__kernels__moments.py"),
+    (CODE_SUPPRESS, "bad_suppress.py", "good_suppress.py"),
+]
+
+
+def live(findings):
+    return [f for f in findings if not f.suppressed]
+
+
+# ------------------------------------------------------------------ corpus
+@pytest.mark.parametrize("code,bad,good", CORPUS,
+                         ids=[c for c, _, _ in CORPUS])
+def test_bad_fixture_detected_and_pure(code, bad, good):
+    findings = live(lint_file(FIXDIR / bad))
+    codes = {f.code for f in findings}
+    assert code in codes, f"{bad} produced {codes}, wanted {code}"
+    # the corpus is single-voiced: a bad fixture trips ONLY its own code
+    assert codes == {code}, f"{bad} leaked extra codes: {codes - {code}}"
+
+
+@pytest.mark.parametrize("code,bad,good", CORPUS,
+                         ids=[c for c, _, _ in CORPUS])
+def test_good_fixture_is_finding_free(code, bad, good):
+    findings = live(lint_file(FIXDIR / good))
+    assert findings == [], [f.render() for f in findings]
+
+
+def test_every_code_has_a_fixture_pair():
+    assert {c for c, _, _ in CORPUS} == set(ALL_CODES)
+
+
+def test_bad_recompile_covers_fstring_cache_key():
+    msgs = [f.message for f in live(lint_file(FIXDIR / "bad_recompile.py"))]
+    assert any("f-string" in m for m in msgs)
+
+
+# ------------------------------------------------------------ suppressions
+def test_inline_suppression_with_reason(tmp_path):
+    p = tmp_path / "bad__core__moments.py"
+    p.write_text("import numpy as np\n"
+                 "x = np.float64(1.0)"
+                 "  # reprolint: disable=RL-DTYPE — deliberate demo\n")
+    findings = lint_file(p)
+    assert len(findings) == 1
+    assert findings[0].suppressed
+    assert findings[0].suppression_reason == "deliberate demo"
+
+
+def test_standalone_suppression_covers_next_line(tmp_path):
+    p = tmp_path / "bad__core__moments.py"
+    p.write_text("import numpy as np\n"
+                 "# reprolint: disable=RL-DTYPE — demo reason\n"
+                 "x = np.float64(1.0)\n")
+    findings = lint_file(p)
+    assert [f.suppressed for f in findings] == [True]
+
+
+def test_reasonless_disable_does_not_suppress(tmp_path):
+    p = tmp_path / "bad__core__moments.py"
+    p.write_text("import numpy as np\n"
+                 "x = np.float64(1.0)  # reprolint: disable=RL-DTYPE\n")
+    findings = lint_file(p)
+    codes = {f.code: f.suppressed for f in findings}
+    assert codes == {CODE_SUPPRESS: False, "RL-DTYPE": False}
+
+
+def test_suppression_only_covers_named_code(tmp_path):
+    p = tmp_path / "bad__core__moments.py"
+    p.write_text("import numpy as np\n"
+                 "x = np.float64(1.0)"
+                 "  # reprolint: disable=RL-VMEM — wrong code named\n")
+    findings = lint_file(p)
+    assert [(f.code, f.suppressed) for f in findings] \
+        == [("RL-DTYPE", False)]
+
+
+# ------------------------------------------------------------- JSON schema
+def test_report_json_round_trip():
+    report = run_lint([FIXDIR / "bad_recompile.py",
+                       FIXDIR / "bad_suppress.py"])
+    d = json.loads(report.to_json())
+    assert d["version"] == 1
+    assert d["files_scanned"] == 2
+    assert d["counts"]["RL-RECOMPILE"] >= 1
+    back = Report.from_dict(d)
+    assert back.findings == report.findings
+    assert back.files_scanned == report.files_scanned
+
+
+def test_report_rejects_unknown_version():
+    with pytest.raises(ValueError, match="version"):
+        Report.from_dict({"version": 99, "findings": [],
+                          "files_scanned": 0})
+
+
+def test_finding_dict_round_trip():
+    f = Finding("RL-DTYPE", "a.py", 3, "msg", col=7, symbol="fn",
+                suppressed=True, suppression_reason="why")
+    assert Finding.from_dict(f.to_dict()) == f
+
+
+# ----------------------------------------------------------- CLI contract
+def test_cli_json_exit_codes(tmp_path):
+    env_root = REPO
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format=json",
+         str(FIXDIR / "good_recompile.py")],
+        capture_output=True, text=True, cwd=env_root,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+    assert out.returncode == 0, out.stderr
+    assert json.loads(out.stdout)["counts"] == {}
+
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format=json",
+         str(FIXDIR / "bad_recompile.py")],
+        capture_output=True, text=True, cwd=env_root,
+        env={"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin",
+             "HOME": "/tmp"})
+    assert out.returncode == 1, out.stderr
+    report = json.loads(out.stdout)
+    assert report["counts_unsuppressed"]["RL-RECOMPILE"] >= 1
+
+
+def test_cli_select_filters_codes():
+    findings = live(lint_file(FIXDIR / "bad__core__moments.py",
+                              select=("RL-VMEM",)))
+    assert findings == []
+
+
+# ---------------------------------------------------------- the meta-test
+def test_committed_repo_is_finding_free():
+    """The acceptance criterion: zero unsuppressed findings on the repo."""
+    roots = [REPO / r for r in ("src", "benchmarks", "examples")
+             if (REPO / r).exists()]
+    report = run_lint(roots)
+    assert report.files_scanned > 50
+    bad = [f.render() for f in report.unsuppressed]
+    assert bad == [], "\n".join(bad)
+    # the deliberate f64 exceptions stay visible in the audit trail
+    assert report.counts(suppressed=True).get("RL-DTYPE", 0) >= 4
+
+
+# -------------------------------------------------------------- sanitizers
+def test_compile_counter_sees_fresh_compile():
+    @jax.jit
+    def f(x):
+        return x * 3.0
+
+    with CompileCounter() as c:
+        f(jnp.ones(5, jnp.float32)).block_until_ready()
+    assert c.count >= 1
+
+    with CompileCounter() as c2:
+        f(jnp.ones(5, jnp.float32)).block_until_ready()
+    assert c2.count == 0
+
+
+def test_assert_no_recompiles_trips_on_new_shape():
+    @jax.jit
+    def g(x):
+        return x + 1.0
+
+    g(jnp.ones(3, jnp.float32)).block_until_ready()
+    with assert_no_recompiles("warm"):
+        g(jnp.ones(3, jnp.float32)).block_until_ready()
+    with pytest.raises(AssertionError, match="zero executable compiles"):
+        with assert_no_recompiles("cold"):
+            g(jnp.ones(6, jnp.float32)).block_until_ready()
+
+
+@pytest.fixture(scope="session")
+def warmed_square():
+    """Warmed jit fn + a same-shape/dtype input, both built at session
+    scope so the function-scoped tripwire only sees the warm call."""
+    f = jax.jit(lambda x: x * x)
+    f(jnp.ones(4, jnp.float32)).block_until_ready()
+    x = jnp.asarray(np.full(4, 2.0, dtype=np.float32))
+    return f, x
+
+
+@pytest.mark.no_recompile
+def test_warm_jit_path_is_compile_free(warmed_square):
+    """Exercised with REPRO_RECOMPILE_TRIPWIRE=1 in CI's lint-static leg:
+    the autouse tripwire fails this test if anything compiles."""
+    f, x = warmed_square
+    out = f(x)
+    assert float(np.asarray(out)[0]) == 4.0
+
+
+def test_nan_origin_names_the_boundary():
+    from repro.core import solve as solve_mod
+    eye = jnp.eye(3, dtype=jnp.float32)
+    b = jnp.ones(3, jnp.float32)
+    with nan_origin():
+        out = solve_mod.solve(eye, b)            # clean inputs pass through
+        assert np.allclose(np.asarray(out), 1.0)
+        poisoned = np.eye(3, dtype=np.float32)
+        poisoned[1, 1] = np.nan
+        with pytest.raises(NaNOriginError) as exc:
+            solve_mod.solve(jnp.asarray(poisoned), b)
+    assert "solve" in str(exc.value) and "non-finite" in str(exc.value)
+    # restored on exit: the wrapper is gone
+    assert not hasattr(solve_mod.solve, "__wrapped__")
+
+
+def test_nan_origin_checks_solve_with_fallback_inputs():
+    from repro.core import solve as solve_mod
+    bad = np.full((3, 3), np.nan, dtype=np.float32)
+    with nan_origin():
+        with pytest.raises(NaNOriginError):
+            solve_mod.solve_with_fallback(jnp.asarray(bad),
+                                          jnp.ones(3, jnp.float32))
